@@ -1,0 +1,85 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every module exposes ``run(quick=False) -> dict`` with a ``claims`` map
+of named boolean validations against the paper's qualitative results.
+``quick`` shortens simulated durations ~10x for CI; the full settings
+match the paper (2 h phases, 100 MB/s budget, 128 MB memtables, 100 M
+unique 1 KB records scaled down 10x to keep DES event counts tractable —
+ratios, not absolutes, carry the claims).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.constraints import (GlobalConstraint, L0Constraint,
+                                    LocalConstraint)
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 SizeTieredPolicy, TieringPolicy)
+from repro.core.scheduler import (FairScheduler, GreedyScheduler,
+                                  SingleThreadedScheduler)
+from repro.core.sim import LSMSimulator, SimConfig
+from repro.core.twophase import run_two_phase
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+# paper scale / 10 (events, not ratios): 10M uniques, 12.8MB memtable,
+# 10 MB/s budget => identical level counts and utilization structure.
+UNIQUE = 10e6
+MEMTABLE = 13_107.2
+BANDWIDTH = 10_240.0
+
+
+def sim_config() -> SimConfig:
+    return SimConfig(bandwidth=BANDWIDTH, memtable_entries=MEMTABLE,
+                     unique_keys=UNIQUE, mem_write_rate=250_000.0)
+
+
+def durations(quick: bool) -> tuple[float, float, float]:
+    """(testing_s, running_s, warmup_s).  Even "quick" must cover several
+    largest-level merges (~1000 s each at this scale) or leveling's
+    dynamics are invisible; the DES makes either cheap."""
+    return (3600.0, 3600.0, 600.0) if quick else (7200.0, 7200.0, 1200.0)
+
+
+def make_system(policy_name: str, scheduler_name: str,
+                constraint: str = "global", size_ratio: int | None = None,
+                **pol_kw):
+    def factory():
+        T = size_ratio
+        if policy_name == "tiering":
+            pol = TieringPolicy(T or 3, MEMTABLE, UNIQUE)
+        elif policy_name == "leveling":
+            pol = LevelingPolicy(T or 10, MEMTABLE, UNIQUE, **pol_kw)
+        elif policy_name == "size_tiered":
+            pol = SizeTieredPolicy(T or 1.2, MEMTABLE, UNIQUE, **pol_kw)
+        elif policy_name == "partitioned":
+            pol = PartitionedLevelingPolicy(T or 10, MEMTABLE, UNIQUE,
+                                            **pol_kw)
+        else:
+            raise ValueError(policy_name)
+        sched = {"single": SingleThreadedScheduler, "fair": FairScheduler,
+                 "greedy": GreedyScheduler}[scheduler_name]()
+        if constraint == "global":
+            cons = GlobalConstraint(2 * pol.expected_components())
+        elif constraint == "local":
+            per = 2 if policy_name == "leveling" else 2 * (T or 3)
+            cons = LocalConstraint(per)
+        elif constraint == "fifty":          # paper's size-tiered setup
+            cons = GlobalConstraint(50)
+        elif constraint == "l0":             # LevelDB stop threshold
+            cons = L0Constraint(12)
+        else:
+            cons = None
+        return LSMSimulator(pol, sched, cons, sim_config())
+    return factory
+
+
+def save(name: str, result: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(result, indent=1,
+                                                 default=float))
+
+
+def pct_ok(result) -> dict:
+    return {str(k): float(v) for k, v in result.items()}

@@ -1,0 +1,35 @@
+"""Figure 1: writing as fast as possible periodically stalls.
+
+Closed-system client over a partitioned (RocksDB-like) LSM-tree: the
+instantaneous write throughput collapses periodically once merges lag.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sim import ClosedClient
+
+from .common import MEMTABLE, durations, make_system, save
+
+
+def run(quick: bool = False) -> dict:
+    test_s, _, warm = durations(quick)
+    sim = make_system("partitioned", "single", constraint="l0",
+                      size_ratio=10, file_entries=MEMTABLE / 2,
+                      l1_capacity=MEMTABLE * 10)()
+    tr = sim.run(ClosedClient(n_threads=8), test_s)
+    t, w = tr.windowed_throughput(30.0)
+    w_late = w[t > warm]
+    cv = float(np.std(w_late) / max(np.mean(w_late), 1e-9))
+    result = {
+        "throughput_mean": float(np.mean(w_late)),
+        "throughput_cv": cv,
+        "n_stalls": len(tr.stalls),
+        "stall_time_s": tr.stall_time(),
+        "claims": {
+            "periodic_stalls_or_high_variance":
+                len(tr.stalls) > 3 or cv > 0.3,
+        },
+    }
+    save("fig01_stalls", result)
+    return result

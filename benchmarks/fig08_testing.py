@@ -1,0 +1,36 @@
+"""Figure 8: testing-phase scheduler choice.  Fair gives a steady
+measured max; single-threaded pauses; greedy over-reports by starving
+large merges (unsustainable)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sim import ClosedClient
+
+from .common import durations, make_system, save
+
+
+def run(quick: bool = False) -> dict:
+    test_s, _, warm = durations(quick)
+    out: dict = {"claims": {}}
+    for policy in ("tiering", "leveling"):
+        row = {}
+        for sched in ("single", "fair", "greedy"):
+            T = 3 if policy == "tiering" else 10
+            sim = make_system(policy, sched, size_ratio=T)()
+            tr = sim.run(ClosedClient(n_threads=1), test_s)
+            t, w = tr.windowed_throughput(30.0)
+            late = w[t > warm]
+            row[sched] = {
+                "throughput": tr.throughput(t_from=warm),
+                "cv": float(np.std(late) / max(np.mean(late), 1e-9)),
+                "stall_time": tr.stall_time(),
+            }
+        out[policy] = row
+        out["claims"][f"{policy}_single_has_pauses"] = \
+            row["single"]["stall_time"] > row["fair"]["stall_time"] or \
+            row["single"]["cv"] > 2 * row["fair"]["cv"]
+        out["claims"][f"{policy}_greedy_overreports_vs_fair"] = \
+            row["greedy"]["throughput"] > 1.02 * row["fair"]["throughput"]
+    save("fig08_testing", out)
+    return out

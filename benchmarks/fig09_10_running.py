@@ -1,0 +1,44 @@
+"""Figures 9-10: running phase at 95% of the fair-measured max.
+
+Tiering: fair and greedy both sustain; single-threaded stalls.
+Leveling: only greedy delivers small write latencies; fair suffers from
+merge-time variance; single-threaded is hopeless.
+"""
+from __future__ import annotations
+
+from repro.core.twophase import run_two_phase
+
+from .common import durations, make_system, save
+
+
+def run(quick: bool = False) -> dict:
+    test_s, run_s, warm = durations(quick)
+    out: dict = {"claims": {}}
+    for policy, T in (("tiering", 3), ("leveling", 10)):
+        row = {}
+        for sched in ("single", "fair", "greedy"):
+            res = run_two_phase(
+                testing_system=make_system(policy, "fair", size_ratio=T),
+                running_system=make_system(policy, sched, size_ratio=T),
+                testing_duration=test_s, running_duration=run_s,
+                warmup=warm)
+            row[sched] = {
+                "arrival_rate": res.arrival_rate,
+                "write_p99_s": res.write_latencies[99],
+                "stall_time_s": res.running.stall_time(),
+                "max_components": res.running.max_components(),
+            }
+        out[policy] = row
+        c = out["claims"]
+        c[f"{policy}_single_stalls"] = \
+            row["single"]["stall_time_s"] > 10 * max(
+                row["greedy"]["stall_time_s"], 1e-3) or \
+            row["single"]["write_p99_s"] > 10 * row["greedy"]["write_p99_s"]
+        c[f"{policy}_greedy_low_latency"] = row["greedy"]["write_p99_s"] < 10
+        if policy == "tiering":
+            c["tiering_fair_also_fine"] = row["fair"]["write_p99_s"] < 10
+        else:
+            c["leveling_fair_worse_than_greedy"] = \
+                row["fair"]["write_p99_s"] > 2 * row["greedy"]["write_p99_s"]
+    save("fig09_10_running", out)
+    return out

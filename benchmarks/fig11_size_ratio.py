@@ -1,0 +1,51 @@
+"""Figure 11: size-ratio sweep (T = 2..10).
+
+Max throughput rises with T under tiering, falls under leveling (with
+the dynamic-level-size fix [31]).  Greedy keeps p99 small everywhere;
+fair's p99 grows with T under leveling.
+"""
+from __future__ import annotations
+
+from repro.core.twophase import run_two_phase
+
+from .common import durations, make_system, save
+
+
+def run(quick: bool = False) -> dict:
+    test_s, run_s, warm = durations(quick)
+    ratios = [2, 4, 10] if quick else [2, 3, 4, 6, 8, 10]
+    out: dict = {"ratios": ratios, "claims": {}}
+    for policy in ("tiering", "leveling"):
+        pol_kw = {"dynamic_level_size": True} if policy == "leveling" else {}
+        tp, p99f, p99g = [], [], []
+        for T in ratios:
+            resf = run_two_phase(
+                testing_system=make_system(policy, "fair", size_ratio=T,
+                                           **pol_kw),
+                testing_duration=test_s, running_duration=run_s,
+                warmup=warm)
+            resg = run_two_phase(
+                testing_system=make_system(policy, "fair", size_ratio=T,
+                                           **pol_kw),
+                running_system=make_system(policy, "greedy", size_ratio=T,
+                                           **pol_kw),
+                testing_duration=test_s, running_duration=run_s,
+                warmup=warm)
+            tp.append(resf.max_throughput)
+            p99f.append(resf.write_latencies[99])
+            p99g.append(resg.write_latencies[99])
+        out[policy] = {"max_throughput": tp, "fair_p99": p99f,
+                       "greedy_p99": p99g}
+    out["claims"]["tiering_throughput_increases_with_T"] = \
+        out["tiering"]["max_throughput"][-1] > \
+        out["tiering"]["max_throughput"][0]
+    out["claims"]["leveling_throughput_decreases_with_T"] = \
+        out["leveling"]["max_throughput"][-1] < \
+        out["leveling"]["max_throughput"][0]
+    out["claims"]["greedy_p99_small_all_ratios"] = \
+        max(out["tiering"]["greedy_p99"] + out["leveling"]["greedy_p99"]) < 10
+    out["claims"]["leveling_fair_p99_grows"] = \
+        out["leveling"]["fair_p99"][-1] > \
+        max(out["leveling"]["greedy_p99"][-1] * 2, 1.0)
+    save("fig11_size_ratio", out)
+    return out

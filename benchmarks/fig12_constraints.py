@@ -1,0 +1,48 @@
+"""Figure 12: global vs local component constraints.
+
+Local (per-level) constraints barely matter for tiering but inflate
+leveling's write latencies — and hurt greedy more than fair (small
+merges blocked by next-level limits)."""
+from __future__ import annotations
+
+from repro.core.twophase import run_two_phase
+
+from .common import durations, make_system, save
+
+
+def run(quick: bool = False) -> dict:
+    test_s, run_s, warm = durations(quick)
+    out: dict = {"claims": {}}
+    for policy, T in (("tiering", 3), ("leveling", 10)):
+        row = {}
+        for sched in ("fair", "greedy"):
+            for cons in ("global", "local"):
+                res = run_two_phase(
+                    testing_system=make_system(policy, "fair", size_ratio=T),
+                    running_system=make_system(policy, sched,
+                                               constraint=cons,
+                                               size_ratio=T),
+                    testing_duration=test_s, running_duration=run_s,
+                    warmup=warm)
+                row[f"{sched}_{cons}"] = {
+                    "write_p99_s": res.write_latencies[99],
+                    "stall_time_s": res.running.stall_time(),
+                }
+        out[policy] = row
+    lv = out["leveling"]
+    out["claims"]["leveling_local_worse_than_global"] = (
+        lv["greedy_local"]["write_p99_s"] >
+        2 * lv["greedy_global"]["write_p99_s"] or
+        lv["fair_local"]["write_p99_s"] >
+        2 * lv["fair_global"]["write_p99_s"])
+    out["claims"]["local_hurts_greedy_more"] = (
+        lv["greedy_local"]["write_p99_s"] / max(
+            lv["greedy_global"]["write_p99_s"], 1e-3) >
+        lv["fair_local"]["write_p99_s"] / max(
+            lv["fair_global"]["write_p99_s"], 1e-3))
+    tv = out["tiering"]
+    out["claims"]["tiering_local_little_impact"] = (
+        tv["greedy_local"]["write_p99_s"] <
+        max(4 * tv["greedy_global"]["write_p99_s"], 10.0))
+    save("fig12_constraints", out)
+    return out

@@ -1,0 +1,43 @@
+"""Figure 24: partition (file) size sweep — throughput is flat, but
+large partitions turn partitioned merges back into full merges and the
+single-threaded scheduler's p99 blows up."""
+from __future__ import annotations
+
+from repro.core.twophase import run_two_phase
+
+from .common import MEMTABLE, UNIQUE, durations, make_system, save
+
+
+def run(quick: bool = False) -> dict:
+    test_s, run_s, warm = durations(quick)
+    # file sizes from memtable/16 up to ~unique/4 (=> full-merge regime)
+    sizes = [MEMTABLE / 16, MEMTABLE, UNIQUE / 16] if quick else \
+        [MEMTABLE / 16, MEMTABLE / 2, MEMTABLE, MEMTABLE * 8, UNIQUE / 16,
+         UNIQUE / 4]
+    tps, p99s = [], []
+    for fe in sizes:
+        res = run_two_phase(
+            testing_system=make_system(
+                "partitioned", "single", size_ratio=10, constraint="l0",
+                file_entries=fe, l1_capacity=MEMTABLE * 20,
+                l0_merge_all=False),
+            running_system=make_system(
+                "partitioned", "single", size_ratio=10, constraint="l0",
+                file_entries=fe, l1_capacity=MEMTABLE * 20,
+                l0_merge_all=True),
+            testing_duration=test_s, running_duration=run_s, warmup=warm)
+        tps.append(res.max_throughput)
+        p99s.append(res.write_latencies[99])
+    out = {
+        "file_entries": [float(s) for s in sizes],
+        "max_throughput": tps,
+        "write_p99_s": p99s,
+        "claims": {
+            "throughput_insensitive_to_partition_size":
+                max(tps) < 1.5 * min(tps),
+            "large_partitions_cause_stalls": p99s[-1] > 5 * max(p99s[0],
+                                                                0.2),
+        },
+    }
+    save("fig24_partition_size", out)
+    return out

@@ -1,0 +1,129 @@
+"""Per-kernel microbenchmarks (interpret mode on CPU — wall numbers are
+for regression tracking, not TPU projections) + oracle agreement."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .common import save
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e3   # ms
+
+
+def run(quick: bool = False) -> dict:
+    out: dict = {"claims": {}}
+    rng = np.random.default_rng(0)
+
+    # merge kernel
+    from repro.kernels.merge.ops import merge_dedup
+    from repro.kernels.merge.ref import merge_dedup_ref
+    n = 4096 if quick else 16384
+    ka = np.sort(rng.choice(1 << 20, n, replace=False)).astype(np.uint32)
+    kb = np.sort(rng.choice(1 << 20, n, replace=False)).astype(np.uint32)
+    va = rng.integers(0, 1 << 30, n).astype(np.int32)
+    vb = rng.integers(0, 1 << 30, n).astype(np.int32)
+    mk, mv, keep, valid = merge_dedup(jnp.asarray(ka), jnp.asarray(va),
+                                      jnp.asarray(kb), jnp.asarray(vb),
+                                      block=256)
+    keep = np.array(keep)
+    keep[valid:] = False
+    rk, rv = merge_dedup_ref(ka, va, kb, vb)
+    agree = np.array_equal(np.asarray(mk)[keep], rk) and \
+        np.array_equal(np.asarray(mv)[keep], rv)
+    out["merge"] = {
+        "n": n,
+        "ms": _time(lambda: merge_dedup(jnp.asarray(ka), jnp.asarray(va),
+                                        jnp.asarray(kb), jnp.asarray(vb),
+                                        block=256)),
+        "oracle_agree": bool(agree),
+    }
+    out["claims"]["merge_matches_oracle"] = bool(agree)
+
+    # bloom kernel
+    from repro.kernels.bloom.ops import bloom_build, bloom_probe, filter_params
+    keys = rng.choice(1 << 24, n, replace=False).astype(np.uint32)
+    n_bits, k_hashes = filter_params(n, 0.01)
+    filt = bloom_build(jnp.asarray(keys), n_bits, k_hashes)
+    present = bloom_probe(filt, jnp.asarray(keys), n_bits, k_hashes)
+    absent_keys = rng.choice(1 << 24, 4 * n, replace=False).astype(np.uint32)
+    absent_keys = np.setdiff1d(absent_keys, keys)[:n]
+    fp = float(np.mean(np.asarray(
+        bloom_probe(filt, jnp.asarray(absent_keys), n_bits, k_hashes))))
+    out["bloom"] = {
+        "n": n, "fp_rate": fp, "n_bits": n_bits, "k_hashes": k_hashes,
+        "probe_ms": _time(lambda: bloom_probe(filt, jnp.asarray(keys),
+                                              n_bits, k_hashes)),
+        "no_false_negatives": bool(np.asarray(present).all()),
+    }
+    out["claims"]["bloom_no_false_negatives"] = bool(
+        np.asarray(present).all())
+    out["claims"]["bloom_fp_near_target"] = fp < 0.03
+
+    # attention kernel
+    from repro.kernels.attention.ops import attention
+    from repro.kernels.attention.ref import attention_ref
+    B, H, Hkv, S, D = 1, 4, 2, 256, 32
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    o = attention(q, k, v, causal=True, bq=64, bk=64)
+    ref = attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(o - ref)))
+    out["attention"] = {"max_err": err,
+                        "ms": _time(lambda: attention(q, k, v, causal=True,
+                                                      bq=64, bk=64))}
+    out["claims"]["attention_matches_oracle"] = err < 2e-3
+
+    # ssd kernel
+    from repro.kernels.ssd.ops import ssd
+    from repro.kernels.ssd.ref import ssd_scan_ref as ssd_ref
+    BH, L, P, N = 2, 128, 16, 8
+    x = jnp.asarray(rng.standard_normal((BH, L, P)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((BH, L, N)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((BH, L, N)), jnp.float32)
+    alog = jnp.asarray(-np.abs(rng.standard_normal((BH, L))) * 0.1,
+                       jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((BH, L))) * 0.1, jnp.float32)
+    y = ssd(x, b, c, alog, dt, chunk=32)
+    yr = ssd_ref(x, b, c, alog, dt)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    out["ssd"] = {"max_err": err,
+                  "ms": _time(lambda: ssd(x, b, c, alog, dt, chunk=32))}
+    out["claims"]["ssd_matches_oracle"] = err < 2e-3
+
+    # paged decode attention (block-table indirection)
+    from repro.kernels.paged_attention.paged_attention import \
+        paged_attention_kernel
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    B, Hkv, G, D, page, n_pages, mp = 4, 2, 4, 32, 16, 64, 8
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, Hkv, page, D)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, Hkv, page, D)),
+                     jnp.float32)
+    tables = jnp.asarray(np.stack([
+        rng.choice(n_pages, mp, replace=False) for _ in range(B)]),
+        jnp.int32)
+    lens = jnp.asarray(rng.integers(1, mp * page, B), jnp.int32)
+    o = paged_attention_kernel(q, kp, vp, tables, lens)
+    ref = paged_attention_ref(q, kp, vp, tables, lens)
+    err = float(jnp.max(jnp.abs(o - ref)))
+    out["paged_attention"] = {
+        "max_err": err,
+        "ms": _time(lambda: paged_attention_kernel(q, kp, vp, tables,
+                                                   lens))}
+    out["claims"]["paged_attention_matches_oracle"] = err < 2e-4
+
+    save("kernels_bench", out)
+    return out

@@ -1,0 +1,79 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all``) and emits the per-(arch x shape
+x mesh) three-term roofline, dominant bottleneck, and useful-flops ratio
+— the source of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import save
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for d in load_cells(mesh):
+        if d.get("status") == "skipped":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "status": "skipped",
+                         "why": d.get("skip_reason", "")[:60]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "status": "error"})
+            continue
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "roofline_frac": r["compute_s"] / bound if bound else 0.0,
+            "useful_flops_ratio": d.get("useful_flops_ratio"),
+            "model_flops": d.get("model_flops_6nd"),
+        })
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['status']} "
+                f"| - | - | - | - | - |")
+    u = r["useful_flops_ratio"]
+    return (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| {r['dominant']} | {r['roofline_frac']:.2f} "
+            f"| {u:.2f} |" if u else "| ? |")
+
+
+def run(quick: bool = False) -> dict:
+    rows = table("single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    out = {
+        "n_cells": len(rows),
+        "n_ok": len(ok),
+        "rows": rows,
+        "claims": {
+            "all_baselines_present": len(rows) >= 30,
+            "no_errors": all(r["status"] != "error" for r in rows),
+        },
+    }
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "dominant | roofline_frac | useful_ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+    save("roofline", out)
+    return out

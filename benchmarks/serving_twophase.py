@@ -1,0 +1,30 @@
+"""Two-phase admission calibration for the batched decode server
+(paged-KV pool with greedy-scheduled compaction), on a real reduced
+model — the serving-side instantiation of the paper's methodology."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serving import BatchServer, ServerConfig, two_phase_admission
+
+from .common import save
+
+
+def run(quick: bool = False) -> dict:
+    cfg = get_smoke("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServerConfig(batch_size=4, max_len=64, n_pages=64,
+                        page_tokens=8, max_new_tokens=8)
+    rep = two_phase_admission(
+        lambda: BatchServer(cfg, params, scfg),
+        testing_steps=60 if quick else 200,
+        running_steps=120 if quick else 400)
+    rep["claims"] = {
+        "running_phase_completes_requests": rep["completed"] > 0,
+        "bounded_latency_at_95": rep["latency_pcts_steps"][99] < 100,
+        "no_admission_collapse": rep["admission_stalls"] < rep["completed"],
+    }
+    save("serving_twophase", rep)
+    return rep

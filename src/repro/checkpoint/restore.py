@@ -1,0 +1,64 @@
+"""Restore + elastic reshard from an LSM checkpoint store.
+
+``restore_state`` reconciles (base ⊕ deltas) newest-wins and rebuilds the
+pytree; ``reshard_restore`` places it onto an arbitrary mesh via the same
+logical-axis tables used for training — restoring onto a *different* mesh
+shape (elastic scaling after losing a pod, or growing into one) is the
+same code path as a same-shape restart.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.distributed.sharding import default_rules, tree_shardings
+from .store import LSMCheckpointStore, unflatten_state
+
+
+def _reassemble(flat: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Undo the store's optional per-param sharding."""
+    out: dict[str, np.ndarray] = {}
+    shapes = {k[:-len("::shape")]: v for k, v in flat.items()
+              if k.endswith("::shape")}
+    groups: dict[str, dict[int, np.ndarray]] = {}
+    for k, v in flat.items():
+        if k.endswith("::shape"):
+            continue
+        path, _, tag = k.rpartition("::")
+        if tag == "full":
+            out[path] = v
+        else:
+            groups.setdefault(path, {})[int(tag)] = v
+    for path, parts in groups.items():
+        arr = np.concatenate([parts[i] for i in sorted(parts)])
+        out[path] = arr.reshape(shapes[path])
+    # undo the store's bf16-as-uint16 encoding
+    final: dict[str, np.ndarray] = {}
+    for path, v in out.items():
+        if path.endswith("@bf16"):
+            import ml_dtypes
+            final[path[:-len("@bf16")]] = v.view(ml_dtypes.bfloat16)
+        else:
+            final[path] = v
+    return final
+
+
+def restore_state(store: LSMCheckpointStore) -> tuple[dict, int]:
+    """Returns (state pytree of host arrays, last committed step)."""
+    flat = _reassemble(store.read_merged())
+    return unflatten_state(flat), store.manifest.last_step
+
+
+def reshard_restore(store: LSMCheckpointStore, mesh, axes_tree,
+                    rules=None) -> tuple[dict, int]:
+    """Restore and place onto ``mesh`` with the framework sharding rules.
+
+    ``axes_tree`` is the logical-axes pytree matching the stored state
+    (e.g. ``train_state_axes(cfg)``); works for any mesh shape, which is
+    the elasticity contract."""
+    state, step = restore_state(store)
+    rules = rules or default_rules(mesh)
+    shardings = tree_shardings(mesh, rules, state, axes_tree)
+    placed = jax.tree.map(jax.device_put, state, shardings)
+    return placed, step

@@ -1,0 +1,55 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full (paper-table) config;
+``get_smoke(arch_id)`` the reduced CPU-testable variant of the same
+family.  ``ARCHS`` lists the assigned ids in assignment order.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, SHAPES, ShapeCell, cell_applicable
+
+ARCHS = [
+    "mamba2-1.3b",
+    "gemma-7b",
+    "nemotron-4-340b",
+    "llama3-405b",
+    "smollm-135m",
+    "whisper-base",
+    "phi3.5-moe-42b-a6.6b",
+    "kimi-k2-1t-a32b",
+    "zamba2-2.7b",
+    "paligemma-3b",
+]
+
+_MODULES = {
+    "mamba2-1.3b": "mamba2_1_3b",
+    "gemma-7b": "gemma_7b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "llama3-405b": "llama3_405b",
+    "smollm-135m": "smollm_135m",
+    "whisper-base": "whisper_base",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "paligemma-3b": "paligemma_3b",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()
+
+
+__all__ = ["ARCHS", "SHAPES", "ShapeCell", "cell_applicable",
+           "get_config", "get_smoke"]

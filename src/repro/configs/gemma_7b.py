@@ -1,0 +1,27 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256 [arXiv:2403.08295].
+
+28L d_model=3072 16H (GQA kv=16 => MHA-like) d_ff=24576 vocab=256000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24_576,
+    vocab=256_000,
+    activation="geglu",
+    tie_embeddings=True,
+    scale_embeddings=True,
+    microbatches=4,
+    attn_causal_skip=True,
+    norm="rmsnorm",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced()

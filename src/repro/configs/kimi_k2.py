@@ -1,0 +1,35 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8
+[arXiv:2501.kimi2, paper-table].
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 (per expert) vocab=163840,
+plus one always-on shared expert (DeepSeek-style).  head_dim=112.
+The largest checkpoint-pressure member of the zoo — the motivating cell
+for the LSM delta-checkpoint store.  Optimizer: adafactor.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7_168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2_048,
+    vocab=163_840,
+    n_experts=384,
+    top_k=8,
+    n_shared_experts=1,
+    activation="swiglu",
+    norm="rmsnorm",
+    optimizer="adafactor",
+    microbatches=4,               # §Perf: mb16->4 + SP + causal-skip
+    accum_dtype="bfloat16",
+    seq_shard_activations=True,
+    attn_causal_skip=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(n_experts=8, top_k=2)

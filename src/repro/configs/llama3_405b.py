@@ -1,0 +1,29 @@
+"""llama3-405b [dense] — GQA, 128k vocab [arXiv:2407.21783].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256; head_dim=128.
+Optimizer: adafactor for HBM fit at 256/512 chips.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16_384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53_248,
+    vocab=128_256,
+    activation="swiglu",
+    rope_theta=500_000.0,
+    norm="rmsnorm",
+    optimizer="adafactor",
+    microbatches=8,
+    scan_group=14,
+    attn_causal_skip=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced()

@@ -1,0 +1,27 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+48L d_model=2048 (attention-free), vocab=50280, ssm_state=128.
+d_inner = 2*2048 = 4096, head_dim 64 -> 64 SSD heads.  Runs the
+``long_500k`` cell (O(1) recurrent decode state).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    vocab=50_280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    microbatches=4,
+    norm="rmsnorm",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(n_layers=2, ssm_state=16)

@@ -1,0 +1,29 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP [arXiv:2402.16819].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000; head_dim=192.
+Optimizer: adafactor (factored second moment) so optimizer state fits
+v5e HBM at 256/512 chips.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18_432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73_728,
+    vocab=256_000,
+    activation="relu2",
+    norm="layernorm",
+    optimizer="adafactor",
+    microbatches=8,
+    scan_group=12,
+    attn_causal_skip=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(activation="relu2", norm="layernorm")

@@ -1,0 +1,31 @@
+"""paligemma-3b [vlm] — SigLIP + gemma decoder [arXiv:2407.07726].
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216; head_dim=256.
+The SigLIP vision frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings
+(B, 256, d_model); the decoder runs prefix-LM attention (bidirectional
+over the image prefix, causal over text).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2_048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16_384,
+    vocab=257_216,
+    activation="geglu",
+    tie_embeddings=True,
+    scale_embeddings=True,
+    norm="rmsnorm",
+    n_patches=256,
+    microbatches=2,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(n_kv_heads=1, n_patches=8)

@@ -1,0 +1,28 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 (per expert) vocab=32064.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4_096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6_400,
+    vocab=32_064,
+    n_experts=16,
+    top_k=2,
+    activation="swiglu",
+    norm="layernorm",
+    microbatches=4,
+    attn_causal_skip=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(norm="layernorm")

@@ -1,0 +1,25 @@
+"""smollm-135m [dense] — llama-arch small [hf:HuggingFaceTB/SmolLM-135M].
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152; head_dim=64.
+This family also backs the end-to-end CPU training example.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    head_dim=64,
+    d_ff=1_536,
+    vocab=49_152,
+    activation="swiglu",
+    tie_embeddings=True,
+    norm="rmsnorm",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(n_heads=3, n_kv_heads=3, head_dim=16)

@@ -1,0 +1,30 @@
+"""whisper-base [audio] — enc-dec transformer backbone [arXiv:2212.04356].
+
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865.  The conv audio frontend
+is a STUB per the assignment: ``input_specs()`` provides precomputed
+frame embeddings (B, 1500, d_model).  Positions use RoPE so the assigned
+32k-decode cell is well-defined (adaptation noted in DESIGN.md — the
+published model uses sinusoidal/learned positions capped at 448 decoder
+positions).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    n_enc_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2_048,
+    vocab=51_865,
+    activation="gelu",
+    norm="layernorm",
+    enc_frames=1_500,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(activation="gelu", norm="layernorm")

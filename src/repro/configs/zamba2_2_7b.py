@@ -1,0 +1,33 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].
+
+54L d_model=2560 (Mamba2, ssm_state=64) with ONE shared full-attention
+block (32H MHA kv=32, d_ff=10240 MLP) applied every 6 layers, re-using
+the same weights each time (the Zamba2 weight-sharing trick).  vocab=32000.
+Runs the ``long_500k`` cell (recurrent state + one shared-KV attention).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2_560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10_240,
+    vocab=32_000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+    attn_every=6,
+    microbatches=2,
+    norm="rmsnorm",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.reduced(n_layers=4, attn_every=2, ssm_state=16)

@@ -1,0 +1,32 @@
+"""Core LSM library: the paper's contribution (policies, schedulers,
+constraints, the fluid simulator, the two-phase evaluation methodology and
+the JAX-backed storage engine)."""
+from .component import Component, FlushOp, LSMTree, MergeOp, MergeState, fresh_id
+from .constraints import (ComponentConstraint, GlobalConstraint, L0Constraint,
+                          LocalConstraint, NoConstraint)
+from .metrics import Trace
+from .policies import (LevelingPolicy, MergePolicy, PartitionedLevelingPolicy,
+                       POLICIES, SizeTieredPolicy, TieringPolicy)
+from .scheduler import (FairScheduler, GreedyScheduler, MergeScheduler,
+                        SCHEDULERS, SingleThreadedScheduler, make_scheduler)
+from .sim import (ArrivalProcess, BurstyArrival, ClosedClient, ConstantArrival,
+                  LSMSimulator, OpenClient, SimConfig)
+from .blsm import BLSMSimulator
+from .twophase import TwoPhaseResult, run_two_phase
+from .engine import BackgroundDriver, LSMEngine
+from .memtable import MemTable
+from .sstable import SSTable
+
+__all__ = [
+    "Component", "FlushOp", "LSMTree", "MergeOp", "MergeState", "fresh_id",
+    "ComponentConstraint", "GlobalConstraint", "L0Constraint",
+    "LocalConstraint", "NoConstraint", "Trace",
+    "LevelingPolicy", "MergePolicy", "PartitionedLevelingPolicy", "POLICIES",
+    "SizeTieredPolicy", "TieringPolicy",
+    "FairScheduler", "GreedyScheduler", "MergeScheduler", "SCHEDULERS",
+    "SingleThreadedScheduler", "make_scheduler",
+    "ArrivalProcess", "BurstyArrival", "ClosedClient", "ConstantArrival",
+    "LSMSimulator", "OpenClient", "SimConfig",
+    "BLSMSimulator", "TwoPhaseResult", "run_two_phase",
+    "BackgroundDriver", "LSMEngine", "MemTable", "SSTable",
+]

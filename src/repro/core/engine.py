@@ -1,0 +1,340 @@
+"""The real LSM storage engine: paper's scheduling plane + JAX data plane.
+
+Writes land in a MemTable; flushes turn sealed memtables into SSTables
+(sorted runs + Pallas-built Bloom filters); merges execute through the
+Pallas merge-path kernel.  The *decisions* — which components to merge
+(policy), who gets I/O bandwidth (scheduler), when writes stall
+(constraint) — are exactly the classes the fluid simulator exercises, so
+every figure-level claim in the paper can be replayed against real bytes.
+
+Execution model: deterministic cooperative quanta.  ``pump(budget_bytes)``
+advances background I/O by one bandwidth quantum, split across flushes
+(strict priority, Section 3.1) and merges per the scheduler's allocation
+(pause/resume = simply which ops receive quanta).  A wall-clock driver
+(`BackgroundDriver`) turns quanta into a rate-limited background thread
+for the serving example; tests use pump() directly for determinism.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .component import Component, LSMTree, MergeOp
+from .constraints import ComponentConstraint, NoConstraint
+from .memtable import MemTable
+from .policies import MergePolicy
+from .scheduler import MergeScheduler
+from .sstable import SSTable
+
+try:  # the merge kernel needs jax; engine tests always have it
+    from repro.kernels.merge.ops import merge_dedup
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    merge_dedup = None
+
+
+ENTRY_BYTES = 1024  # paper's 1 KB records: 1 entry == 1 KB of I/O budget
+
+
+@dataclass
+class _RunningMerge:
+    op: MergeOp
+    inputs: list[SSTable]
+    # merged-but-unreleased output accumulated across quanta
+    out_keys: list[np.ndarray] = field(default_factory=list)
+    out_vals: list[np.ndarray] = field(default_factory=list)
+    cursor: int = 0            # entries of the merged stream already emitted
+    merged_keys: Optional[np.ndarray] = None
+    merged_vals: Optional[np.ndarray] = None
+
+
+class LSMEngine:
+    """A single-partition LSM store (uint32 keys -> int32 values)."""
+
+    def __init__(self, policy: MergePolicy, scheduler: MergeScheduler,
+                 constraint: ComponentConstraint | None = None,
+                 memtable_entries: int = 4096, num_memtables: int = 2,
+                 unique_keys: float = 1e6, use_kernels: bool = True,
+                 merge_block: int = 256):
+        self.policy = policy
+        self.scheduler = scheduler
+        self.constraint = constraint or NoConstraint()
+        self.tree = LSMTree(unique_keys=unique_keys)
+        self.memtable_entries = int(memtable_entries)
+        self.num_memtables = int(num_memtables)
+        self.use_kernels = bool(use_kernels) and merge_dedup is not None
+        self.merge_block = int(merge_block)
+
+        self.active = MemTable(self.memtable_entries)
+        self.sealed: list[MemTable] = []
+        self.tables: dict[int, SSTable] = {}     # component id -> SSTable
+        self.running: dict[int, _RunningMerge] = {}
+        self.pending_flush: list[tuple[np.ndarray, np.ndarray]] = []
+        self.now = 0.0
+        self._stamp = 0
+        self.stalled = False
+        self.stats = {"puts": 0, "stall_events": 0, "flushes": 0,
+                      "merges": 0, "merge_bytes": 0, "lookups": 0,
+                      "bloom_skips": 0}
+
+    # ------------------------------------------------------------------ write
+    def put(self, key: int, value: int) -> bool:
+        """Returns False when the write must stall (component constraint or
+        no free memtable slot) — the caller decides to retry/queue."""
+        self._refresh_stall()
+        if self.stalled:
+            return False
+        if self.active.full:
+            if len(self.sealed) >= self.num_memtables - 1:
+                self.stats["stall_events"] += 1
+                return False
+            self._seal_active()
+        self.active.put(key, value)
+        self.stats["puts"] += 1
+        return True
+
+    def put_batch(self, keys, values) -> int:
+        """Write as many as fit; returns the number accepted."""
+        keys = np.asarray(keys)
+        n_ok = 0
+        for i in range(len(keys)):
+            if not self.put(int(keys[i]), int(np.asarray(values)[i])):
+                break
+            n_ok += 1
+        return n_ok
+
+    def _seal_active(self):
+        self.sealed.append(self.active)
+        self.active = MemTable(self.memtable_entries)
+
+    def _refresh_stall(self):
+        self.stalled = self.constraint.violated(self.tree)
+
+    # ------------------------------------------------------------------ read
+    def get(self, key: int):
+        self.stats["lookups"] += 1
+        v = self.active.get(key)
+        if v is not None:
+            return v
+        for mt in reversed(self.sealed):
+            v = mt.get(key)
+            if v is not None:
+                return v
+        # disk components newest-data-first; on equal stamps the lower
+        # level holds the newer version (levels are age-ordered)
+        tables = sorted((t for t in self.tables.values()
+                         if t.component is not None),
+                        key=lambda t: (-t.data_stamp, t.component.level))
+        for table in tables:
+            if not bool(table.maybe_contains(np.array([key], np.uint32))[0]):
+                self.stats["bloom_skips"] += 1
+                continue
+            v = table.get(key)
+            if v is not None:
+                return v
+        return None
+
+    def scan_range(self, lo: int, hi: int) -> dict[int, int]:
+        """Newest-wins range scan across all components."""
+        out: dict[int, int] = {}
+        tables = sorted(self.tables.values(),
+                        key=lambda t: (t.data_stamp,
+                                       -(t.component.level
+                                         if t.component else 0)))
+        for table in tables:                   # oldest first; newer overrides
+            ks, vs = table.scan_range(lo, hi)
+            out.update(zip(ks.tolist(), vs.tolist()))
+        for mt in self.sealed:                 # memory newer than disk
+            sk, sv = mt.seal()
+            m = (sk >= lo) & (sk < hi)
+            out.update(zip(sk[m].tolist(), sv[m].tolist()))
+        sk, sv = self.active.seal()
+        m = (sk >= lo) & (sk < hi)
+        out.update(zip(sk[m].tolist(), sv[m].tolist()))
+        return out
+
+    # ------------------------------------------------------- background I/O
+    def pump(self, budget_entries: int) -> int:
+        """Advance background work by ``budget_entries`` of write I/O.
+        Flushes take strict priority; the remainder goes to merges per the
+        scheduler's allocation.  Returns entries actually written."""
+        spent = 0
+        self.now += 1.0
+        # 1. flushes
+        while self.sealed and spent < budget_entries:
+            mt = self.sealed.pop(0)
+            keys, vals = mt.seal()
+            table = SSTable.build(keys, vals,
+                                  level=self.policy.flush_target_level(),
+                                  created_at=self.now)
+            self._stamp += 1
+            table.data_stamp = self._stamp
+            self.tree.add(table.component)
+            self.tables[table.component.cid] = table
+            self.stats["flushes"] += 1
+            spent += len(keys)
+            self._collect_merges()
+        if spent >= budget_entries:
+            self._refresh_stall()
+            return spent
+        # 2. merges, per scheduler allocation
+        self._collect_merges()
+        ops = [rm.op for rm in self.running.values()]
+        alloc = self.scheduler.allocate(ops) if ops else {}
+        remaining = budget_entries - spent
+        for op_id, frac in alloc.items():
+            if frac <= 0:
+                continue
+            quantum = int(remaining * frac)
+            if quantum > 0:
+                spent += self._advance_merge(self.running[op_id], quantum)
+        self._refresh_stall()
+        return spent
+
+    def drain(self, budget_entries: int = 1 << 30, max_pumps: int = 10_000):
+        """Pump until no background work remains (tests/shutdown)."""
+        for _ in range(max_pumps):
+            self._collect_merges()
+            if not self.sealed and not self.running:
+                break
+            self.pump(budget_entries)
+
+    def _collect_merges(self):
+        for op in self.policy.collect_merges(self.tree, self.now):
+            inputs = [self.tables[c.cid] for c in op.inputs]
+            self.running[op.op_id] = _RunningMerge(op=op, inputs=inputs)
+
+    # -- merge execution (the paper's unit of schedulable I/O) ---------------
+    def _materialize_merge(self, rm: _RunningMerge):
+        """Compute the full merged run once (kernel or numpy), then emit it
+        in scheduler-controlled quanta — I/O pacing is what the paper
+        schedules; the compute itself is one kernel launch."""
+        # newest component wins: fold oldest -> newest with the newer run
+        # as A.  data_stamp is the data-age order (created_at can tie when
+        # a flush and a merge complete in the same pump); on equal stamps
+        # the HIGHER level is older.
+        tables = sorted(rm.inputs,
+                        key=lambda t: (t.data_stamp,
+                                       -(t.component.level
+                                         if t.component else 0)))
+        runs = [(np.asarray(t.keys), np.asarray(t.vals)) for t in tables]
+        keys, vals = runs[0]
+        for nk, nv in runs[1:]:
+            keys, vals = self._merge_two(nk, nv, keys, vals)
+        rm.merged_keys, rm.merged_vals = keys, vals
+
+    def _merge_two(self, keys_a, vals_a, keys_b, vals_b):
+        """A is newer (wins ties)."""
+        if self.use_kernels:
+            mk, mv, keep, valid = merge_dedup(
+                jnp.asarray(keys_a, jnp.uint32), jnp.asarray(vals_a, jnp.int32),
+                jnp.asarray(keys_b, jnp.uint32), jnp.asarray(vals_b, jnp.int32),
+                block=self.merge_block)
+            mk, mv = np.asarray(mk), np.asarray(mv)
+            keep = np.array(keep)          # writable copy
+            keep[valid:] = False
+            return mk[keep], mv[keep]
+        ks = np.concatenate([keys_a, keys_b])
+        vs = np.concatenate([vals_a, vals_b])
+        src = np.concatenate([np.zeros(len(keys_a), np.int8),
+                              np.ones(len(keys_b), np.int8)])
+        order = np.lexsort((src, ks))
+        ks, vs = ks[order], vs[order]
+        first = np.ones(len(ks), bool)
+        first[1:] = ks[1:] != ks[:-1]
+        return ks[first], vs[first]
+
+    def _advance_merge(self, rm: _RunningMerge, quantum: int) -> int:
+        if rm.merged_keys is None:
+            self._materialize_merge(rm)
+        total = len(rm.merged_keys)
+        take = min(quantum, total - rm.cursor)
+        if take > 0:
+            rm.out_keys.append(rm.merged_keys[rm.cursor:rm.cursor + take])
+            rm.out_vals.append(rm.merged_vals[rm.cursor:rm.cursor + take])
+            rm.cursor += take
+            rm.op.written += take
+            self.stats["merge_bytes"] += take * ENTRY_BYTES
+        if rm.cursor >= total:
+            self._finish_merge(rm)
+        return max(take, 0)
+
+    def _finish_merge(self, rm: _RunningMerge):
+        keys = np.concatenate(rm.out_keys) if rm.out_keys else \
+            np.empty(0, np.uint32)
+        vals = np.concatenate(rm.out_vals) if rm.out_vals else \
+            np.empty(0, np.int32)
+        stamp = max(t.data_stamp for t in rm.inputs)
+        # keep the policy's metadata model in sync with the real output size
+        rm.op.output_size = float(len(keys))
+        rm.op.written = float(len(keys))
+        for c in rm.op.inputs:
+            self.tables.pop(c.cid, None)
+        outs = self.policy.complete_merge(self.tree, rm.op, self.now)
+        # partitioned policies may split the output into several files
+        def _bind(comp, ks, vs):
+            table = SSTable.build(ks, vs, level=comp.level,
+                                  created_at=self.now)
+            table.component = comp
+            table.data_stamp = stamp
+            # keep the scheduling-plane range metadata honest: the policy's
+            # overlap selection must see the REAL key span, else adjacent-
+            # level overlaps are missed and newest-wins breaks.
+            if len(ks):
+                comp.key_lo = float(ks[0]) / 2**32
+                comp.key_hi = (float(ks[-1]) + 1) / 2**32
+            self.tables[comp.cid] = table
+
+        if len(outs) == 1:
+            _bind(outs[0], keys, vals)
+        else:
+            n = max(len(outs), 1)
+            splits = np.array_split(np.arange(len(keys)), n)
+            for comp, idx in zip(outs, splits):
+                _bind(comp, keys[idx], vals[idx])
+        self.running.pop(rm.op.op_id, None)
+        self.stats["merges"] += 1
+        self._collect_merges()
+
+    # ------------------------------------------------------------------ info
+    def num_components(self) -> int:
+        return self.tree.num_components()
+
+    def total_entries(self) -> int:
+        return sum(len(t) for t in self.tables.values()) + \
+            sum(len(m) for m in self.sealed) + len(self.active)
+
+
+class BackgroundDriver:
+    """Wall-clock driver: pumps an engine at ``bandwidth_bytes_per_s`` on a
+    daemon thread (the serving/ingestion examples use this; tests use
+    pump() directly)."""
+
+    def __init__(self, engine: LSMEngine, bandwidth_bytes_per_s: float,
+                 quantum_s: float = 0.01):
+        self.engine = engine
+        self.rate = bandwidth_bytes_per_s
+        self.quantum_s = quantum_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        per_quantum = int(self.rate * self.quantum_s / ENTRY_BYTES)
+        while not self._stop.is_set():
+            with self._lock:
+                self.engine.pump(max(per_quantum, 1))
+            time.sleep(self.quantum_s)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)

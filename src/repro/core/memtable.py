@@ -1,0 +1,70 @@
+"""In-memory LSM component (memtable) for the real engine.
+
+Writes append to unsorted numpy buffers (O(1) per put, like a skiplist's
+amortized role here); sealing sorts once and deduplicates newest-wins,
+producing the sorted run a flush turns into an SSTable.  Keys are uint32
+(key == 2**32-1 is reserved as the merge kernel's sentinel), values are
+int32 payload handles.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SENTINEL_KEY = np.uint32(0xFFFFFFFF)
+
+
+class MemTable:
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._keys = np.empty(self.capacity, np.uint32)
+        self._vals = np.empty(self.capacity, np.int32)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def full(self) -> bool:
+        return self._n >= self.capacity
+
+    def put(self, key: int, value: int) -> None:
+        if self._n >= self.capacity:
+            raise RuntimeError("memtable full; seal it first")
+        k = np.uint32(key)
+        if k == SENTINEL_KEY:
+            raise ValueError("key 2**32-1 is reserved")
+        self._keys[self._n] = k
+        self._vals[self._n] = np.int32(value)
+        self._n += 1
+
+    def put_batch(self, keys, values) -> None:
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.int32)
+        n = len(keys)
+        if self._n + n > self.capacity:
+            raise RuntimeError("memtable overflow")
+        if (keys == SENTINEL_KEY).any():
+            raise ValueError("key 2**32-1 is reserved")
+        self._keys[self._n:self._n + n] = keys
+        self._vals[self._n:self._n + n] = values
+        self._n += n
+
+    def get(self, key: int):
+        """Newest-wins lookup over the unsorted tail (scan newest-first)."""
+        k = np.uint32(key)
+        idx = np.flatnonzero(self._keys[:self._n] == k)
+        if idx.size:
+            return int(self._vals[idx[-1]])
+        return None
+
+    def seal(self):
+        """Sorted, newest-wins-deduplicated (keys, values) arrays."""
+        keys = self._keys[:self._n]
+        vals = self._vals[:self._n]
+        # stable sort keeps insertion order within equal keys; keep the last
+        order = np.argsort(keys, kind="stable")
+        sk, sv = keys[order], vals[order]
+        last = np.ones(len(sk), bool)
+        if len(sk) > 1:
+            last[:-1] = sk[1:] != sk[:-1]
+        return sk[last], sv[last]

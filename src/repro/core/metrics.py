@@ -1,0 +1,141 @@
+"""Trace capture and metric extraction for the fluid simulator.
+
+The simulator records cumulative arrivals A(t) and cumulative completions
+S(t) as piecewise-linear breakpoint lists.  Open-system write latency of
+the x-th write is then exactly  S^-1(x) - A^-1(x)  (queuing + processing),
+computed by vectorized inversion — deterministic, no sampling noise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def _invert(pts_t: np.ndarray, pts_v: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Given monotone piecewise-linear (t, v) breakpoints, find t(v)."""
+    idx = np.searchsorted(pts_v, values, side="left")
+    idx = np.clip(idx, 1, len(pts_v) - 1)
+    v0, v1 = pts_v[idx - 1], pts_v[idx]
+    t0, t1 = pts_t[idx - 1], pts_t[idx]
+    dv = np.maximum(v1 - v0, 1e-12)
+    return t0 + (values - v0) / dv * (t1 - t0)
+
+
+@dataclass
+class Trace:
+    arrival_t: list[float] = field(default_factory=lambda: [0.0])
+    arrival_v: list[float] = field(default_factory=lambda: [0.0])
+    service_t: list[float] = field(default_factory=lambda: [0.0])
+    service_v: list[float] = field(default_factory=lambda: [0.0])
+    capacity_t: list[float] = field(default_factory=list)   # (t, capacity entries/s)
+    capacity_v: list[float] = field(default_factory=list)
+    comp_t: list[float] = field(default_factory=list)       # (t, #disk components)
+    comp_v: list[int] = field(default_factory=list)
+    stalls: list[tuple[float, float]] = field(default_factory=list)
+    merges_completed: int = 0
+    merge_sizes: list[float] = field(default_factory=list)  # entries written
+    merge_arity: list[int] = field(default_factory=list)
+    duration: float = 0.0
+    closed_system: bool = False
+    n_clients: int = 1
+
+    # -- recording helpers ----------------------------------------------
+    def record_arrival(self, t: float, cum: float) -> None:
+        if cum > self.arrival_v[-1] or t > self.arrival_t[-1]:
+            self.arrival_t.append(t)
+            self.arrival_v.append(cum)
+
+    def record_service(self, t: float, cum: float) -> None:
+        if cum > self.service_v[-1] or t > self.service_t[-1]:
+            self.service_t.append(t)
+            self.service_v.append(cum)
+
+    def record_capacity(self, t: float, c: float) -> None:
+        if not self.capacity_t or self.capacity_v[-1] != c:
+            self.capacity_t.append(t)
+            self.capacity_v.append(c)
+
+    def record_components(self, t: float, n: int) -> None:
+        self.comp_t.append(t)
+        self.comp_v.append(n)
+
+    # -- metrics ----------------------------------------------------------
+    @property
+    def total_written(self) -> float:
+        return self.service_v[-1]
+
+    def throughput(self, t_from: float = 0.0, t_to: float | None = None) -> float:
+        t_to = t_to if t_to is not None else self.duration
+        st = np.asarray(self.service_t)
+        sv = np.asarray(self.service_v)
+        v0 = float(np.interp(t_from, st, sv))
+        v1 = float(np.interp(t_to, st, sv))
+        return (v1 - v0) / max(t_to - t_from, 1e-9)
+
+    def windowed_throughput(self, window: float = 30.0) -> tuple[np.ndarray, np.ndarray]:
+        edges = np.arange(0.0, self.duration + window, window)
+        st = np.asarray(self.service_t)
+        sv = np.asarray(self.service_v)
+        cum = np.interp(edges, st, sv)
+        return edges[1:], np.diff(cum) / window
+
+    def write_latency_percentiles(self, pcts=(50, 90, 99, 99.9),
+                                  n: int = 200_001,
+                                  t_from: float = 0.0) -> dict[float, float]:
+        """Latency (queue + processing) of the x-th write, for open systems."""
+        at = np.asarray(self.arrival_t)
+        av = np.asarray(self.arrival_v)
+        stt = np.asarray(self.service_t)
+        sv = np.asarray(self.service_v)
+        lo = float(np.interp(t_from, at, av))
+        # only writes that were *completed* in-window have defined latency;
+        # pending writes at the end are right-censored -> extend service
+        # line flat (their latency is a lower bound, conservative).
+        hi = min(av[-1], sv[-1])
+        if hi <= lo:
+            return {p: 0.0 for p in pcts}
+        xs = np.linspace(lo, hi, n)
+        t_arr = _invert(at, av, xs)
+        t_done = _invert(stt, sv, xs)
+        lat = np.maximum(t_done - t_arr, 0.0)
+        return {p: float(np.percentile(lat, p)) for p in pcts}
+
+    def processing_latency_percentiles(self, pcts=(50, 90, 99, 99.9),
+                                       n: int = 200_001) -> dict[float, float]:
+        """Per-write processing time = inverse instantaneous capacity at the
+        write's completion time (the delay injected into that write), with
+        stalled intervals contributing the remaining stall length for the
+        writes in flight.  Closed systems additionally expose stall time to
+        the ``n_clients`` in-flight writes only (Figure 5a discussion)."""
+        if not self.capacity_t:
+            return {p: 0.0 for p in pcts}
+        stt = np.asarray(self.service_t)
+        sv = np.asarray(self.service_v)
+        xs = np.linspace(0.0, sv[-1], n)
+        t_done = _invert(stt, sv, xs)
+        ct = np.asarray(self.capacity_t)
+        cv = np.asarray(self.capacity_v)
+        idx = np.clip(np.searchsorted(ct, t_done, side="right") - 1, 0, len(cv) - 1)
+        cap = cv[idx]
+        lat = 1.0 / np.maximum(cap, 1e-9)
+        if self.closed_system and self.stalls:
+            # in-flight writes at each stall onset wait out the stall
+            extra = [s1 - s0 for (s0, s1) in self.stalls] * self.n_clients
+            lat = np.concatenate([lat, np.asarray(extra)])
+        return {p: float(np.percentile(lat, p)) for p in pcts}
+
+    def stall_time(self) -> float:
+        return sum(s1 - s0 for (s0, s1) in self.stalls)
+
+    def max_components(self) -> int:
+        return max(self.comp_v) if self.comp_v else 0
+
+    def summary(self) -> dict:
+        return {
+            "throughput": self.throughput(),
+            "stall_time": self.stall_time(),
+            "n_stalls": len(self.stalls),
+            "merges": self.merges_completed,
+            "max_components": self.max_components(),
+        }

@@ -1,0 +1,267 @@
+"""Fluid discrete-event simulator of an LSM-tree under an I/O budget.
+
+Faithful to the paper's experimental setup (Section 3): a write budget
+(default 100 MB/s = 102400 entries/s at 1 KB/entry) shared by flushes
+(strict priority, as in the paper) and merges (split by the pluggable
+merge scheduler); two memory components; writes stall when the component
+constraint is violated (or are slowed by an optional write-rate
+controller, used by bLSM and the Figure 13 "Limit" variant).
+
+Rates are piecewise-constant between events, so completions, queue
+transitions and latencies are computed exactly — a 2-hour experiment
+simulates in milliseconds, deterministically.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .component import Component, FlushOp, LSMTree, MergeOp, MergeState
+from .constraints import ComponentConstraint, NoConstraint
+from .metrics import Trace
+from .policies import MergePolicy
+from .scheduler import MergeScheduler
+
+EPS = 1e-9
+INF = float("inf")
+
+
+# --------------------------------------------------------------------------
+# Arrival processes / clients
+# --------------------------------------------------------------------------
+class ArrivalProcess:
+    """Piecewise-constant arrival rate (entries/s)."""
+
+    def rate(self, t: float) -> float:
+        raise NotImplementedError
+
+    def next_change(self, t: float) -> float:
+        return INF
+
+
+class ConstantArrival(ArrivalProcess):
+    def __init__(self, rate: float):
+        self._rate = float(rate)
+
+    def rate(self, t: float) -> float:
+        return self._rate
+
+
+class BurstyArrival(ArrivalProcess):
+    """Alternates normal_rate for normal_s seconds, burst_rate for burst_s
+    (Figure 13: 2000/s for 25 min, 8000/s for 5 min)."""
+
+    def __init__(self, normal_rate: float, burst_rate: float,
+                 normal_s: float, burst_s: float):
+        self.nr, self.br = float(normal_rate), float(burst_rate)
+        self.ns, self.bs = float(normal_s), float(burst_s)
+
+    def _phase(self, t: float) -> tuple[bool, float]:
+        period = self.ns + self.bs
+        u = t % period
+        if u < self.ns:
+            return False, (t - u) + self.ns
+        return True, (t - u) + period
+
+    def rate(self, t: float) -> float:
+        burst, _ = self._phase(t)
+        return self.br if burst else self.nr
+
+    def next_change(self, t: float) -> float:
+        _, nxt = self._phase(t)
+        return nxt
+
+
+@dataclass
+class OpenClient:
+    """Open system (Figure 5b): arrivals are independent of processing."""
+
+    arrivals: ArrivalProcess
+    closed = False
+
+
+@dataclass
+class ClosedClient:
+    """Closed system (Figure 5a): next write submitted only after the
+    previous completes; arrival rate == service capacity."""
+
+    n_threads: int = 1
+    per_thread_rate: float = 250_000.0  # in-memory insert rate, entries/s
+    closed = True
+
+    @property
+    def capacity(self) -> float:
+        return self.n_threads * self.per_thread_rate
+
+
+# --------------------------------------------------------------------------
+@dataclass
+class SimConfig:
+    bandwidth: float = 102_400.0       # write-budget entries/s (100 MB/s)
+    entry_size: int = 1024
+    memtable_entries: float = 131_072  # 128 MB
+    num_memtables: int = 2
+    unique_keys: float = 100e6
+    mem_write_rate: float = 250_000.0  # open-system in-memory capacity
+    flush_priority: bool = True        # flush preempts merge I/O
+
+
+WriteRateController = Callable[[float, LSMTree], float]  # (t, tree) -> cap
+
+
+class LSMSimulator:
+    """Fluid simulation of one LSM-tree run."""
+
+    def __init__(self, policy: MergePolicy, scheduler: MergeScheduler,
+                 constraint: ComponentConstraint | None = None,
+                 config: SimConfig | None = None,
+                 write_controller: Optional[WriteRateController] = None,
+                 fresh_tree: bool = False):
+        self.policy = policy
+        self.scheduler = scheduler
+        self.constraint = constraint or NoConstraint()
+        self.cfg = config or SimConfig()
+        self.controller = write_controller
+        self.tree = LSMTree(self.cfg.unique_keys, self.cfg.entry_size)
+        if not fresh_tree:
+            policy.initial_tree(self.tree)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, client, duration: float) -> Trace:
+        cfg = self.cfg
+        tr = Trace(duration=duration, closed_system=client.closed,
+                   n_clients=getattr(client, "n_threads", 1))
+        self.scheduler.reset()
+
+        t = 0.0
+        queue = 0.0                 # open-system backlog (entries)
+        arrived = 0.0
+        served = 0.0
+        fill = 0.0                  # active memtable fill (entries)
+        sealed: list[float] = []    # sealed memtable sizes awaiting flush
+        flush: Optional[FlushOp] = None
+        mem_stall = False           # active memtable full, no free slot
+        ops: list[MergeOp] = []
+        stall_start: Optional[float] = None
+        constraint_stalled = self.constraint.violated(self.tree)
+
+        # initial merges (a freshly loaded tree may already be mergeable)
+        ops.extend(self.policy.collect_merges(self.tree, t))
+        tr.record_components(t, self.tree.num_components())
+
+        def capacity() -> float:
+            if mem_stall or constraint_stalled:
+                return 0.0
+            cap = cfg.mem_write_rate if not client.closed else client.capacity
+            if self.controller is not None:
+                cap = min(cap, max(self.controller(t, self.tree), 0.0))
+            return cap
+
+        while t < duration - EPS:
+            # ---- rates for this segment
+            cap = capacity()
+            mu = cap if client.closed else client.arrivals.rate(t)
+            if client.closed:
+                service = cap
+            else:
+                service = cap if queue > EPS else min(mu, cap)
+            flush_rate = 0.0
+            if flush is not None:
+                flush_rate = cfg.bandwidth if cfg.flush_priority else cfg.bandwidth / 2
+            merge_budget = max(cfg.bandwidth - flush_rate, 0.0)
+            alloc = self.scheduler.allocate(ops) if ops else {}
+            rates = {op.op_id: alloc.get(op.op_id, 0.0) * merge_budget for op in ops}
+
+            tr.record_capacity(t, service if client.closed else cap)
+
+            # ---- stall bookkeeping
+            stalled_now = mem_stall or constraint_stalled
+            if stalled_now and stall_start is None:
+                stall_start = t
+            elif not stalled_now and stall_start is not None:
+                tr.stalls.append((stall_start, t))
+                stall_start = None
+
+            # ---- next event horizon
+            dt = duration - t
+            if service > EPS:
+                room = cfg.memtable_entries - fill
+                dt = min(dt, max(room, 0.0) / service)
+            if not client.closed and queue > EPS and mu < service - EPS:
+                dt = min(dt, queue / (service - mu))
+            if flush is not None and flush_rate > EPS:
+                dt = min(dt, flush.remaining / flush_rate)
+            for op in ops:
+                r = rates[op.op_id]
+                if r > EPS:
+                    dt = min(dt, op.remaining_output / r)
+            if not client.closed:
+                dt = min(dt, client.arrivals.next_change(t) - t)
+            dt = max(dt, 0.0)
+            if dt <= EPS and t > 0:
+                dt = EPS  # defensive: avoid zero-progress loops
+
+            # ---- integrate segment
+            t2 = t + dt
+            arrived += mu * dt
+            served += service * dt
+            if not client.closed:
+                queue = max(0.0, queue + (mu - service) * dt)
+            fill += service * dt
+            if flush is not None:
+                flush.written += flush_rate * dt
+            for op in ops:
+                op.written += rates[op.op_id] * dt
+            tr.record_arrival(t2, arrived)
+            tr.record_service(t2, served)
+            t = t2
+
+            # ---- fire events
+            # memtable full?  (slots = active + sealed/flushing memtables)
+            if fill >= cfg.memtable_entries - 1e-6 and not mem_stall:
+                busy = len(sealed) + (1 if flush is not None else 0)
+                if busy < cfg.num_memtables - 1:
+                    sealed.append(fill)
+                    fill = 0.0
+                else:
+                    # all slots busy -> writer must wait for a flush
+                    mem_stall = True
+            # start a flush if idle
+            if flush is None and sealed:
+                flush = FlushOp(size=sealed.pop(0))
+            # flush done?
+            if flush is not None and flush.remaining <= 1e-6:
+                comp = Component(size=flush.size, level=self.policy.flush_target_level(),
+                                 created_at=t)
+                self.tree.add(comp)
+                flush = None
+                if mem_stall:
+                    sealed.append(fill)
+                    fill = 0.0
+                    mem_stall = False
+                if sealed:
+                    flush = FlushOp(size=sealed.pop(0))
+                ops.extend(self.policy.collect_merges(self.tree, t))
+                constraint_stalled = self.constraint.violated(self.tree)
+                tr.record_components(t, self.tree.num_components())
+            # merges done?
+            done = [op for op in ops if op.done]
+            for op in done:
+                op.state = MergeState.DONE
+                ops.remove(op)
+                self.policy.complete_merge(self.tree, op, t)
+                tr.merges_completed += 1
+                tr.merge_sizes.append(op.output_size)
+                tr.merge_arity.append(len(op.inputs))
+            if done:
+                ops.extend(self.policy.collect_merges(self.tree, t))
+                constraint_stalled = self.constraint.violated(self.tree)
+                tr.record_components(t, self.tree.num_components())
+
+        if stall_start is not None:
+            tr.stalls.append((stall_start, duration))
+        tr.record_arrival(duration, arrived)
+        tr.record_service(duration, served)
+        tr.record_components(duration, self.tree.num_components())
+        return tr

@@ -1,0 +1,83 @@
+"""Immutable sorted-run component for the real engine.
+
+The data plane is JAX: Bloom filters are built/probed by the Pallas bloom
+kernel pair, point lookups are vectorized sorted searches, and merges
+(in engine.py) run through the Pallas merge-path kernel.  One SSTable
+corresponds to one scheduling-plane ``Component`` so the paper's
+policies/schedulers drive real bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bloom.ops import bloom_build, bloom_probe, filter_params
+from .component import Component
+
+
+@dataclass
+class SSTable:
+    keys: jnp.ndarray                  # (n,) uint32, sorted ascending, unique
+    vals: jnp.ndarray                  # (n,) int32
+    bloom: jnp.ndarray = None          # uint32 words
+    n_bits: int = 0
+    k_hashes: int = 0
+    component: Optional[Component] = None
+    data_stamp: int = 0                # data age: strictly increasing at
+                                       # flush; max over inputs at merge
+
+    @classmethod
+    def build(cls, keys, vals, level: int = 0, created_at: float = 0.0,
+              fpr: float = 0.01) -> "SSTable":
+        keys = jnp.asarray(keys, jnp.uint32)
+        vals = jnp.asarray(vals, jnp.int32)
+        n = int(keys.shape[0])
+        n_bits, k_hashes = filter_params(n, fpr)
+        bloom = bloom_build(keys, n_bits, k_hashes)
+        lo = float(keys[0]) / 2**32 if n else 0.0
+        hi = (float(keys[-1]) + 1) / 2**32 if n else 1.0
+        comp = Component(size=float(n), level=level, key_lo=lo, key_hi=hi,
+                         created_at=created_at)
+        return cls(keys=keys, vals=vals, bloom=bloom, n_bits=n_bits,
+                   k_hashes=k_hashes, component=comp)
+
+    def __len__(self) -> int:
+        return int(self.keys.shape[0])
+
+    # -- queries --------------------------------------------------------------
+    def maybe_contains(self, keys) -> np.ndarray:
+        """Bloom-filter screen (vectorized, Pallas probe kernel)."""
+        keys = jnp.asarray(keys, jnp.uint32)
+        return np.asarray(bloom_probe(self.bloom, keys, self.n_bits,
+                                      self.k_hashes))
+
+    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """(found mask, values) for a key batch; bloom screen + sorted
+        search only for survivors."""
+        keys = np.asarray(keys, np.uint32)
+        maybe = self.maybe_contains(keys)
+        found = np.zeros(len(keys), bool)
+        vals = np.zeros(len(keys), np.int32)
+        if maybe.any():
+            sub = jnp.asarray(keys[maybe])
+            pos = jnp.searchsorted(self.keys, sub)
+            pos = jnp.clip(pos, 0, max(len(self) - 1, 0))
+            hit = np.asarray(self.keys[pos] == sub) if len(self) else \
+                np.zeros(sub.shape, bool)
+            v = np.asarray(self.vals[pos])
+            found[maybe] = hit
+            vals[np.flatnonzero(maybe)[hit]] = v[hit]
+        return found, vals
+
+    def get(self, key: int):
+        found, vals = self.get_batch(np.array([key], np.uint32))
+        return int(vals[0]) if found[0] else None
+
+    def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """All (key, value) with lo <= key < hi."""
+        i = int(jnp.searchsorted(self.keys, jnp.uint32(lo)))
+        j = int(jnp.searchsorted(self.keys, jnp.uint32(hi)))
+        return np.asarray(self.keys[i:j]), np.asarray(self.vals[i:j])

@@ -1,0 +1,5 @@
+from .sharding import (Constrainer, default_rules, make_constrainer,
+                       sharding_for, spec_for, tree_shardings)
+
+__all__ = ["Constrainer", "default_rules", "make_constrainer",
+           "sharding_for", "spec_for", "tree_shardings"]

@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for bandwidth-constrained meshes).
+
+int8 block-quantization: each gradient is scaled per block of 256
+values, rounded to int8, and the quantization error is carried into the
+next step's gradient (error feedback keeps SGD-style convergence).  On
+hardware this halves-to-quarters the reduce-scatter volume; here the
+quantize/dequantize pair is exact-shape so the train step can flip it on
+with one flag, and the roofline's collective term shows the delta.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to(x, m):
+    n = x.size
+    pad = (-n) % m
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    return flat, n
+
+
+def quantize_int8(g):
+    """g -> (q int8, scale f32 per block).  Lossy; pair with dequantize."""
+    flat, n = _pad_to(g.astype(jnp.float32), BLOCK)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), n
+
+
+def dequantize_int8(q, scale, n, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compress_grads_with_feedback(grads, error_state):
+    """One error-feedback round: returns (decompressed grads to apply,
+    new error state).  ``error_state`` is a grads-shaped fp32 pytree."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale, n = quantize_int8(g32)
+        deq = dequantize_int8(q, scale, n, g.shape, jnp.float32)
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, error_state)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+    new_g = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    new_e = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    return new_g, new_e
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(params) -> int:
+    """Collective bytes if gradients were exchanged int8+scales."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        total += p.size  # int8 payload
+        total += -(-p.size // BLOCK) * 4
+    return total

@@ -1,0 +1,118 @@
+"""Logical-axis sharding: the single mapping from model-space axis names
+to mesh axes (MaxText-style logical annotations, hand-rolled).
+
+Rules are applied left-to-right per tensor dim with two hard invariants:
+  1. a mesh axis is consumed at most once per tensor (no double-sharding);
+  2. a dim is sharded only if its size is divisible by the product of the
+     mapped mesh axes (small archs fall back to replication per-dim —
+     e.g. smollm's 9 q-heads on a 16-way model axis stay replicated while
+     its FFN/vocab dims still tensor-parallelize).
+
+The same tables drive parameters, optimizer state, activations and KV
+caches, so resharding points are fully determined by this file.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def default_rules(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    """Logical axis -> mesh axes.  ``pod`` is present only multi-pod."""
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    return {
+        # data / batch
+        "batch": fsdp,
+        # tensor-parallel families
+        "vocab": model,
+        "q_heads": model,
+        "kv_heads": model,
+        "ffn": model,
+        "experts": model,
+        "ssm_inner": model,
+        "ssm_heads": model,
+        # fully-sharded parameter axis (ZeRO-3)
+        "embed": fsdp,
+        # serving
+        "cache_seq": model,
+        # sequence-parallel residual activations (opt-in per config)
+        "seq_act": model,
+        # never sharded
+        "layers": (),
+        "head_dim": (),
+    }
+
+
+def _axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names], dtype=np.int64)) if names else 1
+
+
+def spec_for(mesh: Mesh, rules: dict, shape: tuple, axes: tuple) -> P:
+    """Resolve one tensor's PartitionSpec from its logical axes."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        entry: tuple[str, ...] = ()
+        if name:
+            cand = tuple(rules.get(name, ()))
+            if cand and not (set(cand) & used):
+                if dim % _axis_size(mesh, cand) == 0:
+                    entry = cand
+        used |= set(entry)
+        out.append(entry if entry else None)
+    # trailing dims beyond the axes tuple stay replicated
+    out += [None] * (len(shape) - len(axes))
+    return P(*[e if e is None else (e if len(e) > 1 else e[0]) for e in out])
+
+
+def sharding_for(mesh: Mesh, rules: dict, shape: tuple, axes: tuple
+                 ) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, rules, shape, axes))
+
+
+def tree_shardings(mesh: Mesh, rules: dict, tree, axes_tree):
+    """Pytree of NamedShardings from matching (values, logical-axes) trees.
+
+    ``axes_tree`` leaves are tuples of logical names; value leaves provide
+    shapes (arrays or ShapeDtypeStructs)."""
+    def one(leaf, axes):
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        if axes is None:
+            axes = ()
+        return sharding_for(mesh, rules, tuple(shape), tuple(axes))
+
+    return jax.tree.map(one, tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+class Constrainer:
+    """Model-injectable ``sh(tensor, logical_axes)`` hook.
+
+    Carries ``mesh``/``rules`` so modules that need explicit collectives
+    (the expert-parallel MoE shard_map) can discover the mesh without a
+    separate plumbing path."""
+
+    def __init__(self, mesh: Mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __call__(self, x, axes):
+        spec = spec_for(self.mesh, self.rules, tuple(x.shape), tuple(axes))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def make_constrainer(mesh: Mesh, rules: dict) -> Constrainer:
+    return Constrainer(mesh, rules)
+
+
+def tree_logical_to_shardings(mesh: Mesh, rules: dict, abstract_tree,
+                              axes_tree):
+    """Shardings for a tree given abstract leaves (dry-run entrypoint)."""
+    return tree_shardings(mesh, rules, abstract_tree, axes_tree)

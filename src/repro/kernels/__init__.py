@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+merge     — two-way sorted merge via merge-path (LSM compaction inner loop)
+bloom     — Bloom filter probe (point-lookup hot path)
+attention — blocked causal flash attention with GQA (LM substrate)
+ssd       — Mamba2 state-space-duality chunked scan (ssm/hybrid archs)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public API), ref.py (pure-jnp/numpy oracle).  Kernels target TPU and are
+validated on CPU with interpret=True.
+"""
+from . import attention, bloom, merge, ssd  # noqa: F401

@@ -1,0 +1,2 @@
+"""attention kernel package."""
+from . import ops, ref

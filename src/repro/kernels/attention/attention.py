@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: blocked (flash) attention with GQA and causal
+masking — the LM substrate's dominant non-matmul hot spot.
+
+Canonical TPU structure: a sequential 3D grid (batch*heads, q_blocks,
+kv_blocks) with VMEM scratch carrying the running max / normalizer /
+accumulator across the innermost kv dimension; out-of-causal kv blocks
+are skipped with ``pl.when`` so the diagonal costs ~half of full
+attention.  GQA maps query head -> kv head purely in the BlockSpec
+index_map, so grouped K/V blocks are fetched once per group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    in_past = (ki * bk <= qi * bq + bq - 1) if causal else True
+
+    @pl.when(in_past)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                              "interpret"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) with H % Hkv == 0.
+
+    Sequence length must be a multiple of the block sizes (ops.py pads).
+    """
+    B, H, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0 and S % bq == 0 and Sk % bk == 0
+    group = H // Hkv
+    scale = D ** -0.5
+    grid = (B * H, S // bq, Sk // bk)
+
+    def q_map(bh, qi, ki):
+        return (bh // H, bh % H, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh // H, (bh % H) // group, ki, 0)
+
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), q_map),
+            pl.BlockSpec((1, 1, bk, D), kv_map),
+            pl.BlockSpec((1, 1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

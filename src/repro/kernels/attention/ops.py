@@ -1,0 +1,32 @@
+"""Public attention API: padding/plumbing around the flash kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .attention import flash_attention
+
+
+def attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128,
+              interpret: bool = True):
+    """Flash attention with automatic sequence padding.
+
+    q: (B, H, S, D); k, v: (B, Hkv, Sk, D).  Padded kv positions are
+    masked by the causal structure (query padding rows are sliced off;
+    for non-causal inputs kv must already be a block multiple).
+    """
+    B, H, S, D = q.shape
+    Sk = k.shape[2]
+    bq = min(bq, max(S, 8))
+    bk = min(bk, max(Sk, 8))
+    pad_q = (-S) % bq
+    pad_k = (-Sk) % bk
+    if pad_k and not causal:
+        raise ValueError("non-causal attention requires block-aligned kv")
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                          interpret=interpret)
+    return out[:, :, :S, :]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (materialized softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""bloom kernel package."""
+from . import ops, ref

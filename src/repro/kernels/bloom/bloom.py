@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: Bloom-filter probe (Section 2.1 — the point-lookup
+filter the paper's query experiments lean on).
+
+The SSD-era idiom pokes single bits through byte addressing; the TPU
+adaptation probes a whole 128-lane block of query keys per grid step with
+double hashing, gathering filter words from a VMEM-resident filter.
+Building the filter is a scatter (done once per flush/merge) and stays in
+ops.py as an XLA ``.at[].max()``; probing is the hot path (once per
+component per point lookup).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def hash_u32(x, seed: int):
+    """xorshift-multiply finalizer on uint32 lanes."""
+    x = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    return x ^ (x >> 16)
+
+
+def bit_positions(keys, n_bits: int, k_hashes: int):
+    """Double hashing: pos_i = (h1 + i*h2) mod n_bits, shape (k, n)."""
+    h1 = hash_u32(keys, 0x9E3779B9)
+    h2 = hash_u32(keys, 0x85EBCA6B) | jnp.uint32(1)  # odd stride
+    i = jnp.arange(k_hashes, dtype=jnp.uint32)[:, None]
+    return ((h1[None, :] + i * h2[None, :]) % jnp.uint32(n_bits)).astype(jnp.int32)
+
+
+def _probe_kernel(filt_ref, keys_ref, out_ref, *, n_bits, k_hashes):
+    filt = filt_ref[...]
+    keys = keys_ref[...].reshape(-1)
+    pos = bit_positions(keys, n_bits, k_hashes)       # (k, q)
+    words = filt[pos >> 5]                            # gather (k, q)
+    bits = (words >> (pos & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    hit = jnp.min(bits, axis=0)                       # AND over k hashes
+    out_ref[...] = hit.astype(jnp.uint8).reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "k_hashes", "block",
+                                              "interpret"))
+def bloom_probe_kernel(filt, keys, n_bits: int, k_hashes: int,
+                       block: int = 1024, interpret: bool = True):
+    """Probe ``keys`` (padded to a multiple of ``block``) against ``filt``
+    (uint32 words).  Returns uint8 maybe-present flags."""
+    n = keys.shape[0]
+    assert n % block == 0, "pad keys in ops.py"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, n_bits=n_bits, k_hashes=k_hashes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(filt.shape, lambda i: (0,)),       # filter resident
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=interpret,
+    )(filt, keys)

@@ -1,0 +1,48 @@
+"""Public Bloom-filter API: build (XLA scatter, once per component) +
+probe (Pallas kernel, the per-lookup hot path)."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .bloom import bit_positions, bloom_probe_kernel
+
+
+def filter_params(n_keys: int, fpr: float = 0.01) -> tuple[int, int]:
+    """(n_bits, k_hashes) for a target false-positive rate (1% in the
+    paper's setup, Section 3.1)."""
+    n_keys = max(n_keys, 1)
+    n_bits = int(math.ceil(-n_keys * math.log(fpr) / (math.log(2) ** 2)))
+    n_bits = max(128, (n_bits + 127) // 128 * 128)
+    k = max(1, round(n_bits / n_keys * math.log(2)))
+    return n_bits, min(k, 16)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "k_hashes"))
+def bloom_build(keys, n_bits: int, k_hashes: int):
+    """Build the filter as uint32 words.
+
+    OR-semantics via an idempotent scatter-max into a byte-per-bit array,
+    then a vectorized pack — duplicate positions are harmless by
+    construction.
+    """
+    pos = bit_positions(keys.astype(jnp.uint32), n_bits, k_hashes).reshape(-1)
+    bits = jnp.zeros((n_bits,), jnp.uint8).at[pos].max(jnp.uint8(1))
+    lanes = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits.reshape(-1, 32).astype(jnp.uint32) * lanes[None, :],
+                   axis=1, dtype=jnp.uint32)
+
+
+def bloom_probe(filt, keys, n_bits: int, k_hashes: int, block: int = 1024,
+                interpret: bool = True):
+    """Probe keys; returns a bool maybe-present mask (no false negatives)."""
+    n = keys.shape[0]
+    pad = (-n) % block
+    kp = jnp.concatenate([keys.astype(jnp.uint32),
+                          jnp.zeros((pad,), jnp.uint32)])
+    out = bloom_probe_kernel(filt, kp, n_bits, k_hashes, block=block,
+                             interpret=interpret)
+    return out[:n].astype(bool)

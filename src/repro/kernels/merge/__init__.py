@@ -1,0 +1,2 @@
+"""merge kernel package."""
+from . import ops, ref

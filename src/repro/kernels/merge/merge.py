@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: two-way sorted merge via merge-path partitioning.
+
+This is the compaction inner loop the paper's schedulers meter out I/O to.
+The CPU/GPU idiom (an iterator heap) is scalar and branchy; the TPU
+adaptation splits the output into fixed-size blocks whose input windows
+are located by a *merge-path* co-rank search (done once, vectorized, in
+ops.py) and merges each window pair with a data-parallel bitonic merge
+network — pure VPU compare/exchange ops, no data-dependent control flow.
+
+Grid: one step per output block.  The co-rank partitions arrive as scalar
+prefetch (SMEM) so each step dynamically slices its input windows; the
+padded runs carry a +inf-equivalent sentinel tail so window loads never
+run out of bounds.  Ties between runs resolve to run A (the *newer* LSM
+component), which makes the downstream newest-wins dedup a pure
+adjacent-key mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sentinel(dtype: jnp.dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def _cmp_swap(k0, k1, s0, s1, *payloads):
+    """Compare-exchange on (key, src) lexicographic order; src breaks ties
+    toward run A (src=0, the newer component)."""
+    swap = (k0 > k1) | ((k0 == k1) & (s0 > s1))
+    out_k = (jnp.where(swap, k1, k0), jnp.where(swap, k0, k1))
+    out_s = (jnp.where(swap, s1, s0), jnp.where(swap, s0, s1))
+    outs = []
+    for (p0, p1) in payloads:
+        outs.append((jnp.where(swap, p1, p0), jnp.where(swap, p0, p1)))
+    return out_k, out_s, outs
+
+
+def _bitonic_merge(keys, srcs, payloads):
+    """Merge two sorted halves of a 2S vector (ascending), stable on src."""
+    n = keys.shape[0]
+    half = n // 2
+    # reverse the second half -> single bitonic sequence
+    rev = lambda x: jnp.concatenate([x[:half], x[half:][::-1]])
+    keys, srcs = rev(keys), rev(srcs)
+    payloads = [rev(p) for p in payloads]
+    stride = half
+    while stride >= 1:
+        shape = (-1, 2, stride)
+        k = keys.reshape(shape)
+        s = srcs.reshape(shape)
+        ps = [p.reshape(shape) for p in payloads]
+        (k0, k1), (s0, s1), pout = _cmp_swap(
+            k[:, 0], k[:, 1], s[:, 0], s[:, 1],
+            *[(p[:, 0], p[:, 1]) for p in ps])
+        keys = jnp.stack([k0, k1], axis=1).reshape(n)
+        srcs = jnp.stack([s0, s1], axis=1).reshape(n)
+        payloads = [jnp.stack([p0, p1], axis=1).reshape(n) for (p0, p1) in pout]
+        stride //= 2
+    return keys, srcs, payloads
+
+
+def _merge_kernel(parts_ref, ka_ref, va_ref, kb_ref, vb_ref,
+                  ko_ref, vo_ref, so_ref, *, block: int):
+    k = pl.program_id(0)
+    ia = parts_ref[k, 0]
+    ib = parts_ref[k, 1]
+    # next-S-element windows from each run (sentinel tail makes this safe)
+    wka = ka_ref[pl.ds(ia, block)]
+    wva = va_ref[pl.ds(ia, block)]
+    wkb = kb_ref[pl.ds(ib, block)]
+    wvb = vb_ref[pl.ds(ib, block)]
+    keys = jnp.concatenate([wka, wkb])
+    vals = jnp.concatenate([wva, wvb])
+    srcs = jnp.concatenate([jnp.zeros((block,), jnp.int32),
+                            jnp.ones((block,), jnp.int32)])
+    mk, ms, (mv,) = _bitonic_merge(keys, srcs, [vals])
+    ko_ref[...] = mk[:block]
+    vo_ref[...] = mv[:block]
+    so_ref[...] = ms[:block]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def merge_path_merge(keys_a, vals_a, keys_b, vals_b, parts,
+                     block: int = 256, interpret: bool = True):
+    """Merge two sorted (key, value) runs.
+
+    ``parts``: (g+1, 2) int32 co-rank table from ``ops.merge_partitions``;
+    inputs must already carry a ``block``-length sentinel tail.  Returns
+    (keys, values, src) of length g*block; entries beyond len(a)+len(b)
+    are sentinels.
+    """
+    g = parts.shape[0] - 1
+    out_len = g * block
+    kdt, vdt = keys_a.dtype, vals_a.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec(keys_a.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(vals_a.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(keys_b.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(vals_b.shape, lambda k, parts: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda k, parts: (k,)),
+            pl.BlockSpec((block,), lambda k, parts: (k,)),
+            pl.BlockSpec((block,), lambda k, parts: (k,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((out_len,), kdt),
+            jax.ShapeDtypeStruct((out_len,), vdt),
+            jax.ShapeDtypeStruct((out_len,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(parts, keys_a, vals_a, keys_b, vals_b)

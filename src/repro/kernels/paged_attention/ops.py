@@ -1,0 +1,22 @@
+"""Public paged-attention API: head-layout plumbing around the kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .paged_attention import paged_attention_kernel
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                           interpret: bool = True):
+    """q: (B, H, D) single-token queries with G-major head order
+    (head = g*Hkv + kv, matching models/layers.py); pages as in the
+    kernel.  Returns (B, H, D)."""
+    B, H, D = q.shape
+    Hkv = k_pages.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, G, Hkv, D).transpose(0, 2, 1, 3)   # (B, Hkv, G, D)
+    out = paged_attention_kernel(qg, k_pages, v_pages,
+                                 jnp.asarray(block_tables, jnp.int32),
+                                 jnp.asarray(seq_lens, jnp.int32),
+                                 interpret=interpret)
+    return out.transpose(0, 2, 1, 3).reshape(B, H, D)

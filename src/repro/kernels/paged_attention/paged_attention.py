@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: paged decode attention (block-table indirection).
+
+The serving-side hot spot of the LSM-style KV pool (serving/kv_pool.py):
+each request's KV lives in non-contiguous fixed-size pages, located by a
+block table — reading it contiguously would require the compaction the
+pool schedules; the kernel instead follows the indirection, which is
+what makes lazy (greedy-scheduled) page reclamation affordable.
+
+Layout: pages are (n_pages, Hkv, page_tokens, D) so one (page, D) tile
+per kv-head is a contiguous dynamic slice.  Grid: (B, Hkv), one step per
+(sequence, kv head); the block table and sequence lengths ride in SMEM
+via scalar prefetch; the online-softmax state lives in registers across
+a ``fori_loop`` over the table.  On real TPUs the page loads become
+double-buffered DMAs; in interpret mode they are dynamic slices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lens_ref, q_ref, kp_ref, vp_ref, o_ref,
+                  *, page: int, max_pages: int, scale: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+    G, D = q.shape
+    n = lens_ref[b]
+
+    def body(i, carry):
+        m, l, acc = carry
+        pid = tables_ref[b, i]
+        k = kp_ref[pid, h].astype(jnp.float32)         # (page, D)
+        v = vp_ref[pid, h].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        valid = (pos < n) & (i < ((n + page - 1) // page))
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G, 1), jnp.float32)
+    a0 = jnp.zeros((G, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, max_pages, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_kernel(q, k_pages, v_pages, block_tables, seq_lens,
+                           interpret: bool = True):
+    """q: (B, Hkv, G, D); k/v_pages: (n_pages, Hkv, page, D);
+    block_tables: (B, max_pages) int32; seq_lens: (B,) int32.
+    Returns (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    n_pages, _, page, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    scale = D ** -0.5
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, *_: (b, h, 0, 0)),
+            pl.BlockSpec(k_pages.shape, lambda b, h, *_: (0, 0, 0, 0)),
+            pl.BlockSpec(v_pages.shape, lambda b, h, *_: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, *_: (b, h, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, max_pages=max_pages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention: gather the pages into a
+contiguous cache, then dense masked attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Same signature as the kernel; returns (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    _, _, page, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+
+    def per_seq(qb, table, n):
+        k = k_pages[table]                     # (max_pages, Hkv, page, D)
+        v = v_pages[table]
+        k = k.transpose(1, 0, 2, 3).reshape(Hkv, max_pages * page, D)
+        v = v.transpose(1, 0, 2, 3).reshape(Hkv, max_pages * page, D)
+        s = jnp.einsum("hgd,hkd->hgk", qb.astype(jnp.float32),
+                       k.astype(jnp.float32)) * (D ** -0.5)
+        mask = jnp.arange(max_pages * page) < n
+        s = jnp.where(mask[None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("hgk,hkd->hgd", p, v.astype(jnp.float32))
+
+    out = jax.vmap(per_seq)(q, block_tables, seq_lens)
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+"""ssd kernel package."""
+from . import ops, ref

@@ -1,0 +1,30 @@
+"""Public SSD API: padding/reshaping around the chunked-scan kernel, plus
+the single-step decode update used by serve_step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ssd import ssd_scan
+
+
+def ssd(x, b, c, alog, dt, chunk: int = 64, interpret: bool = True):
+    """Chunked SSD scan with automatic length padding.
+
+    x: (BH, L, P); b, c: (BH, L, N); alog, dt: (BH, L) -> (BH, L, P).
+    """
+    BH, L, P = x.shape
+    pad = (-L) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, b, c, alog, dt = map(zf, (x, b, c, alog, dt))
+    y = ssd_scan(x, b, c, alog, dt, chunk=chunk, interpret=interpret)
+    return y[:, :L]
+
+
+def ssd_decode_step(state, x_t, b_t, c_t, alog_t, dt_t):
+    """One recurrent step (decode):   state: (BH, N, P), x_t: (BH, P),
+    b_t/c_t: (BH, N), alog_t/dt_t: (BH,).  Returns (state', y_t)."""
+    decay = jnp.exp(alog_t)[:, None, None]
+    state = decay * state + (dt_t[:, None] * b_t)[:, :, None] * x_t[:, None, :]
+    y = jnp.einsum("bn,bnp->bp", c_t, state)
+    return state, y.astype(x_t.dtype)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+Recurrence per (batch, head):   h_t = a_t * h_{t-1} + dt_t * B_t x_t^T,
+y_t = C_t h_t  — with a_t = exp(A * dt_t) a per-step scalar decay.
+
+The GPU reference implementation leans on warp-level scans; the TPU
+adaptation uses the SSD block decomposition: a sequential grid over
+chunks with the (N, P) inter-chunk state in VMEM scratch; within a chunk
+everything is dense matmuls (MXU) against a causal decay mask — no
+per-step recurrence at all.
+
+Grid: (B*H, n_chunks), chunk dim sequential so the state carries across.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, alog_ref, dt_ref, y_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+    alog = alog_ref[0].astype(jnp.float32)    # (Q,)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+
+    cum = jnp.cumsum(alog)                    # inclusive within-chunk decay
+    total = cum[-1]
+    # intra-chunk: y_t += sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t.B_s) x_s
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = rows >= cols
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    m = jnp.where(mask, cb * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot(m, x, preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += exp(cum_t) * C_t @ state
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot(
+        c, state_ref[...], preferred_element_type=jnp.float32)
+    # state' = exp(total) * state + sum_s exp(total - cum_s) dt_s B_s x_s^T
+    w = (jnp.exp(total - cum) * dt)[:, None] * b   # (Q, N)
+    state_ref[...] = jnp.exp(total) * state_ref[...] + jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, b, c, alog, dt, chunk: int = 64, interpret: bool = True):
+    """x: (BH, L, P); b, c: (BH, L, N); alog, dt: (BH, L).
+
+    L must be a multiple of ``chunk`` (ops.py pads).  Returns y: (BH, L, P).
+    """
+    BH, L, P = x.shape
+    N = b.shape[-1]
+    assert L % chunk == 0
+    grid = (BH, L // chunk)
+
+    def tmap(bh, ci):
+        return (bh, ci, 0)
+
+    def smap(bh, ci):
+        return (bh, ci)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), tmap),
+            pl.BlockSpec((1, chunk, N), tmap),
+            pl.BlockSpec((1, chunk, N), tmap),
+            pl.BlockSpec((1, chunk), smap),
+            pl.BlockSpec((1, chunk), smap),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), tmap),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, alog, dt)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh and record the roofline inputs.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init), which is why this module sets XLA_FLAGS at the very
+top.  Everything else imports lazily below.
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --all --resume   # skip existing artifacts
+
+Artifacts: artifacts/dryrun/{arch}__{shape}__{mesh}.json with
+memory_analysis, cost_analysis, per-collective bytes and roofline terms —
+benchmarks/roofline.py and EXPERIMENTS.md are generated from these.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_BF16_FLOPS,
+                               make_production_mesh)
+from repro.models import cache_logical_axes, param_logical_axes
+from repro.models.config import ModelConfig
+from repro.train.steps import (batch_shardings, input_specs, make_decode_step,
+                               make_train_step)
+from repro.distributed.sharding import default_rules, tree_shardings
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _tree_bytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(tree))
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh):
+    """Build + lower the cell's step function.  Returns (lowered, meta)."""
+    shape = SHAPES[shape_name]
+    rules = default_rules(mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from repro.train.steps import effective_microbatches
+        mb = effective_microbatches(cfg, mesh, shape.global_batch)
+        step_fn, state_shardings, abstract_state = make_train_step(
+            cfg, mesh, microbatches=mb)
+        state = abstract_state()
+        b_shard = batch_shardings(cfg, mesh, rules, specs)
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_shardings, b_shard),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,),
+            ).lower(state, specs)
+        arg_bytes = _tree_bytes(state) + _tree_bytes(specs)
+    elif shape.kind == "prefill":
+        from repro.train.steps import make_prefill_step
+        prefill_fn, p_shard = make_prefill_step(cfg, mesh, shape.seq_len)
+        from repro.models import abstract_params, init_cache
+        p_abs = abstract_params(cfg)
+        b_shard = batch_shardings(cfg, mesh, rules, specs)
+        c_abs = jax.eval_shape(lambda: init_cache(
+            cfg, shape.global_batch, shape.seq_len))
+        c_shard = tree_shardings(mesh, rules, c_abs, cache_logical_axes(cfg))
+        with mesh:
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=((c_shard, None)),
+            ).lower(p_abs, specs)
+        arg_bytes = _tree_bytes(p_abs) + _tree_bytes(specs)
+    else:  # decode
+        decode_fn, p_shard, cache_sh_fn = make_decode_step(cfg, mesh)
+        from repro.models import abstract_params
+        p_abs = abstract_params(cfg)
+        cache = specs["cache"]
+        c_shard = cache_sh_fn(shape.global_batch, shape.seq_len)
+        tok = specs["tokens"]
+        with mesh:
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_shard, c_shard, None),
+                out_shardings=(c_shard, None),
+                donate_argnums=(1,),
+            ).lower(p_abs, cache, tok)
+        arg_bytes = _tree_bytes(p_abs) + _tree_bytes(cache)
+    return lowered, {"global_arg_bytes": arg_bytes}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path = ARTIFACTS, verbose: bool = True,
+             cfg_overrides: dict | None = None, tag: str = "") -> dict:
+    """Lower+compile one cell.  ``cfg_overrides`` (dataclasses.replace
+    kwargs) + ``tag`` support the §Perf hillclimb variants."""
+    import dataclasses
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "status": "skipped", "skip_reason": why,
+              "variant": tag or "baseline",
+              "overrides": cfg_overrides or {}}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    if not ok:
+        out_path.write_text(json.dumps(result, indent=2))
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(cfg, shape_name, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        mem = _mem_analysis_dict(compiled)
+        # Loop-aware cost model: cost_analysis() counts while bodies once,
+        # so scanned layers / grad-accumulation vanish from it.  analyze()
+        # multiplies by known_trip_count along the call graph.
+        from repro.launch.hlo_cost import analyze
+        totals = analyze(compiled.as_text())
+        flops_per_dev = totals.flops
+        bytes_per_dev = totals.traffic_bytes
+
+        terms = roofline_terms(
+            global_flops=flops_per_dev * n_dev,
+            global_bytes=bytes_per_dev * n_dev,
+            collective_bytes_per_dev=float(totals.collective_bytes),
+            n_devices=n_dev, peak_flops=PEAK_BF16_FLOPS, hbm_bw=HBM_BW,
+            ici_bw=ICI_BW)
+
+        from repro.models import param_count
+        N = param_count(cfg)
+        # MODEL_FLOPS = 6*N_active*D (train: fwd+bwd) or 2*N_active*D
+        # (inference: fwd only); D = tokens processed by this step.
+        D = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        mult = 6.0 if shape.kind == "train" else 2.0
+        model_flops = mult * cfg.n_active_params() * D
+
+        result.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops_per_device": flops_per_dev,
+            "bytes_per_device": bytes_per_dev,
+            "cost_analysis_flops_flat": float(cost.get("flops", 0.0)),
+            "cost_analysis_bytes_flat": float(cost.get("bytes accessed", 0.0)),
+            "collectives": {"total_bytes": totals.collective_bytes,
+                            "per_op_bytes": dict(totals.per_collective),
+                            "per_op_count": dict(totals.per_collective_count)},
+            "memory_analysis": mem,
+            "global_arg_bytes": meta["global_arg_bytes"],
+            "arg_bytes_per_device_est": meta["global_arg_bytes"] / n_dev,
+            "roofline": terms,
+            "model_flops_6nd": model_flops,
+            "useful_flops_ratio": (model_flops / (flops_per_dev * n_dev)
+                                   if flops_per_dev else None),
+            "n_params": N,
+            "n_active_params": cfg.n_active_params(),
+        })
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
+                  f"dominant={terms['dominant']})", flush=True)
+            if mem:
+                print(f"  memory_analysis: {mem}", flush=True)
+            print(f"  cost: flops/dev={flops_per_dev:.3e} "
+                  f"bytes/dev={bytes_per_dev:.3e} "
+                  f"coll_bytes/dev={totals.collective_bytes:.3e}", flush=True)
+    except Exception as e:
+        result.update({"status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]})
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+                  f"FAILED: {e!r}", flush=True)
+    result["wall_s"] = round(time.time() - t0, 2)
+    out_path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose artifact already exists and is ok")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                p = out_dir / f"{arch}__{shape}__{mk}.json"
+                if args.resume and p.exists():
+                    prev = json.loads(p.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        continue
+                r = run_cell(arch, shape, mk, out_dir)
+                n_ok += r["status"] == "ok"
+                n_err += r["status"] == "error"
+                n_skip += r["status"] == "skipped"
+    print(f"[dryrun] done: ok={n_ok} skipped={n_skip} errors={n_err}",
+          flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

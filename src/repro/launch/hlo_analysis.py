@@ -1,0 +1,106 @@
+"""Post-compile HLO analysis: collective-byte accounting + roofline terms.
+
+``cost_analysis()`` has no collective numbers, so we parse the optimized
+HLO text: build a {value name -> byte size} table from every instruction's
+result type, then sum *operand* sizes for each collective op (the bytes
+that actually cross links).  Async pairs are counted once via their
+``-start`` halves.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|[^\s]+)\s+([\w\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    per_op_bytes: dict[str, int] = field(default_factory=dict)
+    per_op_count: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.per_op_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "per_op_bytes": dict(self.per_op_bytes),
+                "per_op_count": dict(self.per_op_count)}
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes for every collective in the optimized module."""
+    sizes: dict[str, int] = {}
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base not in COLLECTIVES or opcode.endswith("-done"):
+            continue
+        # operand list: %names inside the first (...) after the opcode
+        rest = line[m.end():]
+        paren = rest.find("(")
+        operands = 0
+        if paren >= 0:
+            depth, j = 0, paren
+            for j in range(paren, len(rest)):
+                if rest[j] == "(":
+                    depth += 1
+                elif rest[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            arglist = rest[paren + 1:j]
+            for on in re.findall(r"%([\w\.\-]+)", arglist):
+                operands += sizes.get(on, 0)
+        if operands == 0:
+            # fallback: result size (all-gather result >= operand; fine as
+            # a conservative bound when operands were not resolvable)
+            operands = sizes[name]
+        stats.per_op_bytes[base] = stats.per_op_bytes.get(base, 0) + operands
+        stats.per_op_count[base] = stats.per_op_count.get(base, 0) + 1
+    return stats
+
+
+def roofline_terms(*, global_flops: float, global_bytes: float,
+                   collective_bytes_per_dev: float, n_devices: int,
+                   peak_flops: float, hbm_bw: float, ici_bw: float) -> dict:
+    """The three roofline terms, in seconds (assignment formulas)."""
+    compute_s = global_flops / (n_devices * peak_flops)
+    memory_s = global_bytes / (n_devices * hbm_bw)
+    collective_s = collective_bytes_per_dev / ici_bw
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant}

@@ -1,0 +1,267 @@
+"""Call-graph-aware cost model over optimized HLO text.
+
+``Compiled.cost_analysis()`` counts each ``while`` body ONCE — a
+scanned-129-layer train step with 8 grad-accumulation microbatches is
+under-counted by ~3 orders of magnitude, and collectives inside the loop
+are likewise invisible to a flat parse.  This module parses the module
+text into computations, assigns per-instruction costs, recovers loop trip
+counts from each ``while`` condition, and propagates multipliers down the
+call graph (fusion/call/while/conditional).
+
+Costs:
+  * dot           — 2 * numel(result) * prod(contracting dims)
+  * elementwise   — numel(result)
+  * reduce/sort/… — numel(largest operand)
+  * collectives   — operand bytes (the cross-link traffic), per family
+  * traffic       — sum of operand+result bytes per instruction (an HBM
+                    touch model; reported separately from cost_analysis's
+                    "bytes accessed")
+
+This is an analytic roofline input, not a simulator; it is exact for the
+matmul-dominated graphs we lower and approximate for elementwise tails.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast",
+               "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\{\}:\d]+))\s+"
+    r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                       r"(?:%([\w\.\-]+)|\{([^}]*)\})")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_dims(type_str: str):
+    """[(elem_bytes, numel)] for a (possibly tuple) HLO type."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((_DTYPE_BYTES[dt], n, tuple(int(d) for d in dims.split(","))
+                    if dims else ()))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(b * n for b, n, _ in _shape_dims(type_str))
+
+
+def _numel(type_str: str) -> int:
+    return sum(n for _, n, _ in _shape_dims(type_str))
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: list[str] = field(default_factory=list)
+    called: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict[str, str] = field(default_factory=dict)   # value -> type str
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and "->" in stripped:
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        rest = line[m.end():]
+        # operand names: inside the first balanced paren group
+        depth, j = 1, 0
+        for j, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        arglist = rest[:j]
+        operands = re.findall(r"%([\w\.\-]+)", arglist)
+        called = []
+        for g1, g2 in _CALLS_RE.findall(line):
+            if g1:
+                called.append(g1)
+            else:
+                called += re.findall(r"%([\w\.\-]+)", g2)
+        ins = Instr(name, type_str, opcode, line, operands, called)
+        cur.instrs.append(ins)
+        cur.shapes[name] = type_str
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    out_n = _numel(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * out_n  # degenerate
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    lhs = shapes.get(ins.operands[0], "")
+    dims = _shape_dims(lhs)
+    k = 1
+    if dims and dims[0][2]:
+        shape = dims[0][2]
+        for d in cdims:
+            if d < len(shape):
+                k *= shape[d]
+    return 2.0 * out_n * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count of a canonical jax scan/fori while-loop condition."""
+    consts = [int(c) for i in cond.instrs for c in _CONST_RE.findall(i.line)]
+    return max(consts) if consts else 1
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict[str, float] = field(default_factory=dict)
+    per_collective_count: dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0,
+            include_traffic: bool = True):
+        self.flops += other.flops * mult
+        if include_traffic:
+            self.traffic_bytes += other.traffic_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0) + v * mult
+        for k, v in other.per_collective_count.items():
+            self.per_collective_count[k] = \
+                self.per_collective_count.get(k, 0) + v * mult
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "copy-start", "copy-done", "after-all"}
+
+
+def analyze(text: str) -> CostTotals:
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back to a computation never called by others
+        called_by = set()
+        for c in comps.values():
+            for i in c.instrs:
+                called_by.update(i.called)
+        roots = [n for n in comps if n not in called_by]
+        entry = roots[0] if roots else (next(iter(comps)) if comps else None)
+    if entry is None:
+        return CostTotals()
+    memo: dict[str, CostTotals] = {}
+
+    def comp_cost(name: str) -> CostTotals:
+        if name in memo:
+            return memo[name]
+        memo[name] = CostTotals()  # break cycles defensively
+        c = comps.get(name)
+        if c is None:
+            return memo[name]
+        t = CostTotals()
+        for ins in c.instrs:
+            op = ins.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            # flops
+            if op == "dot":
+                t.flops += _dot_flops(ins, c.shapes)
+            elif op == "convolution":
+                t.flops += 2.0 * _numel(ins.type_str) * 8  # tiny convs only
+            elif op in ("fusion", "call", "while", "conditional", "map",
+                        "reduce", "sort", "scatter", "reduce-window"):
+                pass  # handled via called computations / below
+            elif op not in _SKIP_TRAFFIC:
+                t.flops += _numel(ins.type_str)
+            # traffic model: operands + result once per execution.  A
+            # fusion's internals stay on-chip (registers/VMEM), so fused
+            # computations contribute traffic only at their call site —
+            # this is what makes the HBM term TPU-shaped rather than an
+            # unfused-CPU artifact.
+            if op not in _SKIP_TRAFFIC and op not in ("call", "while",
+                                                      "conditional"):
+                t.traffic_bytes += _shape_bytes(ins.type_str)
+                for on in ins.operands:
+                    if on in c.shapes:
+                        t.traffic_bytes += _shape_bytes(c.shapes[on])
+            # collectives
+            if base in COLLECTIVES and not op.endswith("-done"):
+                nbytes = sum(_shape_bytes(c.shapes[on])
+                             for on in ins.operands if on in c.shapes)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(ins.type_str)
+                t.collective_bytes += nbytes
+                t.per_collective[base] = t.per_collective.get(base, 0) + nbytes
+                t.per_collective_count[base] = \
+                    t.per_collective_count.get(base, 0) + 1
+            # recurse
+            if op == "while":
+                body = cond = None
+                m = re.search(r"body=%([\w\.\-]+)", ins.line)
+                mc = re.search(r"condition=%([\w\.\-]+)", ins.line)
+                if m:
+                    body = m.group(1)
+                if mc:
+                    cond = mc.group(1)
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    t.add(comp_cost(body), trips)
+                if cond in comps:
+                    t.add(comp_cost(cond), trips)
+            elif ins.called:
+                for cn in ins.called:
+                    t.add(comp_cost(cn), 1.0,
+                          include_traffic=(op != "fusion"))
+        memo[name] = t
+        return t
+
+    return comp_cost(entry)

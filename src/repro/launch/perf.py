@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimb harness: lower+compile variants of a cell and diff
+their roofline terms against the baseline artifact.
+
+    python -m repro.launch.perf --arch llama3-405b --shape train_4k \
+        --tag remat_dots --set remat=dots
+
+Results land in artifacts/perf/; EXPERIMENTS.md §Perf is written from
+the recorded hypothesis->before->after chains.
+"""
+import argparse
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "perf"
+BASELINES = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        overrides[k] = _parse_val(v)
+
+    res = run_cell(args.arch, args.shape, args.mesh, out_dir=ARTIFACTS,
+                   cfg_overrides=overrides, tag=args.tag)
+    base_path = BASELINES / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    if base_path.exists() and res.get("status") == "ok":
+        base = json.loads(base_path.read_text())
+        if base.get("status") == "ok":
+            br, vr = base["roofline"], res["roofline"]
+            print("--- delta vs baseline ---")
+            for k in ("compute_s", "memory_s", "collective_s"):
+                d = vr[k] / br[k] - 1 if br[k] else float("nan")
+                print(f"  {k}: {br[k]:.4g} -> {vr[k]:.4g}  ({d:+.1%})")
+            bb = max(br.get(k, 0) for k in
+                     ("compute_s", "memory_s", "collective_s"))
+            vb = max(vr.get(k, 0) for k in
+                     ("compute_s", "memory_s", "collective_s"))
+            print(f"  bound: {bb:.4g} -> {vb:.4g}  ({vb/bb-1:+.1%})")
+    return 0 if res.get("status") == "ok" else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,44 @@
+"""Serving launcher: batched decode behind the paged-KV pool with
+two-phase-calibrated admission.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_smoke
+from repro.models import init_params
+from repro.serving import BatchServer, ServerConfig, two_phase_admission
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCHS)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--pages", type=int, default=96)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--testing-steps", type=int, default=150)
+    ap.add_argument("--running-steps", type=int, default=300)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServerConfig(batch_size=args.batch_size, max_len=args.max_len,
+                        n_pages=args.pages, page_tokens=args.page_tokens,
+                        max_new_tokens=args.max_new_tokens)
+    report = two_phase_admission(
+        lambda: BatchServer(cfg, params, scfg),
+        testing_steps=args.testing_steps,
+        running_steps=args.running_steps)
+    print(f"[serve] arch={cfg.name}")
+    for k, v in report.items():
+        print(f"[serve]   {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

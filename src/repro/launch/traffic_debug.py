@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Profiling aid: print the top-N HBM-traffic contributors of a cell's
+optimized HLO (instruction-level, multiplied by loop trip counts) —
+the 'profile' the §Perf loop reasons from on a CPU-only dry-run host.
+
+    python -m repro.launch.traffic_debug --arch llama3-405b \
+        --shape decode_32k [--top 15] [--set k=v ...]
+"""
+import argparse
+from collections import defaultdict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--set", action="append", default=[])
+    args = ap.parse_args()
+
+    import dataclasses
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.hlo_cost import (parse_module, _shape_bytes,
+                                       _SKIP_TRAFFIC, _TRIP_RE, COLLECTIVES)
+    import re
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except (ValueError, TypeError):
+                pass
+        overrides[k] = v
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, _ = lower_cell(cfg, args.shape, mesh)
+    text = lowered.compile().as_text()
+    comps, entry = parse_module(text)
+
+    # compute each computation's execution multiplier by propagating trip
+    # counts down the call graph
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        c = comps.get(name)
+        if c is None:
+            continue
+        for ins in c.instrs:
+            trips = 1.0
+            if ins.opcode == "while":
+                m = _TRIP_RE.search(ins.line)
+                if m:
+                    trips = float(m.group(1))
+            for cn in ins.called:
+                mult[cn] += mult[name] * trips
+                if cn not in seen:
+                    seen.add(cn)
+                    order.append(cn)
+
+    rows = []
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for ins in c.instrs:
+            if ins.opcode in _SKIP_TRAFFIC or ins.opcode in (
+                    "call", "while", "conditional"):
+                continue
+            b = _shape_bytes(ins.type_str)
+            for on in ins.operands:
+                if on in c.shapes:
+                    b += _shape_bytes(c.shapes[on])
+            if ins.opcode == "fusion":
+                pass  # call-site traffic only; ok
+            rows.append((b * m, b, m, ins.opcode, name, ins.name,
+                         ins.line.strip()[:140]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total traffic/device: {total:.3e} bytes")
+    for t, b, m, op, comp, name, line in rows[:args.top]:
+        print(f"  {t:.3e}  ({b:.2e} x{m:.0f})  {op:14s} {comp}/{name}")
+        print(f"      {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .config import ModelConfig, SHAPES, ShapeCell, cell_applicable
+from .model import (abstract_params, cache_logical_axes, decode_step,
+                    init_cache, init_params, param_count,
+                    param_logical_axes, prefill, train_loss)
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeCell", "cell_applicable",
+    "abstract_params", "cache_logical_axes", "decode_step", "init_cache",
+    "init_params", "param_count", "param_logical_axes", "prefill",
+    "train_loss",
+]

@@ -1,0 +1,249 @@
+"""Model configuration for the architecture zoo.
+
+One ``ModelConfig`` describes any member of the six supported families:
+
+  * ``dense``   — decoder-only transformer (GQA/MQA attention + MLP)
+  * ``moe``     — decoder-only transformer with top-k routed experts
+  * ``ssm``     — attention-free Mamba2 (SSD) stack
+  * ``hybrid``  — Mamba2 backbone with a *shared* attention block applied
+                  every ``attn_every`` layers (Zamba2 style)
+  * ``encdec``  — encoder–decoder transformer over a stubbed modality
+                  frontend (Whisper style: precomputed frame embeddings)
+  * ``vlm``     — prefix-LM decoder over stubbed patch embeddings +
+                  text tokens (PaliGemma style)
+
+Configs are pure data; the functional model in ``model.py`` interprets
+them.  ``reduced()`` produces the CPU-smoke-test variant of the same
+family (small widths/depths, tiny vocab, few experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+
+    # -- transformer core ---------------------------------------------------
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    d_ff: int = 0
+    vocab: int = 0
+    activation: str = "swiglu"       # swiglu | geglu | relu2 | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0      # gemma-style tanh soft-capping (0 = off)
+    scale_embeddings: bool = False   # gemma-style sqrt(d_model) embed scale
+
+    # -- MoE ------------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0        # DeepSeek/Kimi-style always-on experts
+    capacity_factor: float = 1.25
+    router_jitter: bool = False
+
+    # -- SSM (Mamba2 / SSD) ---------------------------------------------------
+    ssm_state: int = 0               # N, the SSD state dimension
+    ssm_head_dim: int = 64           # P
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_conv: int = 4                # causal depthwise conv width
+    ssm_chunk: int = 64              # SSD chunk length
+
+    # -- hybrid (Zamba2) --------------------------------------------------------
+    attn_every: int = 6              # shared attention block cadence
+
+    # -- encoder–decoder (Whisper) ---------------------------------------------
+    n_enc_layers: int = 0
+    enc_frames: int = 1500           # stub frontend: precomputed frame embeds
+
+    # -- VLM (PaliGemma) ----------------------------------------------------------
+    n_patches: int = 256             # stub frontend: precomputed patch embeds
+
+    # -- numerics / execution ----------------------------------------------------
+    dtype: str = "bfloat16"          # activation/param compute dtype
+    remat: str = "full"              # none | dots | full
+    scan_layers: bool = True
+    scan_group: int = 0              # >0: two-level remat, this many groups
+    microbatches: int = 1            # grad-accumulation steps per train step
+    accum_dtype: str = "float32"     # grad accumulator dtype
+    attn_causal_skip: bool = False   # unrolled triangular attention schedule
+    seq_shard_activations: bool = False   # Megatron-style sequence parallel
+    moe_combine_dtype: str = "float32"    # EP psum dtype (bf16 = half bytes)
+    use_kernels: bool = False        # Pallas (TPU target / interpret) vs jnp
+    optimizer: str = "adamw"         # adamw | adafactor (set per scale)
+
+    # ------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode state => can run the long_500k cell."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all zoo members autoregressively decode
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Total parameter count (used for 6ND model-FLOPs)."""
+        return sum(int(jnp.prod(jnp.array(s))) for s in self._param_shapes())
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: top_k + shared experts only)."""
+        total = 0
+        for tag, shape in self._tagged_param_shapes():
+            n = 1
+            for d in shape:
+                n *= d
+            if tag == "expert":
+                n = n // max(self.n_experts, 1) * (self.top_k + self.n_shared_experts)
+            total += n
+        return total
+
+    def _param_shapes(self):
+        return [s for _, s in self._tagged_param_shapes()]
+
+    def _tagged_param_shapes(self):
+        """(tag, shape) pairs; tag 'expert' marks routed-expert weights."""
+        E, F, V = self.d_model, self.d_ff, self.vocab
+        H, Hkv, Dh = self.n_heads, self.n_kv_heads, self.head_dim
+        L = self.n_layers
+        out = []
+        if V:
+            out.append(("dense", (V, E)))
+            if not self.tie_embeddings:
+                out.append(("dense", (V, E)))
+        glu = self.activation in ("swiglu", "geglu")
+
+        def attn(layers):
+            out.append(("dense", (layers, E, H * Dh)))
+            out.append(("dense", (layers, E, Hkv * Dh)))
+            out.append(("dense", (layers, E, Hkv * Dh)))
+            out.append(("dense", (layers, H * Dh, E)))
+
+        def mlp(layers, ff):
+            k = 2 if glu else 1
+            out.append(("dense", (layers, k, E, ff)))
+            out.append(("dense", (layers, ff, E)))
+
+        def ssm(layers):
+            din, N, Hs = self.d_inner, self.ssm_state, self.ssm_heads
+            out.append(("dense", (layers, E, 2 * din + 2 * N + Hs)))  # in_proj
+            out.append(("dense", (layers, din + 2 * N, self.ssm_conv)))
+            out.append(("dense", (layers, din, E)))                    # out_proj
+            out.append(("dense", (layers, 3, Hs)))                     # A/dt/D
+
+        if self.family in ("dense", "vlm"):
+            attn(L)
+            mlp(L, F)
+        elif self.family == "moe":
+            attn(L)
+            out.append(("dense", (L, E, self.n_experts)))              # router
+            k = 2 if glu else 1
+            out.append(("expert", (L, self.n_experts, k, E, F)))
+            out.append(("expert", (L, self.n_experts, F, E)))
+            if self.n_shared_experts:
+                mlp(L, F * self.n_shared_experts)
+        elif self.family == "ssm":
+            ssm(L)
+        elif self.family == "hybrid":
+            ssm(L)
+            attn(1)                                                     # shared
+            mlp(1, F if F else 4 * E)
+        elif self.family == "encdec":
+            attn(L)            # decoder self
+            attn(L)            # decoder cross
+            mlp(L, F)
+            attn(self.n_enc_layers)
+            mlp(self.n_enc_layers, F)
+        return out
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """CPU smoke-test variant: same family/topology, tiny sizes."""
+        small = dict(
+            n_layers=min(self.n_layers, 2) or 2,
+            d_model=64,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=(min(self.n_kv_heads, 2) or 0) if self.n_heads else 0,
+            head_dim=16 if self.n_heads else 0,
+            d_ff=128 if self.d_ff else 0,
+            vocab=min(self.vocab, 256) if self.vocab else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            attn_every=2,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_frames=16,
+            n_patches=8,
+            dtype="float32",
+            remat="none",
+            scan_group=0,
+            microbatches=1,
+            accum_dtype="float32",
+            name=self.name + "-smoke",
+            optimizer="adamw",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_serving(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 500k-token decode is "
+                       "quadratic-prefill / KV-resident; excluded per "
+                       "assignment (DESIGN.md SArch-applicability)")
+    return True, ""

@@ -1,0 +1,255 @@
+"""Shared neural-net layers (functional, pytree params).
+
+Everything here is pure jnp + lax so the dry-run lowers through XLA on
+any backend.  The attention entry point mirrors the Pallas flash kernel's
+online-softmax math (kernels/attention) — a KV-blocked ``lax.scan`` keeps
+live memory O(S * block) instead of O(S^2), which is what lets the 32k
+prefill cells compile within v5e HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# -- norms -------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, scale, bias=None, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm(kind: str, x, scale):
+    return rms_norm(x, scale) if kind == "rmsnorm" else layer_norm(x, scale)
+
+
+# -- activations --------------------------------------------------------------
+def activate(kind: str, gate, up=None):
+    """GLU-style activations take (gate, up); plain ones take a single arg."""
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "relu2":
+        r = jax.nn.relu(gate)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def is_glu(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+# -- rotary embeddings ----------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)          # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool = True,
+                        prefix_len: int = 0, q_offset: int = 0,
+                        block: int = 1024, q_block: int = 1024,
+                        causal_skip: bool = False):
+    """Q- and KV-blocked online-softmax attention.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D).  ``prefix_len`` marks a
+    bidirectional prefix (prefix-LM / VLM image tokens); ``q_offset`` is
+    the absolute position of q[0] (chunked prefill).  Matches
+    ``kernels/attention`` math; lives here so dry-runs lower pure XLA.
+    The live score tile is (B, H, q_block, block) regardless of Sq/Sk.
+
+    ``causal_skip`` unrolls the q-chunk loop in Python so each chunk only
+    touches kv[:chunk_end] — the triangular schedule the Pallas kernel
+    gets from ``pl.when``, here traded against a ~nq-times-larger layer
+    HLO.  Halves causal-attention flops/traffic (§Perf lever).
+    """
+    B, H, Sq, D = q.shape
+    if Sq > q_block:
+        nq = -(-Sq // q_block)
+        qpad = nq * q_block - Sq
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0))) if qpad else q
+        if causal_skip and causal:
+            outs = []
+            for qi in range(nq):
+                q_i = qp[:, :, qi * q_block:(qi + 1) * q_block]
+                hi = min(q_offset + (qi + 1) * q_block, k.shape[2])
+                hi = max(hi, prefix_len)
+                hi = -(-hi // block) * block
+                hi = min(hi, -(-k.shape[2] // block) * block, k.shape[2])
+                outs.append(flash_attention_jnp(
+                    q_i, k[:, :, :hi], v[:, :, :hi], causal=causal,
+                    prefix_len=prefix_len,
+                    q_offset=q_offset + qi * q_block, block=block,
+                    q_block=q_block))
+            out = jnp.concatenate(outs, axis=2)
+            return out[:, :, :Sq]
+        qs = qp.reshape(B, H, nq, q_block, D).transpose(2, 0, 1, 3, 4)
+
+        def qstep(_, inp):
+            q_i, qi = inp
+            o = flash_attention_jnp(
+                q_i, k, v, causal=causal, prefix_len=prefix_len,
+                q_offset=q_offset + qi * q_block, block=block,
+                q_block=q_block)
+            return None, o
+
+        _, outs = jax.lax.scan(qstep, None,
+                               (qs, jnp.arange(nq, dtype=jnp.int32)))
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, nq * q_block, D)
+        return out[:, :, :Sq]
+    _, Hkv, Sk, _ = k.shape
+    G = H // Hkv
+    scale = D ** -0.5
+    # grouped layout: never materialize repeated K/V (a G-fold HBM-traffic
+    # tax for GQA) — the einsums carry the group dim instead.  G-MAJOR
+    # head order (head = g*Hkv + kv) so a model-axis sharding of H maps
+    # onto the G dim and the reshape never forces a re-gather of q.
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, G, Hkv, Sq, D)
+
+    nb = -(-Sk // block)
+    pad = nb * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(B, Hkv, nb, block, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nb, block, D).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        k_i, v_i, ki = inputs
+        s = jnp.einsum("bghqd,bhkd->bghqk", qf, k_i,
+                       preferred_element_type=jnp.float32)
+        kv_pos = ki * block + jnp.arange(block)
+        valid = kv_pos < Sk
+        if causal:
+            ok = (q_pos[:, None] >= kv_pos[None, :]) | \
+                (kv_pos < prefix_len)[None, :]
+            valid = valid[None, :] & ok
+        else:
+            valid = jnp.broadcast_to(valid[None, :], (Sq, block))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        # all-masked rows keep m == NEG_INF; zero their probabilities
+        # explicitly so exp(NEG_INF - NEG_INF) cannot leak mass.
+        p = jnp.exp(s - m_new[..., None]) * \
+            valid[None, None, None].astype(jnp.float32)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bghqk,bhkd->bghqd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, G, Hkv, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, G, Hkv, Sq), jnp.float32)
+    a0 = jnp.zeros((B, G, Hkv, Sq, D), jnp.float32)
+    # checkpoint the block step: backward recomputes the (Sq, block) score
+    # tile from q/k instead of saving it — the flash-attention memory law.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0),
+        (kb, vb, jnp.arange(nb, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def decode_attention_jnp(q, k_cache, v_cache, cache_len):
+    """Single-token attention over a (possibly partially filled) cache.
+
+    q: (B, H, 1, D); caches: (B, Hkv, S, D); cache_len: valid prefix length
+    (scalar int32).  Softmax/scores in fp32; invalid tail masked out.
+    Grouped einsums — the cache is never materialized H/Hkv-fold.
+    """
+    B, H, T, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, G, Hkv, T, D).astype(jnp.float32)
+    # one shared f32 view of the cache (measured cheaper than per-dot
+    # implicit upconversion under XLA:CPU legalization; on TPU the Pallas
+    # decode kernel is the native-bf16 answer)
+    s = jnp.einsum("bghtd,bhkd->bghtk", qf,
+                   k_cache.astype(jnp.float32)) * (D ** -0.5)
+    valid = jnp.arange(S) < cache_len
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bghtk,bhkd->bghtd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, T, D).astype(q.dtype)
+
+
+# -- misc ---------------------------------------------------------------------
+def softcap(logits, cap: float):
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K).
+
+    ``state``: (B, K-1, C) left context for decode; returns (y, new_state).
+    """
+    B, S, C = x.shape
+    K = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]
+    windows = xp[:, idx]                              # (B, S, K, C)
+    y = jnp.einsum("bskc,ck->bsc", windows.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    new_state = xp[:, S:]
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean token cross-entropy; logits fp32-normalized over last axis."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean(), nll.size
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom, denom

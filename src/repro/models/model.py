@@ -1,0 +1,747 @@
+"""The architecture zoo as one functional model.
+
+Parameters are nested dicts of arrays; ``param_specs`` is the single
+source of truth for shapes, logical sharding axes and initializers, so
+``init_params`` (real arrays), ``abstract_params`` (ShapeDtypeStructs for
+the dry-run) and ``param_logical_axes`` (for pjit shardings) can never
+drift apart.
+
+Entry points (all pure functions of (cfg, params, ...)):
+  * ``train_loss``       — full-sequence loss for the train cells
+  * ``prefill``          — full forward building a decode cache
+  * ``decode_step``      — one token through the cache (serve cells)
+
+``sh(tensor, logical_axes)`` is an injectable sharding-constraint hook;
+the distributed layer passes a mesh-aware one, tests pass nothing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_rope, cross_entropy_loss, decode_attention_jnp,
+                     flash_attention_jnp, is_glu, norm, softcap, activate)
+from .moe import moe_ffn
+from .ssm import ssm_decode, ssm_forward, ssm_init_cache
+
+Axes = tuple  # logical axis names (str | None) per dim
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: Axes
+    init: str          # normal | out_proj | zeros | ones | ssm_a | ssm_dt | conv
+    dtype: str = ""    # "" -> cfg.dtype
+
+
+def _noop_sh(x, axes):
+    return x
+
+
+# ===========================================================================
+# Parameter specs
+# ===========================================================================
+def _attn_specs(cfg, L, prefix, specs):
+    E, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lead, lax_ = ((L,), ("layers",)) if L else ((), ())
+    specs[f"{prefix}/wq"] = ParamSpec(lead + (E, H, Dh),
+                                      lax_ + ("embed", "q_heads", "head_dim"),
+                                      "normal")
+    specs[f"{prefix}/wk"] = ParamSpec(lead + (E, Hkv, Dh),
+                                      lax_ + ("embed", "kv_heads", "head_dim"),
+                                      "normal")
+    specs[f"{prefix}/wv"] = ParamSpec(lead + (E, Hkv, Dh),
+                                      lax_ + ("embed", "kv_heads", "head_dim"),
+                                      "normal")
+    specs[f"{prefix}/wo"] = ParamSpec(lead + (H, Dh, E),
+                                      lax_ + ("q_heads", "head_dim", "embed"),
+                                      "out_proj")
+
+
+def _mlp_specs(cfg, L, prefix, specs, d_ff=None):
+    E = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    G = 2 if is_glu(cfg.activation) else 1
+    lead, lax_ = ((L,), ("layers",)) if L else ((), ())
+    specs[f"{prefix}/w_in"] = ParamSpec(lead + (G, E, F),
+                                        lax_ + (None, "embed", "ffn"), "normal")
+    specs[f"{prefix}/w_out"] = ParamSpec(lead + (F, E),
+                                         lax_ + ("ffn", "embed"), "out_proj")
+
+
+def _ssm_specs(cfg, L, prefix, specs):
+    E, din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    Hs, K = cfg.ssm_heads, cfg.ssm_conv
+    lead, lax_ = ((L,), ("layers",)) if L else ((), ())
+    specs[f"{prefix}/w_x"] = ParamSpec(lead + (E, din),
+                                       lax_ + ("embed", "ssm_inner"), "normal")
+    specs[f"{prefix}/w_z"] = ParamSpec(lead + (E, din),
+                                       lax_ + ("embed", "ssm_inner"), "normal")
+    specs[f"{prefix}/w_b"] = ParamSpec(lead + (E, N), lax_ + ("embed", None),
+                                       "normal")
+    specs[f"{prefix}/w_c"] = ParamSpec(lead + (E, N), lax_ + ("embed", None),
+                                       "normal")
+    specs[f"{prefix}/w_dt"] = ParamSpec(lead + (E, Hs),
+                                        lax_ + ("embed", "ssm_heads"), "normal")
+    specs[f"{prefix}/conv_x"] = ParamSpec(lead + (din, K),
+                                          lax_ + ("ssm_inner", None), "conv")
+    specs[f"{prefix}/conv_b"] = ParamSpec(lead + (N, K), lax_ + (None, None),
+                                          "conv")
+    specs[f"{prefix}/conv_c"] = ParamSpec(lead + (N, K), lax_ + (None, None),
+                                          "conv")
+    specs[f"{prefix}/a_log"] = ParamSpec(lead + (Hs,), lax_ + ("ssm_heads",),
+                                         "ssm_a", "float32")
+    specs[f"{prefix}/dt_bias"] = ParamSpec(lead + (Hs,), lax_ + ("ssm_heads",),
+                                           "ssm_dt", "float32")
+    specs[f"{prefix}/d"] = ParamSpec(lead + (Hs,), lax_ + ("ssm_heads",),
+                                     "ones", "float32")
+    specs[f"{prefix}/gate_scale"] = ParamSpec(lead + (din,),
+                                              lax_ + ("ssm_inner",), "zeros",
+                                              "float32")
+    specs[f"{prefix}/w_out"] = ParamSpec(lead + (din, E),
+                                         lax_ + ("ssm_inner", "embed"),
+                                         "out_proj")
+
+
+def _norm_spec(cfg, L, name, specs, dim=None):
+    E = dim if dim is not None else cfg.d_model
+    lead, lax_ = ((L,), ("layers",)) if L else ((), ())
+    specs[name] = ParamSpec(lead + (E,), lax_ + (None,), "zeros", "float32")
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    E, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    specs: dict[str, ParamSpec] = {}
+    specs["embed/table"] = ParamSpec((V, E), ("vocab", "embed"), "normal")
+    if not cfg.tie_embeddings:
+        specs["lm_head/w"] = ParamSpec((V, E), ("vocab", "embed"), "normal")
+    _norm_spec(cfg, 0, "final_norm/scale", specs)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        _norm_spec(cfg, L, "layers/ln1/scale", specs)
+        _attn_specs(cfg, L, "layers/attn", specs)
+        _norm_spec(cfg, L, "layers/ln2/scale", specs)
+        _mlp_specs(cfg, L, "layers/mlp", specs)
+        if fam == "vlm":
+            specs["patch_proj/w"] = ParamSpec((E, E), ("embed", None), "normal")
+    elif fam == "moe":
+        _norm_spec(cfg, L, "layers/ln1/scale", specs)
+        _attn_specs(cfg, L, "layers/attn", specs)
+        _norm_spec(cfg, L, "layers/ln2/scale", specs)
+        X, F = cfg.n_experts, cfg.d_ff
+        G = 2 if is_glu(cfg.activation) else 1
+        specs["layers/moe/router"] = ParamSpec((L, E, X),
+                                               ("layers", "embed", None),
+                                               "normal", "float32")
+        specs["layers/moe/w_in"] = ParamSpec(
+            (L, X, G, E, F), ("layers", "experts", None, "embed", None),
+            "normal")
+        specs["layers/moe/w_out"] = ParamSpec(
+            (L, X, F, E), ("layers", "experts", None, "embed"), "out_proj")
+        if cfg.n_shared_experts:
+            _mlp_specs(cfg, L, "layers/moe/shared",
+                       specs, d_ff=F * cfg.n_shared_experts)
+    elif fam == "ssm":
+        _norm_spec(cfg, L, "layers/ln/scale", specs)
+        _ssm_specs(cfg, L, "layers/ssm", specs)
+    elif fam == "hybrid":
+        _norm_spec(cfg, L, "layers/ln/scale", specs)
+        _ssm_specs(cfg, L, "layers/ssm", specs)
+        _norm_spec(cfg, 0, "shared/ln1/scale", specs)
+        _attn_specs(cfg, 0, "shared/attn", specs)
+        _norm_spec(cfg, 0, "shared/ln2/scale", specs)
+        _mlp_specs(cfg, 0, "shared/mlp", specs)
+    elif fam == "encdec":
+        Le = cfg.n_enc_layers
+        _norm_spec(cfg, Le, "enc_layers/ln1/scale", specs)
+        _attn_specs(cfg, Le, "enc_layers/attn", specs)
+        _norm_spec(cfg, Le, "enc_layers/ln2/scale", specs)
+        _mlp_specs(cfg, Le, "enc_layers/mlp", specs)
+        _norm_spec(cfg, 0, "enc_norm/scale", specs)
+        _norm_spec(cfg, L, "layers/ln1/scale", specs)
+        _attn_specs(cfg, L, "layers/self_attn", specs)
+        _norm_spec(cfg, L, "layers/ln_cross/scale", specs)
+        _attn_specs(cfg, L, "layers/cross_attn", specs)
+        _norm_spec(cfg, L, "layers/ln2/scale", specs)
+        _mlp_specs(cfg, L, "layers/mlp", specs)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return specs
+
+
+# -- pytree assembly --------------------------------------------------------
+def _nest(flat: dict[str, object]) -> dict:
+    tree: dict = {}
+    for path, leaf in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def _init_leaf(key, spec: ParamSpec, cfg: ModelConfig):
+    dt = jnp.dtype(spec.dtype or cfg.dtype)
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    if spec.init == "normal":
+        return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dt)
+    if spec.init == "out_proj":
+        scale = 0.02 / max(1.0, (2 * max(cfg.n_layers, 1)) ** 0.5)
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+    if spec.init == "conv":
+        fan = shape[-1]
+        return (jax.random.uniform(key, shape, jnp.float32,
+                                   -1.0, 1.0) / fan ** 0.5).astype(dt)
+    if spec.init == "ssm_a":
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if spec.init == "ssm_dt":
+        u = jax.random.uniform(key, shape, jnp.float32, 0.001, 0.1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dt)  # softplus^-1
+    raise ValueError(spec.init)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    flat = {p: _init_leaf(k, s, cfg) for (p, s), k in zip(specs.items(), keys)}
+    return _nest(flat)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    specs = param_specs(cfg)
+    flat = {p: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or cfg.dtype))
+            for p, s in specs.items()}
+    return _nest(flat)
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    return _nest({p: s.axes for p, s in param_specs(cfg).items()})
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for s in param_specs(cfg).values():
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+def _attn_full(cfg, x, p, positions, *, causal=True, prefix_len=0,
+               kv_override=None, sh=_noop_sh):
+    """Full-sequence attention.  Returns (out, (k, v)) for cache capture."""
+    q = jnp.einsum("bse,ehd->bhsd", x, p["wq"])
+    src = kv_override if kv_override is not None else x
+    k = jnp.einsum("bse,ehd->bhsd", src, p["wk"])
+    v = jnp.einsum("bse,ehd->bhsd", src, p["wv"])
+    if kv_override is None:            # self-attention gets RoPE
+        q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+    q = sh(q, ("batch", "q_heads", None, None))
+    k = sh(k, ("batch", "kv_heads", None, None))
+    out = flash_attention_jnp(q, k, v, causal=causal, prefix_len=prefix_len,
+                              causal_skip=cfg.attn_causal_skip)
+    out = jnp.einsum("bhsd,hde->bse", out, p["wo"])
+    return out, (k, v)
+
+
+def _attn_decode(cfg, x_t, p, k_cache, v_cache, pos, sh=_noop_sh):
+    """One-token attention against a cache.  x_t: (B, E).
+
+    Returns (out (B, E), k_t, v_t) — the caller owns the cache update so
+    scan layouts stay in one place."""
+    q = jnp.einsum("be,ehd->bhd", x_t, p["wq"])[:, :, None, :]
+    k_t = jnp.einsum("be,ehd->bhd", x_t, p["wk"])
+    v_t = jnp.einsum("be,ehd->bhd", x_t, p["wv"])
+    posb = jnp.full((1, 1, 1), pos)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_t = apply_rope(k_t[:, :, None, :], posb, cfg.rope_theta)[:, :, 0, :]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_t[:, :, None, :].astype(k_cache.dtype), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_t[:, :, None, :].astype(v_cache.dtype), pos, axis=2)
+    out = decode_attention_jnp(q, k_cache, v_cache, pos + 1)
+    out = jnp.einsum("bhsd,hde->bse", out, p["wo"])[:, 0]
+    return out, k_cache, v_cache
+
+
+def _mlp(cfg, x, p):
+    h_in = jnp.einsum("bse,gef->bsgf", x, p["w_in"])
+    if is_glu(cfg.activation):
+        h = activate(cfg.activation, h_in[..., 0, :], h_in[..., 1, :])
+    else:
+        h = activate(cfg.activation, h_in[..., 0, :])
+    return jnp.einsum("bsf,fe->bse", h.astype(x.dtype), p["w_out"])
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_layers(cfg, layer_fn, x, layers_params, n_layers: int):
+    """Scan over layers with optional two-level (grouped) remat.
+
+    Flat scan saves one residual carry per layer — for 100B+ configs that
+    alone exceeds HBM (126 x (B,S,E) for llama3-405b).  With
+    ``cfg.scan_group = G`` the stack runs as G checkpointed groups of an
+    inner checkpointed scan: saved carries drop to G + L/G at the cost of
+    one extra forward per group (~25% more compute) — the classic
+    sqrt-remat trade, selectable per architecture.
+    """
+    f = _remat(cfg, layer_fn)
+    G = cfg.scan_group
+    if G and n_layers % G == 0:
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, n_layers // G) + a.shape[1:]),
+            layers_params)
+
+        def group_fn(x, gp):
+            return jax.lax.scan(f, x, gp)
+
+        x, ys = jax.lax.scan(_remat(cfg, group_fn), x, grouped)
+        ys = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), ys)
+        return x, ys
+    return jax.lax.scan(f, x, layers_params)
+
+
+# ===========================================================================
+# Full-sequence forwards (train / prefill)
+# ===========================================================================
+def _transformer_stack(cfg, params, x, positions, *, prefix_len=0,
+                       collect_cache=False, sh=_noop_sh):
+    """Dense/MoE/VLM decoder stack via scan-over-layers."""
+    moe = cfg.family == "moe"
+
+    def layer(x, lp):
+        h, kv = _attn_full(cfg, norm(cfg.norm, x, lp["ln1"]["scale"]),
+                           lp["attn"], positions, prefix_len=prefix_len, sh=sh)
+        x = x + h
+        hin = norm(cfg.norm, x, lp["ln2"]["scale"])
+        if moe:
+            mp = lp["moe"]
+            shared = mp.get("shared")
+            h2, aux = moe_ffn(cfg, hin, mp["router"], mp["w_in"], mp["w_out"],
+                              shared_in=shared["w_in"] if shared else None,
+                              shared_out=shared["w_out"] if shared else None,
+                              constrain=sh)
+        else:
+            h2, aux = _mlp(cfg, hin, lp["mlp"]), {
+                "moe_aux_loss": jnp.float32(0.0),
+                "moe_drop_frac": jnp.float32(0.0)}
+        x = x + h2
+        if cfg.seq_shard_activations:
+            # Megatron-style sequence parallelism: the residual carried
+            # between layers (and saved by the scan) is S-sharded over the
+            # model axis; GSPMD re-gathers inside attention/FFN.
+            x = sh(x, ("batch", "seq_act", None))
+        ys = {"aux": aux["moe_aux_loss"], "drop": aux["moe_drop_frac"]}
+        if collect_cache:
+            ys["k"], ys["v"] = kv
+        return x, ys
+
+    return _scan_layers(cfg, layer, x, params["layers"], cfg.n_layers)
+
+
+def _ssm_stack(cfg, params, x, *, collect_state=False, sh=_noop_sh):
+    def layer(x, lp):
+        h = ssm_forward(cfg, norm(cfg.norm, x, lp["ln"]["scale"]), lp["ssm"],
+                        return_state=collect_state)
+        if collect_state:
+            h, state = h
+            return x + h, state
+        return x + h, None
+
+    return _scan_layers(cfg, layer, x, params["layers"], cfg.n_layers)
+
+
+def _hybrid_stack(cfg, params, x, positions, *, collect_cache=False,
+                  sh=_noop_sh):
+    """Zamba2: shared attention block every ``attn_every`` mamba layers."""
+    L, every = cfg.n_layers, cfg.attn_every
+    n_groups = L // every
+    shared = params["shared"]
+
+    def group(x, glp):
+        h, kv = _attn_full(cfg, norm(cfg.norm, x, shared["ln1"]["scale"]),
+                           shared["attn"], positions, sh=sh)
+        x = x + h
+        x = x + _mlp(cfg, norm(cfg.norm, x, shared["ln2"]["scale"]),
+                     shared["mlp"])
+
+        def mamba_layer(x, lp):
+            h = ssm_forward(cfg, norm(cfg.norm, x, lp["ln"]["scale"]),
+                            lp["ssm"], return_state=collect_cache)
+            if collect_cache:
+                h, state = h
+                return x + h, state
+            return x + h, None
+
+        x, states = jax.lax.scan(mamba_layer, x, glp)
+        ys = {"states": states} if collect_cache else {}
+        if collect_cache:
+            ys["k"], ys["v"] = kv
+        return x, ys
+
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+        params["layers"])
+    x, ys = jax.lax.scan(_remat(cfg, group), x, grouped)
+    return x, ys
+
+
+def _encoder(cfg, params, frames, sh=_noop_sh):
+    positions = jnp.arange(frames.shape[1])
+
+    def layer(x, lp):
+        h, _ = _attn_full(cfg, norm(cfg.norm, x, lp["ln1"]["scale"]),
+                          lp["attn"], positions, causal=False, sh=sh)
+        x = x + h
+        x = x + _mlp(cfg, norm(cfg.norm, x, lp["ln2"]["scale"]), lp["mlp"])
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, layer), frames, params["enc_layers"])
+    return norm(cfg.norm, x, params["enc_norm"]["scale"])
+
+
+def _decoder_encdec(cfg, params, x, enc_out, positions, *,
+                    collect_cache=False, sh=_noop_sh):
+    def layer(x, lp):
+        h, kv_self = _attn_full(cfg, norm(cfg.norm, x, lp["ln1"]["scale"]),
+                                lp["self_attn"], positions, sh=sh)
+        x = x + h
+        h, kv_cross = _attn_full(
+            cfg, norm(cfg.norm, x, lp["ln_cross"]["scale"]), lp["cross_attn"],
+            positions, causal=False, kv_override=enc_out, sh=sh)
+        x = x + h
+        x = x + _mlp(cfg, norm(cfg.norm, x, lp["ln2"]["scale"]), lp["mlp"])
+        ys = {}
+        if collect_cache:
+            ys["k"], ys["v"] = kv_self
+            ys["ck"], ys["cv"] = kv_cross
+        return x, ys
+
+    return jax.lax.scan(_remat(cfg, layer), x, params["layers"])
+
+
+# ===========================================================================
+# Embedding / head
+# ===========================================================================
+def _embed(cfg, params, tokens, sh=_noop_sh):
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return sh(x, ("batch", None, None))
+
+
+def _head_weight(cfg, params):
+    return params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]["w"]
+
+
+def lm_loss(cfg, params, x, labels, mask, *, chunk: int = 2048, sh=_noop_sh):
+    """Chunked LM head + cross-entropy so (B, S, V) logits never fully
+    materialize (V is vocab-sharded; S is chunked via scan + remat)."""
+    B, S, E = x.shape
+    w = _head_weight(cfg, params)
+    cs = min(chunk, S)
+    nc = -(-S // cs)
+    pad = nc * cs - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = x.reshape(B, nc, cs, E).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, cs).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, cs).transpose(1, 0, 2)
+
+    def chunk_fn(carry, inp):
+        xi, li, mi = inp
+        logits = jnp.einsum("bse,ve->bsv", xi, w)
+        logits = softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mi
+        return (carry[0] + nll.sum(), carry[1] + mi.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(chunk_fn), (jnp.float32(0.0), jnp.float32(0.0)),
+        (xc, lc, mc.astype(jnp.float32)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _logits_last(cfg, params, x_last):
+    """x_last: (B, E) -> (B, V)."""
+    w = _head_weight(cfg, params)
+    logits = jnp.einsum("be,ve->bv", x_last, w)
+    return softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+
+
+# ===========================================================================
+# Public entry points
+# ===========================================================================
+def _backbone(cfg, params, batch, *, collect_cache=False, sh=_noop_sh):
+    """Shared full-sequence path.  Returns (x, ys, aux_info)."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens, sh)
+        positions = jnp.arange(tokens.shape[1])
+        x, ys = _transformer_stack(cfg, params, x, positions,
+                                   collect_cache=collect_cache, sh=sh)
+        prefix = 0
+    elif fam == "vlm":
+        tokens = batch["tokens"]
+        patches = batch["patches"].astype(jnp.dtype(cfg.dtype))
+        pemb = jnp.einsum("bpe,ef->bpf", patches, params["patch_proj"]["w"])
+        x = jnp.concatenate([pemb, _embed(cfg, params, tokens, sh)], axis=1)
+        positions = jnp.arange(x.shape[1])
+        x, ys = _transformer_stack(cfg, params, x, positions,
+                                   prefix_len=cfg.n_patches,
+                                   collect_cache=collect_cache, sh=sh)
+        prefix = cfg.n_patches
+    elif fam == "ssm":
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens, sh)
+        x, ys = _ssm_stack(cfg, params, x, collect_state=collect_cache, sh=sh)
+        prefix = 0
+    elif fam == "hybrid":
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens, sh)
+        positions = jnp.arange(tokens.shape[1])
+        x, ys = _hybrid_stack(cfg, params, x, positions,
+                              collect_cache=collect_cache, sh=sh)
+        prefix = 0
+    elif fam == "encdec":
+        tokens = batch["tokens"]
+        frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        enc_out = _encoder(cfg, params, frames, sh)
+        x = _embed(cfg, params, tokens, sh)
+        positions = jnp.arange(tokens.shape[1])
+        x, ys = _decoder_encdec(cfg, params, x, enc_out, positions,
+                                collect_cache=collect_cache, sh=sh)
+        prefix = 0
+    else:
+        raise ValueError(fam)
+    x = norm(cfg.norm, x, params["final_norm"]["scale"])
+    return x, ys, prefix
+
+
+def train_loss(cfg, params, batch, sh=_noop_sh):
+    """Mean next-token loss (+ MoE aux).  batch: tokens (B, S) [+ frames /
+    patches for encdec / vlm].  Returns (loss, metrics)."""
+    x, ys, prefix = _backbone(cfg, params, batch, sh=sh)
+    tokens = batch["tokens"]
+    if prefix:
+        x = x[:, prefix:]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    loss = lm_loss(cfg, params, x, labels, mask, sh=sh)
+    metrics = {"lm_loss": loss}
+    if cfg.family == "moe" and isinstance(ys, dict):
+        aux = ys["aux"].mean()
+        metrics["moe_aux_loss"] = aux
+        metrics["moe_drop_frac"] = ys["drop"].mean()
+        loss = loss + 0.01 * aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# -- caches -------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Abstract-friendly cache construction (jnp.zeros only)."""
+    dt = jnp.dtype(cfg.dtype)
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    fam = cfg.family
+    cache: dict = {"len": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        cache["k"] = jnp.zeros((L, batch, Hkv, max_len, Dh), dt)
+        cache["v"] = jnp.zeros((L, batch, Hkv, max_len, Dh), dt)
+    elif fam == "ssm":
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((L,) + a.shape, a.dtype),
+            ssm_init_cache(cfg, batch, dt))
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((n_groups, cfg.attn_every) + a.shape, a.dtype),
+            ssm_init_cache(cfg, batch, dt))
+        cache["k"] = jnp.zeros((n_groups, batch, Hkv, max_len, Dh), dt)
+        cache["v"] = jnp.zeros((n_groups, batch, Hkv, max_len, Dh), dt)
+    elif fam == "encdec":
+        cache["k"] = jnp.zeros((L, batch, Hkv, max_len, Dh), dt)
+        cache["v"] = jnp.zeros((L, batch, Hkv, max_len, Dh), dt)
+        cache["ck"] = jnp.zeros((L, batch, Hkv, cfg.enc_frames, Dh), dt)
+        cache["cv"] = jnp.zeros((L, batch, Hkv, cfg.enc_frames, Dh), dt)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    kv = ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+    axes: dict = {"len": ()}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        axes["k"] = kv
+        axes["v"] = kv
+        if fam == "encdec":
+            axes["ck"] = kv
+            axes["cv"] = kv
+    elif fam == "ssm":
+        axes["ssm"] = {
+            "state": ("layers", "batch", "ssm_heads", None, None),
+            "conv_x": ("layers", "batch", None, "ssm_inner"),
+            "conv_b": ("layers", "batch", None, None),
+            "conv_c": ("layers", "batch", None, None),
+        }
+    elif fam == "hybrid":
+        axes["ssm"] = {
+            "state": ("layers", None, "batch", "ssm_heads", None, None),
+            "conv_x": ("layers", None, "batch", None, "ssm_inner"),
+            "conv_b": ("layers", None, "batch", None, None),
+            "conv_c": ("layers", None, "batch", None, None),
+        }
+        axes["k"] = kv
+        axes["v"] = kv
+    return axes
+
+
+def prefill(cfg, params, batch, max_len: int, sh=_noop_sh):
+    """Full forward that also builds the decode cache.
+
+    Returns (cache, logits_last (B, V))."""
+    x, ys, prefix = _backbone(cfg, params, batch, collect_cache=True, sh=sh)
+    tokens = batch["tokens"]
+    B, S = tokens.shape[0], x.shape[1]
+    cache = init_cache(cfg, B, max_len)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        k, v = ys["k"], ys["v"]          # (L, B, Hkv, S, Dh)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=3)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=3)
+        if fam == "encdec":
+            cache["ck"], cache["cv"] = (ys["ck"].astype(cache["ck"].dtype),
+                                        ys["cv"].astype(cache["cv"].dtype))
+    elif fam == "ssm":
+        cache["ssm"] = ys                # per-layer state + conv tails
+    elif fam == "hybrid":
+        cache["ssm"] = ys["states"]
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ys["k"].astype(cache["k"].dtype), 0, axis=3)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], ys["v"].astype(cache["v"].dtype), 0, axis=3)
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    logits = _logits_last(cfg, params, x[:, -1])
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, tokens_t, sh=_noop_sh):
+    """One decode step.  tokens_t: (B,) int32.  Returns (cache, logits)."""
+    pos = cache["len"]
+    x = jnp.take(params["embed"]["table"], tokens_t, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = sh(x, ("batch", None))
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        def layer(x, inp):
+            lp, kc, vc = inp["lp"], inp["k"], inp["v"]
+            attn_p = lp["self_attn"] if fam == "encdec" else lp["attn"]
+            h, kc, vc = _attn_decode(
+                cfg, norm(cfg.norm, x[None], lp["ln1"]["scale"])[0],
+                attn_p, kc, vc, pos, sh=sh)
+            x = x + h
+            if fam == "encdec":
+                hq = norm(cfg.norm, x[None], lp["ln_cross"]["scale"])[0]
+                q = jnp.einsum("be,ehd->bhd", hq, lp["cross_attn"]["wq"])
+                out = decode_attention_jnp(q[:, :, None], inp["ck"], inp["cv"],
+                                           inp["ck"].shape[2])
+                x = x + jnp.einsum("bhsd,hde->bse", out,
+                                   lp["cross_attn"]["wo"])[:, 0]
+            hin = norm(cfg.norm, x[None], lp["ln2"]["scale"])
+            if fam == "moe":
+                mp = lp["moe"]
+                shared = mp.get("shared")
+                # batch-major layout so the EP shard_map sees batch on dim 0
+                h2, _ = moe_ffn(cfg, hin.transpose(1, 0, 2), mp["router"],
+                                mp["w_in"], mp["w_out"],
+                                shared_in=shared["w_in"] if shared else None,
+                                shared_out=shared["w_out"] if shared else None,
+                                constrain=sh)
+                h2 = h2.transpose(1, 0, 2)
+            else:
+                h2 = _mlp(cfg, hin, lp["mlp"])
+            x = x + h2[0]
+            return x, {"k": kc, "v": vc}
+
+        inp = {"lp": params["layers"], "k": cache["k"], "v": cache["v"]}
+        if fam == "encdec":
+            inp["ck"], inp["cv"] = cache["ck"], cache["cv"]
+        x, new_kv = jax.lax.scan(layer, x, inp)
+        cache = dict(cache, k=new_kv["k"], v=new_kv["v"])
+    elif fam == "ssm":
+        def layer(x, inp):
+            h, new_c = ssm_decode(
+                cfg, norm(cfg.norm, x[None], inp["lp"]["ln"]["scale"])[0],
+                inp["lp"]["ssm"], inp["c"])
+            return x + h, new_c
+
+        x, new_ssm = jax.lax.scan(layer, x, {"lp": params["layers"],
+                                             "c": cache["ssm"]})
+        cache = dict(cache, ssm=new_ssm)
+    elif fam == "hybrid":
+        shared = params["shared"]
+        n_groups = cfg.n_layers // cfg.attn_every
+        grouped_lp = jax.tree.map(
+            lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+
+        def group(x, inp):
+            h, kc, vc = _attn_decode(
+                cfg, norm(cfg.norm, x[None], shared["ln1"]["scale"])[0],
+                shared["attn"], inp["k"], inp["v"], pos, sh=sh)
+            x = x + h
+            x = x + _mlp(cfg, norm(cfg.norm, x[None], shared["ln2"]["scale"]),
+                         shared["mlp"])[0]
+
+            def mamba_layer(x, minp):
+                h, new_c = ssm_decode(
+                    cfg, norm(cfg.norm, x[None],
+                              minp["lp"]["ln"]["scale"])[0],
+                    minp["lp"]["ssm"], minp["c"])
+                return x + h, new_c
+
+            x, new_ssm = jax.lax.scan(mamba_layer, x,
+                                      {"lp": inp["lp"], "c": inp["c"]})
+            return x, {"k": kc, "v": vc, "ssm": new_ssm}
+
+        x, new = jax.lax.scan(group, x, {"lp": grouped_lp, "k": cache["k"],
+                                         "v": cache["v"], "c": cache["ssm"]})
+        cache = dict(cache, k=new["k"], v=new["v"], ssm=new["ssm"])
+    else:
+        raise ValueError(fam)
+
+    x = norm(cfg.norm, x[None], params["final_norm"]["scale"])[0]
+    logits = _logits_last(cfg, params, x)
+    cache["len"] = pos + 1
+    return cache, logits

@@ -1,0 +1,173 @@
+"""Top-k routed mixture-of-experts with sort-based capacity dispatch.
+
+Dispatch is the standard production scheme (GShard/MaxText lineage):
+flatten tokens, pick top-k experts, stable-sort assignments by expert id,
+compute each assignment's slot within its expert via a cumsum, drop
+assignments past the expert capacity, gather into a dense
+``(n_experts, capacity, d_model)`` buffer, run the expert FFNs as one
+batched einsum (MXU-friendly), and scatter-add weighted outputs back.
+
+Two execution paths share that algorithm:
+
+* ``moe_ffn`` — pure-jnp single-device path (tests, CPU examples).
+* ``_moe_ffn_shard_map`` — the expert-parallel production path.  Because
+  activations are batch-sharded over (pod, data) and *replicated* over
+  "model", every expert shard already holds every token: routing is
+  computed redundantly per shard (router flops are negligible), each
+  shard dispatches only the assignments owned by its expert slice, and
+  the combine is one fp32 ``psum`` over "model" — the same volume as any
+  tensor-parallel FFN's all-reduce.  No gather/scatter ever crosses
+  devices, which is what keeps GSPMD from replicating the (X, C, E)
+  dispatch buffer (a ~150 GB tensor for kimi-k2's train cell).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import activate, is_glu
+
+
+def _route(cfg, xt, router_w):
+    """Routing (fp32).  xt: (N, E) -> gates (N, k), expert ids (N, k), aux."""
+    N = xt.shape[0]
+    X, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("ne,ex->nx", xt.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): mean_prob * mean_assignment
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((X,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (N * k))
+    aux_loss = X * jnp.sum(me * ce)
+    return gate_vals, expert_ids, aux_loss
+
+
+def _dispatch_compute_combine(cfg, xt, gate_vals, expert_ids, w_in, w_out,
+                              *, n_local: int, expert_lo):
+    """Sort-based capacity dispatch over the ``n_local`` experts starting
+    at ``expert_lo``, batched expert FFNs, weighted scatter-add combine.
+
+    Returns (yt (N, E) fp32 partial output, drop_frac).
+    """
+    N, E = xt.shape
+    X, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, round(cfg.capacity_factor * N * k / X)))
+    if N <= 1024:
+        # decode / tiny-batch floor: cap = N makes dispatch dropless for
+        # ANY routing (an expert receives at most one slot per token) —
+        # serving must never drop tokens, and the buffer stays small.
+        cap = max(cap, N)
+
+    local_e = expert_ids - expert_lo                          # (N, k)
+    mine = (local_e >= 0) & (local_e < n_local)
+    flat_e = jnp.where(mine, local_e, n_local).reshape(-1)    # bucket n_local = foreign
+    flat_gate = (gate_vals * mine).reshape(-1)
+    token_of = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, st = flat_e[order], flat_gate[order], token_of[order]
+    # slot within expert = rank among equal expert ids
+    pos = jnp.arange(N * k, dtype=jnp.int32)
+    seg_start = jnp.full((n_local + 1,), N * k, jnp.int32).at[se].min(pos)
+    slot = pos - seg_start[se]
+    keep = (slot < cap) & (se < n_local)
+    dest = jnp.where(keep, se * cap + slot, n_local * cap)    # OOB -> dropped
+
+    buf = jnp.zeros((n_local * cap, E), xt.dtype).at[dest].add(
+        xt[st], mode="drop")
+    dispatched = buf.reshape(n_local, cap, E)
+
+    h_in = jnp.einsum("xce,xgef->xgcf", dispatched, w_in)
+    if is_glu(cfg.activation):
+        h = activate(cfg.activation, h_in[:, 0], h_in[:, 1])
+    else:
+        h = activate(cfg.activation, h_in[:, 0])
+    y_exp = jnp.einsum("xcf,xfe->xce", h.astype(xt.dtype), w_out)
+
+    flat_y = y_exp.reshape(n_local * cap, E)
+    src = jnp.where(keep, dest, 0)
+    gathered = flat_y[src].astype(jnp.float32) * \
+        (sg * keep).astype(jnp.float32)[:, None]
+    yt = jnp.zeros((N, E), jnp.float32).at[st].add(gathered)
+    drop = 1.0 - (keep | ~mine.reshape(-1)[order]).astype(jnp.float32).mean()
+    return yt, drop
+
+
+def _shared_experts(cfg, x, shared_in, shared_out):
+    h_in = jnp.einsum("bse,gef->bsgf", x, shared_in)
+    if is_glu(cfg.activation):
+        h = activate(cfg.activation, h_in[..., 0, :], h_in[..., 1, :])
+    else:
+        h = activate(cfg.activation, h_in[..., 0, :])
+    return jnp.einsum("bsf,fe->bse", h.astype(x.dtype), shared_out)
+
+
+def moe_ffn(cfg, x, router_w, w_in, w_out, shared_in=None, shared_out=None,
+            constrain=None):
+    """x: (B, S, E) -> (B, S, E); router_w: (E, X);
+    w_in: (X, 2|1, E, F); w_out: (X, F, E).
+
+    ``constrain`` is the distributed layer's sharding hook; when it
+    carries a mesh with a >1 "model" axis (and X divides it), the
+    expert-parallel shard_map path is used.  Returns (y, aux).
+    """
+    B, S, E = x.shape
+    mesh = getattr(constrain, "mesh", None)
+    tp = int(mesh.shape["model"]) if (
+        mesh is not None and "model" in mesh.axis_names) else 1
+    if tp > 1 and cfg.n_experts % tp == 0:
+        y, aux_loss, drop = _moe_ffn_shard_map(cfg, x, router_w, w_in, w_out,
+                                               mesh)
+    else:
+        xt = x.reshape(B * S, E)
+        gate_vals, expert_ids, aux_loss = _route(cfg, xt, router_w)
+        yt, drop = _dispatch_compute_combine(
+            cfg, xt, gate_vals, expert_ids, w_in, w_out,
+            n_local=cfg.n_experts, expert_lo=0)
+        y = yt.astype(x.dtype).reshape(B, S, E)
+
+    if shared_in is not None:
+        y = y + _shared_experts(cfg, x, shared_in, shared_out)
+    return y, {"moe_aux_loss": aux_loss, "moe_drop_frac": drop}
+
+
+def _moe_ffn_shard_map(cfg, x, router_w, w_in, w_out, mesh):
+    """Expert-parallel path (see module docstring)."""
+    from jax.experimental.shard_map import shard_map
+
+    tp = int(mesh.shape["model"])
+    X_loc = cfg.n_experts // tp
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def inner(x_l, rw, wi, wo):
+        B_l, S, E = x_l.shape
+        xt = x_l.reshape(B_l * S, E)
+        gate_vals, expert_ids, aux_loss = _route(cfg, xt, rw)
+        lo = jax.lax.axis_index("model") * X_loc
+        yt, drop = _dispatch_compute_combine(
+            cfg, xt, gate_vals, expert_ids, wi, wo,
+            n_local=X_loc, expert_lo=lo)
+        y_l = jax.lax.psum(yt.astype(jnp.dtype(cfg.moe_combine_dtype)),
+                           "model")
+        # aux/drop differ per dp shard; reduce over the whole mesh so the
+        # P() out_specs really are replicated.
+        all_axes = dp + ("model",)
+        aux_loss = jax.lax.pmean(aux_loss, all_axes)
+        drop = jax.lax.pmean(drop, all_axes)
+        return y_l.astype(x_l.dtype).reshape(B_l, S, E), aux_loss, drop
+
+    f = shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("model", None, None, None), P("model", None, None)),
+        out_specs=(P(bspec, None, None), P(), P()),
+        check_rep=False)
+    return f(x, router_w, w_in, w_out)

@@ -1,0 +1,150 @@
+"""Mamba2 (SSD) block — chunked scan for train/prefill, O(1) recurrent
+state for decode.
+
+Math follows state-space duality [arXiv:2405.21060] with per-head scalar
+decay: ``h_t = exp(alog_t) h_{t-1} + dt_t B_t x_t^T``, ``y_t = C_t h_t +
+D x_t``, ngroups=1 (B/C shared across heads).  The chunked formulation
+here is the pure-jnp twin of ``kernels/ssd`` (dense intra-chunk matmuls
+against a causal decay mask + an inter-chunk state carry), so dry-runs
+lower pure XLA while the Pallas kernel targets TPU.
+
+Sharding: heads (= d_inner / head_dim) carry the tensor-parallel axis;
+B/C/state-dim N is small and replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, rms_norm
+
+
+def _project(cfg, x, p):
+    """Common projections.  x: (B, S, E) -> parts dict (pre-conv)."""
+    xs = jnp.einsum("bse,ed->bsd", x, p["w_x"])
+    z = jnp.einsum("bse,ed->bsd", x, p["w_z"])
+    b = jnp.einsum("bse,en->bsn", x, p["w_b"])
+    c = jnp.einsum("bse,en->bsn", x, p["w_c"])
+    dt = jnp.einsum("bse,eh->bsh", x.astype(jnp.float32),
+                    p["w_dt"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return xs, z, b, c, dt
+
+
+def _gate_out(cfg, y, z, p):
+    """Gated RMSNorm + output projection.  y, z: (B, S, din)."""
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_scale"])
+    return jnp.einsum("bsd,de->bse", y, p["w_out"])
+
+
+def ssd_chunked(x, b, c, alog, dt, chunk: int):
+    """x: (B, S, Hs, P); b, c: (B, S, N); alog, dt: (B, S, Hs).
+
+    Returns y: (B, S, Hs, P) and the final state (B, Hs, N, P).
+    """
+    B, S, Hs, P = x.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, b, c, alog, dt = map(zf, (x, b, c, alog, dt))
+    nc = x.shape[1] // chunk
+    xq = x.reshape(B, nc, chunk, Hs, P).transpose(1, 0, 2, 3, 4)
+    bq = b.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    cq = c.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    aq = alog.reshape(B, nc, chunk, Hs).transpose(1, 0, 2, 3)
+    dq = dt.reshape(B, nc, chunk, Hs).transpose(1, 0, 2, 3)
+
+    rows = jnp.arange(chunk)[:, None]
+    cols = jnp.arange(chunk)[None, :]
+    tri = rows >= cols
+
+    def step(state, inp):
+        x_c, b_c, c_c, a_c, d_c = inp                 # (B,Q,...)
+        cum = jnp.cumsum(a_c, axis=1)                 # (B,Q,Hs) fp32
+        total = cum[:, -1]                            # (B,Hs)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])      # (B,Q,Q,Hs)
+        cb = jnp.einsum("bqn,bsn->bqs", c_c.astype(jnp.float32),
+                        b_c.astype(jnp.float32))
+        m = jnp.where(tri[None, :, :, None],
+                      cb[..., None] * decay * d_c[:, None, :, :], 0.0)
+        y = jnp.einsum("bqsh,bshp->bqhp", m, x_c.astype(jnp.float32))
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhnp->bqhp", c_c.astype(jnp.float32), state)
+        w = jnp.exp(total[:, None] - cum) * d_c       # (B,Q,Hs)
+        new_state = jnp.exp(total)[..., None, None] * state + jnp.einsum(
+            "bqn,bqh,bqhp->bhnp", b_c.astype(jnp.float32), w,
+            x_c.astype(jnp.float32))
+        return new_state, y
+
+    state0 = jnp.zeros((B, Hs, N, P), jnp.float32)
+    # checkpoint per chunk: backward recomputes the (Q, Q, Hs) decay mask
+    # and score tile instead of saving them across the whole sequence.
+    state, yq = jax.lax.scan(jax.checkpoint(step), state0,
+                             (xq, bq, cq, aq, dq))
+    y = yq.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, Hs, P)
+    return y[:, :S].astype(x.dtype), state
+
+
+def ssm_forward(cfg, x, p, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, S, E) -> (B, S, E).
+
+    With ``return_state`` also returns the decode cache for this layer
+    (SSD state + raw pre-conv tails so decode resumes exactly)."""
+    B, S, E = x.shape
+    Hs, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv
+    xs_raw, z, b_raw, c_raw, dt = _project(cfg, x, p)
+    xs, _ = causal_conv1d(xs_raw, p["conv_x"])
+    b, _ = causal_conv1d(b_raw, p["conv_b"])
+    c, _ = causal_conv1d(c_raw, p["conv_c"])
+    alog = -jnp.exp(p["a_log"].astype(jnp.float32))[None, None, :] * dt
+    xh = xs.reshape(B, S, Hs, P)
+    y, state = ssd_chunked(xh, b, c, alog, dt, cfg.ssm_chunk)
+    y = y + p["d"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, Hs * P).astype(x.dtype)
+    out = _gate_out(cfg, y, z, p)
+    if return_state:
+        tail = lambda a: a[:, -(K - 1):].astype(x.dtype) if S >= K - 1 else \
+            jnp.pad(a, ((0, 0), (K - 1 - S, 0), (0, 0))).astype(x.dtype)
+        layer_cache = {"state": state, "conv_x": tail(xs_raw),
+                       "conv_b": tail(b_raw), "conv_c": tail(c_raw)}
+        return out, layer_cache
+    return out
+
+
+def ssm_init_cache(cfg, batch: int, dtype):
+    K = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+        "conv_c": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+    }
+
+
+def ssm_decode(cfg, x_t, p, cache):
+    """One recurrent step.  x_t: (B, E) -> (y_t: (B, E), new cache)."""
+    B, E = x_t.shape
+    Hs, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x1 = x_t[:, None, :]                              # (B, 1, E)
+    xs, z, b, c, dt = _project(cfg, x1, p)
+    xs, conv_x = causal_conv1d(xs, p["conv_x"], cache["conv_x"])
+    b, conv_b = causal_conv1d(b, p["conv_b"], cache["conv_b"])
+    c, conv_c = causal_conv1d(c, p["conv_c"], cache["conv_c"])
+    dt = dt[:, 0]                                      # (B, Hs)
+    alog = -jnp.exp(p["a_log"].astype(jnp.float32))[None, :] * dt
+    xh = xs[:, 0].reshape(B, Hs, P).astype(jnp.float32)
+    bt = b[:, 0].astype(jnp.float32)                   # (B, N)
+    ct = c[:, 0].astype(jnp.float32)
+    state = cache["state"]
+    state = (jnp.exp(alog)[..., None, None] * state
+             + dt[..., None, None] * bt[:, None, :, None] * xh[:, :, None, :])
+    y = jnp.einsum("bn,bhnp->bhp", ct, state)
+    y = y + p["d"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, Hs * P).astype(x_t.dtype)
+    out = _gate_out(cfg, y[:, None, :], z, p)[:, 0]
+    return out, {"state": state, "conv_x": conv_x,
+                 "conv_b": conv_b, "conv_c": conv_c}

@@ -1,0 +1,7 @@
+from .optimizers import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, make_optimizer, opt_state_logical_axes)
+from .schedules import cosine_schedule, linear_warmup
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "make_optimizer", "opt_state_logical_axes",
+           "cosine_schedule", "linear_warmup"]

@@ -1,0 +1,143 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+* AdamW — fp32 first/second moments (the <=100B-class default).
+* Adafactor — factored fp32 second moment + optional bf16 momentum; the
+  340B/405B/1T configs use it so optimizer state fits v5e HBM (the
+  factored state is ~sqrt of Adam's).
+
+Optimizer state carries the SAME logical sharding axes as its parameter
+(factored Adafactor rows/cols inherit the parameter's respective dims),
+so ZeRO-3-style state sharding falls out of the sharding tables for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": _tmap(zeros32, params),
+            "v": _tmap(zeros32, params)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = _tmap(upd, params, grads, state["m"], state["v"])
+    new_p = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = _tmap(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params, *, momentum: bool = False):
+    def one(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            st = {"row": row, "col": col}
+        else:
+            st = {"v": jnp.zeros(p.shape, jnp.float32)}
+        if momentum:
+            st["m"] = jnp.zeros(p.shape, jnp.bfloat16)
+        return st
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "slots": _tmap(one, params)}
+
+
+def adafactor_update(params, grads, state, lr, *, decay=0.8, eps=1e-30,
+                     clip=1.0, weight_decay=0.0, momentum: bool = False,
+                     b1=0.9):
+    step = state["step"] + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            row = beta * st["row"] + (1 - beta) * g2.mean(axis=-1)
+            col = beta * st["col"] + (1 - beta) * g2.mean(axis=-2)
+            rmean = row.mean(axis=-1, keepdims=True)
+            rfac = row / jnp.maximum(rmean, eps)
+            u = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(col)[..., None, :])
+            new = {"row": row, "col": col}
+        else:
+            v = beta * st["v"] + (1 - beta) * g2
+            u = g / jnp.sqrt(v)
+            new = {"v": v}
+        # update clipping (RMS(u) <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if momentum:
+            m = b1 * st["m"].astype(jnp.float32) + (1 - b1) * u
+            new["m"] = m.astype(jnp.bfloat16)
+            u = m
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new
+
+    out = _tmap(upd, params, grads, state["slots"])
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and \
+        isinstance(x[1], dict)
+    new_p = _tmap(lambda o: o[0], out, is_leaf=is_pair)
+    new_s = _tmap(lambda o: o[1], out, is_leaf=is_pair)
+    return new_p, {"step": step, "slots": new_s}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + sharding axes for optimizer state
+# ---------------------------------------------------------------------------
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return (functools.partial(adafactor_init, momentum=False),
+                functools.partial(adafactor_update, momentum=False))
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def opt_state_logical_axes(name: str, params_axes, params_abstract):
+    """Logical axes for the optimizer state, mirroring the parameters."""
+    if name == "adamw":
+        return {"step": (), "m": params_axes, "v": params_axes}
+
+    def one(axes, p):
+        axes = tuple(axes)
+        if _factored(p.shape):
+            return {"row": axes[:-1], "col": axes[:-2] + axes[-1:]}
+        return {"v": axes}
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    slots = jax.tree.map(one, params_axes, params_abstract, is_leaf=is_axes)
+    return {"step": (), "slots": slots}

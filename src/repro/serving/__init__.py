@@ -1,0 +1,5 @@
+from .kv_pool import PagedKVPool
+from .server import BatchServer, ServerConfig, two_phase_admission
+
+__all__ = ["PagedKVPool", "BatchServer", "ServerConfig",
+           "two_phase_admission"]

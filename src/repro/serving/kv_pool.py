@@ -1,0 +1,126 @@
+"""Log-structured paged KV-cache pool with LSM-style compaction.
+
+Serving appends KV pages per request (writes); finished requests retire
+their pages, leaving holes (obsolete entries).  Reclaiming holes means
+copying live pages down — background I/O identical in shape to LSM
+merges.  Compaction work items are scheduled by the paper's machinery:
+the greedy rule (fewest remaining live bytes first, Theorem 2) minimizes
+fragmented pages over time exactly as it minimizes component counts,
+and an occupancy constraint (= the component constraint) is what stalls
+admissions when compaction lags.
+
+The pool is device-layout-aware: pages live in one (n_pages, page,
+n_kv, head_dim) array per layer group so the gather in paged attention
+is a single ``take`` along the page axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.component import MergeOp, Component
+from repro.core.scheduler import MergeScheduler, GreedyScheduler
+
+
+@dataclass
+class Request:
+    rid: int
+    pages: list[int] = field(default_factory=list)
+    length: int = 0
+    done: bool = False
+
+
+class PagedKVPool:
+    """Host-metadata page allocator (device arrays owned by the server)."""
+
+    def __init__(self, n_pages: int, page_tokens: int,
+                 scheduler: Optional[MergeScheduler] = None,
+                 occupancy_stall: float = 0.95):
+        self.n_pages = int(n_pages)
+        self.page_tokens = int(page_tokens)
+        self.free: list[int] = list(range(self.n_pages))[::-1]
+        self.requests: dict[int, Request] = {}
+        self.retired_pages: list[int] = []      # holes awaiting reclaim
+        self.scheduler = scheduler or GreedyScheduler()
+        self.occupancy_stall = float(occupancy_stall)
+        self.compactions: dict[int, MergeOp] = {}
+        self.stats = {"alloc": 0, "retire": 0, "compact_pages": 0,
+                      "admission_stalls": 0}
+
+    # ------------------------------------------------------------- admission
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self.free) / self.n_pages
+
+    def can_admit(self, prompt_tokens: int) -> bool:
+        need = -(-prompt_tokens // self.page_tokens)
+        if len(self.free) < need or \
+                self.occupancy >= self.occupancy_stall:
+            self.stats["admission_stalls"] += 1
+            return False
+        return True
+
+    def admit(self, rid: int, prompt_tokens: int) -> Optional[list[int]]:
+        if not self.can_admit(prompt_tokens):
+            return None
+        need = -(-prompt_tokens // self.page_tokens)
+        pages = [self.free.pop() for _ in range(need)]
+        self.requests[rid] = Request(rid=rid, pages=pages,
+                                     length=prompt_tokens)
+        self.stats["alloc"] += need
+        return pages
+
+    def extend(self, rid: int, new_tokens: int = 1) -> Optional[int]:
+        """Account decode growth; returns a new page id when one is
+        allocated, None otherwise.  Raises KeyError on unknown rid."""
+        req = self.requests[rid]
+        req.length += new_tokens
+        need = -(-req.length // self.page_tokens)
+        if need > len(req.pages):
+            if not self.free:
+                return None
+            p = self.free.pop()
+            req.pages.append(p)
+            self.stats["alloc"] += 1
+            return p
+        return -1
+
+    def retire(self, rid: int):
+        """Request finished: its pages become holes until compacted."""
+        req = self.requests.pop(rid)
+        self.retired_pages.extend(req.pages)
+        self.stats["retire"] += len(req.pages)
+        # one compaction work item per retirement batch; remaining bytes =
+        # pages to reclaim (the greedy rule ranks the smallest first)
+        comps = [Component(size=float(self.page_tokens), level=0)
+                 for _ in req.pages]
+        if comps:
+            op = MergeOp(inputs=comps, output_level=0,
+                         output_size=float(len(comps) * self.page_tokens))
+            op.pages = list(req.pages)          # type: ignore[attr-defined]
+            self.compactions[op.op_id] = op
+
+    # ------------------------------------------------------------ compaction
+    def pump(self, budget_tokens: int) -> list[int]:
+        """Reclaim up to ``budget_tokens`` of retired pages, scheduler-
+        ranked.  Returns the page ids freed this quantum."""
+        freed: list[int] = []
+        if not self.compactions:
+            return freed
+        alloc = self.scheduler.allocate(list(self.compactions.values()))
+        for op_id, frac in alloc.items():
+            op = self.compactions[op_id]
+            quota = int(budget_tokens * frac)
+            while quota >= self.page_tokens and \
+                    getattr(op, "pages", None):
+                page = op.pages.pop()           # type: ignore[attr-defined]
+                self.free.append(page)
+                freed.append(page)
+                quota -= self.page_tokens
+                op.written += self.page_tokens
+                self.stats["compact_pages"] += 1
+            if not getattr(op, "pages", None):
+                self.compactions.pop(op_id, None)
+        return freed

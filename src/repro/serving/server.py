@@ -1,0 +1,144 @@
+"""Batched serving loop + two-phase admission-rate calibration.
+
+The serving analogue of the paper's write-stall story: requests arrive
+(writes), decode steps process them (in-memory writes), page compaction
+is background I/O.  Admitting as fast as possible measures an
+*unsustainable* peak (holes accumulate until admission stalls), so the
+server calibrates with the paper's two-phase method:
+
+  testing phase — closed loop, admit as fast as possible, measure max
+                  sustained decode throughput;
+  running phase — open loop at ``utilization`` (default 95%) of that
+                  max; p99 request latency decides sustainability.
+
+``BatchServer`` runs a real model (decode_step) on whatever devices
+exist; the examples drive it with a reduced config on CPU.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from .kv_pool import PagedKVPool
+
+
+@dataclass
+class ServerConfig:
+    batch_size: int = 8
+    max_len: int = 256
+    page_tokens: int = 16
+    n_pages: int = 512
+    compact_budget_tokens: int = 64      # per decode step
+    max_new_tokens: int = 32
+
+
+@dataclass
+class _Slot:
+    rid: int = -1
+    remaining: int = 0
+    arrived: float = 0.0
+
+
+class BatchServer:
+    """Continuous-batching decode server over a fixed slot batch."""
+
+    def __init__(self, cfg_model, params, scfg: ServerConfig):
+        self.cfg = cfg_model
+        self.params = params
+        self.scfg = scfg
+        self.pool = PagedKVPool(scfg.n_pages, scfg.page_tokens)
+        self.slots = [_Slot() for _ in range(scfg.batch_size)]
+        self.cache = init_cache(cfg_model, scfg.batch_size, scfg.max_len)
+        self.tokens = jnp.zeros((scfg.batch_size,), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg_model, p, c, t))
+        self.queue: list[tuple[int, float, int]] = []   # rid, t_arrive, len
+        self.completed: list[tuple[int, float, float]] = []
+        self._next_rid = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------- clients
+    def submit(self, now: float, prompt_tokens: int = 8) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append((rid, now, prompt_tokens))
+        return rid
+
+    def _try_admit(self, now: float):
+        for slot in self.slots:
+            if slot.rid >= 0 or not self.queue:
+                continue
+            rid, t0, plen = self.queue[0]
+            if self.pool.admit(rid, plen) is None:
+                break                        # admission stalled on pages
+            self.queue.pop(0)
+            slot.rid = rid
+            slot.remaining = self.scfg.max_new_tokens
+            slot.arrived = t0
+
+    # ---------------------------------------------------------------- step
+    def step(self, now: float):
+        """One decode step for the whole batch + compaction quantum."""
+        self._try_admit(now)
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          self.tokens)
+        self.tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.steps += 1
+        for slot in self.slots:
+            if slot.rid < 0:
+                continue
+            self.pool.extend(slot.rid, 1)
+            slot.remaining -= 1
+            if slot.remaining <= 0:
+                self.pool.retire(slot.rid)
+                self.completed.append((slot.rid, slot.arrived, now))
+                slot.rid = -1
+        self.pool.pump(self.scfg.compact_budget_tokens)
+
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.rid >= 0)
+
+
+def two_phase_admission(make_server: Callable[[], BatchServer],
+                        testing_steps: int = 300,
+                        running_steps: int = 600,
+                        utilization: float = 0.95,
+                        prompt_tokens: int = 8,
+                        pcts=(50, 95, 99)) -> dict:
+    """Calibrate a sustainable admission rate with the paper's two-phase
+    method.  Time unit = decode steps (deterministic on CPU)."""
+    # -- testing phase: closed system (always keep the queue non-empty)
+    srv = make_server()
+    for t in range(testing_steps):
+        while len(srv.queue) < srv.scfg.batch_size:
+            srv.submit(float(t), prompt_tokens)
+        srv.step(float(t))
+    done = [c for c in srv.completed if c[1] > testing_steps * 0.2]
+    max_rate = len(done) / (testing_steps * 0.8)        # requests per step
+
+    # -- running phase: open system at 95% of measured max
+    rate = utilization * max_rate
+    srv = make_server()
+    acc = 0.0
+    for t in range(running_steps):
+        acc += rate
+        while acc >= 1.0:
+            srv.submit(float(t), prompt_tokens)
+            acc -= 1.0
+        srv.step(float(t))
+    lats = np.array([t1 - t0 for _, t0, t1 in srv.completed])
+    lat_pcts = {p: float(np.percentile(lats, p)) if len(lats) else
+                float("inf") for p in pcts}
+    return {"max_rate_per_step": max_rate,
+            "admitted_rate": rate,
+            "completed": len(srv.completed),
+            "latency_pcts_steps": lat_pcts,
+            "admission_stalls": srv.pool.stats["admission_stalls"],
+            "occupancy": srv.pool.occupancy}

@@ -1,0 +1,5 @@
+from .steps import (TrainState, input_specs, make_decode_step,
+                    make_prefill_step, make_train_step, train_state_axes)
+
+__all__ = ["TrainState", "input_specs", "make_decode_step",
+           "make_prefill_step", "make_train_step", "train_state_axes"]

@@ -1,0 +1,197 @@
+"""Step factories: train_step / prefill_step / decode_step as pjit-ready
+functions plus their input/output shardings and abstract input specs.
+
+These are the objects the dry-run lowers and the launcher executes — one
+code path for both (ShapeDtypeStructs in, compiled executable out).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (default_rules, make_constrainer,
+                                        sharding_for, tree_shardings)
+from repro.models import (abstract_params, cache_logical_axes, decode_step,
+                          init_cache, param_logical_axes, prefill, train_loss)
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import make_optimizer, opt_state_logical_axes
+from repro.optim.schedules import cosine_schedule
+
+
+def TrainState(**kw) -> dict:
+    """{"params": ..., "opt": ...} as a plain dict (a real pytree)."""
+    return dict(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (assignment deliverable: ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.family == "vlm":
+            text = max(S - cfg.n_patches, 1)
+            batch = {"tokens": jax.ShapeDtypeStruct((B, text), i32),
+                     "patches": jax.ShapeDtypeStruct(
+                         (B, cfg.n_patches, cfg.d_model), f32)}
+        elif cfg.family == "encdec":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                     "frames": jax.ShapeDtypeStruct(
+                         (B, cfg.enc_frames, cfg.d_model), f32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return batch
+    # decode: one new token against an S-long cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"tokens": jax.ShapeDtypeStruct((B,), i32), "cache": cache}
+
+
+def batch_shardings(cfg, mesh: Mesh, rules, batch_specs: dict):
+    ax = {"tokens": ("batch", None), "patches": ("batch", None, None),
+          "frames": ("batch", None, None)}
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = sharding_for(mesh, rules, tuple(v.shape),
+                              ax.get(k, ("batch",) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def effective_microbatches(cfg: ModelConfig, mesh: Mesh,
+                           global_batch: int) -> int:
+    """Clamp the configured grad-accumulation factor so each microbatch
+    still divides the data-parallel axes (per-device batch >= 1)."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= int(mesh.shape[a])
+    mb = min(cfg.microbatches, max(global_batch // dp, 1))
+    while global_batch % mb or (global_batch // mb) % dp:
+        mb -= 1
+        if mb <= 1:
+            return 1
+    return mb
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, rules=None, *,
+                    microbatches: int | None = None,
+                    learning_rate: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000):
+    """Returns (step_fn, state_shardings, batch_sharding_fn).
+
+    ``step_fn(state, batch) -> (state, metrics)`` — pure, donate-ready.
+    ``microbatches`` defaults to the architecture's configured
+    grad-accumulation factor; the accumulator dtype is
+    ``cfg.accum_dtype`` (bf16 for the 1T-param config, fp32 otherwise).
+    """
+    rules = rules or default_rules(mesh)
+    sh = make_constrainer(mesh, rules)
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+    microbatches = cfg.microbatches if microbatches is None else microbatches
+    acc_dt = jnp.dtype(cfg.accum_dtype)
+
+    def loss_fn(params, batch):
+        return train_loss(cfg, params, batch, sh=sh)
+
+    def step_fn(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        if microbatches > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + (g / microbatches).astype(acc_dt),
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / microbatches), None
+
+            mbs = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches) + a.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)),
+                                            mbs)
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(opt_state["step"], warmup_steps, total_steps,
+                             learning_rate)
+        new_params, new_opt = opt_update(params, grads, opt_state, lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    p_axes = param_logical_axes(cfg)
+    p_abs = abstract_params(cfg)
+    o_abs = jax.eval_shape(opt_init, p_abs)
+    o_axes = opt_state_logical_axes(cfg.optimizer, p_axes, p_abs)
+    state_shardings = TrainState(
+        params=tree_shardings(mesh, rules, p_abs, p_axes),
+        opt=tree_shardings(mesh, rules, o_abs, o_axes))
+
+    def abstract_state():
+        return TrainState(params=p_abs, opt=o_abs)
+
+    return step_fn, state_shardings, abstract_state
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    from repro.models import init_params
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=opt_init(params))
+
+
+def train_state_axes(cfg: ModelConfig):
+    p_axes = param_logical_axes(cfg)
+    p_abs = abstract_params(cfg)
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    o_abs = jax.eval_shape(opt_init, p_abs)
+    return TrainState(params=p_axes,
+                      opt=opt_state_logical_axes(cfg.optimizer, p_axes, p_abs))
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, max_len: int, rules=None):
+    rules = rules or default_rules(mesh)
+    sh = make_constrainer(mesh, rules)
+
+    def prefill_fn(params, batch):
+        return prefill(cfg, params, batch, max_len, sh=sh)
+
+    p_abs = abstract_params(cfg)
+    p_shard = tree_shardings(mesh, rules, p_abs, param_logical_axes(cfg))
+    return prefill_fn, p_shard
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, rules=None):
+    """Returns (decode_fn, param_shardings, cache_shardings_fn)."""
+    rules = rules or default_rules(mesh)
+    sh = make_constrainer(mesh, rules)
+
+    def decode_fn(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, sh=sh)
+
+    p_abs = abstract_params(cfg)
+    p_shard = tree_shardings(mesh, rules, p_abs, param_logical_axes(cfg))
+
+    def cache_shardings(batch: int, max_len: int):
+        c_abs = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+        return tree_shardings(mesh, rules, c_abs, cache_logical_axes(cfg))
+
+    return decode_fn, p_shard, cache_shardings

@@ -1,0 +1,282 @@
+"""Unit tests for merge policies, constraints and schedulers."""
+import pytest
+
+from repro.core import (Component, GlobalConstraint, L0Constraint, LSMTree,
+                        LevelingPolicy, LocalConstraint, MergeOp,
+                        PartitionedLevelingPolicy, SizeTieredPolicy,
+                        TieringPolicy, FairScheduler, GreedyScheduler,
+                        SingleThreadedScheduler)
+
+M = 131072.0
+U = 100e6
+
+
+def make_tree():
+    return LSMTree(unique_keys=U)
+
+
+# ---------------------------------------------------------------- tiering
+class TestTiering:
+    def test_no_merge_below_threshold(self):
+        pol = TieringPolicy(3, M, U)
+        tree = make_tree()
+        tree.add(Component(size=M, level=0))
+        tree.add(Component(size=M, level=0))
+        assert pol.collect_merges(tree, 0.0) == []
+
+    def test_merge_at_threshold_takes_oldest_T(self):
+        pol = TieringPolicy(3, M, U)
+        tree = make_tree()
+        for i in range(4):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        ops = pol.collect_merges(tree, 4.0)
+        assert len(ops) == 1
+        op = ops[0]
+        assert len(op.inputs) == 3
+        assert op.output_level == 1
+        assert [c.created_at for c in op.inputs] == [0.0, 1.0, 2.0]
+
+    def test_one_merge_per_level(self):
+        pol = TieringPolicy(2, M, U)
+        tree = make_tree()
+        for i in range(4):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        ops = pol.collect_merges(tree, 0.0)
+        assert len(ops) == 1  # second pair must wait (S 5.1.3)
+
+    def test_multi_level_concurrent(self):
+        pol = TieringPolicy(2, M, U)
+        tree = make_tree()
+        for i in range(2):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        for i in range(2):
+            tree.add(Component(size=2 * M, level=1, created_at=float(i)))
+        ops = pol.collect_merges(tree, 0.0)
+        assert len(ops) == 2
+        assert {op.output_level for op in ops} == {1, 2}
+
+    def test_complete_merge_replaces_inputs(self):
+        pol = TieringPolicy(2, M, U)
+        tree = make_tree()
+        tree.add(Component(size=M, level=0))
+        tree.add(Component(size=M, level=0))
+        (op,) = pol.collect_merges(tree, 0.0)
+        outs = pol.complete_merge(tree, op, 1.0)
+        assert tree.num_at(0) == 0
+        assert tree.num_at(1) == 1
+        assert outs[0].size == pytest.approx(op.output_size)
+        assert outs[0].size <= 2 * M  # dedup can only shrink
+
+
+# --------------------------------------------------------------- leveling
+class TestLeveling:
+    def test_l0_merges_into_l1(self):
+        pol = LevelingPolicy(10, M, U)
+        tree = make_tree()
+        tree.add(Component(size=M, level=0))
+        tree.add(Component(size=5 * M, level=1))
+        ops = pol.collect_merges(tree, 0.0)
+        assert len(ops) == 1
+        assert ops[0].output_level == 1
+        assert len(ops[0].inputs) == 2
+
+    def test_full_level_promotes(self):
+        pol = LevelingPolicy(10, M, U)
+        tree = make_tree()
+        tree.add(Component(size=pol.capacity(1), level=1))
+        tree.add(Component(size=3 * M, level=2))
+        ops = pol.collect_merges(tree, 0.0)
+        assert any(op.output_level == 2 for op in ops)
+
+    def test_dynamic_level_size_caps(self):
+        pol = LevelingPolicy(10, M, U, dynamic_level_size=True)
+        assert pol.capacity(pol.L) == pytest.approx(U)
+        assert pol.capacity(pol.L - 1) == pytest.approx(U / 10)
+
+    def test_merge_time_variance_structural(self):
+        # the paper's variance source: level-i component size varies in
+        # [0, (T-1) * M * T^(i-1)]
+        pol = LevelingPolicy(10, M, U)
+        assert pol.capacity(1) == pytest.approx(M * 10)
+
+
+# ------------------------------------------------------------ size-tiered
+class TestSizeTiered:
+    def figure18_sizes(self):
+        gb = 1024 * 1024.0  # entries per GB at 1KB
+        return [100 * gb, 10 * gb, 5 * gb, 5 * gb, 5 * gb, 1 * gb,
+                0.125 * gb, 0.0625 * gb, 0.0625 * gb]
+
+    def test_figure18_example(self):
+        """The Figure 18 walk-through: first merge = 4 components starting
+        at the 10GB one; second = 3 components starting at 128MB."""
+        pol = SizeTieredPolicy(1.2, M, U, min_merge=2, max_merge=4)
+        tree = make_tree()
+        for i, s in enumerate(self.figure18_sizes()):
+            tree.add(Component(size=s, level=0, created_at=float(i)))
+        ops = pol.collect_merges(tree, 10.0)
+        assert len(ops) >= 1
+        first = ops[0]
+        sizes = sorted(c.size for c in first.inputs)
+        gb = 1024 * 1024.0
+        assert len(first.inputs) == 4
+        assert max(sizes) == pytest.approx(10 * gb)
+        second = ops[1]
+        assert len(second.inputs) == 3
+        assert max(c.size for c in second.inputs) == pytest.approx(0.125 * gb)
+
+    def test_force_min_merges_exactly_min(self):
+        pol = SizeTieredPolicy(1.2, M, U, min_merge=2, max_merge=10,
+                               force_min=True)
+        tree = make_tree()
+        for i in range(6):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        ops = pol.collect_merges(tree, 0.0)
+        assert all(len(op.inputs) == 2 for op in ops)
+
+    def test_output_keeps_age_position(self):
+        pol = SizeTieredPolicy(1.2, M, U)
+        tree = make_tree()
+        comps = [Component(size=M, level=0, created_at=float(i)) for i in range(4)]
+        for c in comps:
+            tree.add(c)
+        (op, *_) = pol.collect_merges(tree, 5.0)
+        out = pol.complete_merge(tree, op, 6.0)[0]
+        seq = tree.level(0)
+        assert seq.index(out) == 0  # output replaces the oldest inputs
+
+
+# ------------------------------------------------------------- partitioned
+class TestPartitionedLeveling:
+    def make_policy(self, **kw):
+        return PartitionedLevelingPolicy(10, M, U, **kw)
+
+    def test_l0_merge_includes_all_l1(self):
+        pol = self.make_policy()
+        tree = make_tree()
+        for i in range(4):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        for k in range(4):
+            tree.add(Component(size=65536, level=1, key_lo=k * 0.25,
+                               key_hi=(k + 1) * 0.25))
+        ops = pol.collect_merges(tree, 0.0)
+        assert len(ops) == 1
+        assert len(ops[0].inputs) == 8
+        assert ops[0].output_level == 1
+
+    def test_l0_exact_min_under_fix(self):
+        pol = self.make_policy(l0_merge_all=False)
+        tree = make_tree()
+        for i in range(9):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        ops = pol.collect_merges(tree, 0.0)
+        l0_inputs = [c for c in ops[0].inputs if c.level == 0]
+        assert len(l0_inputs) == 4  # exactly l0_min_merge (the paper's fix)
+
+    def test_output_files_bounded(self):
+        pol = self.make_policy()
+        tree = make_tree()
+        for i in range(4):
+            tree.add(Component(size=M, level=0, created_at=float(i)))
+        (op,) = pol.collect_merges(tree, 0.0)
+        outs = pol.complete_merge(tree, op, 1.0)
+        assert all(o.size <= pol.file_entries + 1 for o in outs)
+        assert all(o.level == 1 for o in outs)
+        los = [o.key_lo for o in outs]
+        assert los == sorted(los)
+
+    def test_choose_best_picks_fewest_overlaps(self):
+        pol = self.make_policy(selection="choose_best", l1_capacity=131072.0)
+        tree = make_tree()
+        # L1 over capacity -> eligible. file A overlaps 2 L2 files, B overlaps 1
+        a = Component(size=131072, level=1, key_lo=0.0, key_hi=0.5)
+        b = Component(size=131072, level=1, key_lo=0.5, key_hi=1.0)
+        tree.add(a)
+        tree.add(b)
+        tree.add(Component(size=65536, level=2, key_lo=0.0, key_hi=0.25))
+        tree.add(Component(size=65536, level=2, key_lo=0.25, key_hi=0.5))
+        tree.add(Component(size=65536, level=2, key_lo=0.5, key_hi=1.0))
+        ops = pol.collect_merges(tree, 0.0)
+        assert ops, "level over capacity must schedule a merge"
+        assert b in ops[0].inputs
+
+    def test_round_robin_cycles(self):
+        pol = self.make_policy(selection="round_robin", l1_capacity=131072.0)
+        tree = make_tree()
+        a = Component(size=131072, level=1, key_lo=0.0, key_hi=0.5)
+        b = Component(size=131072, level=1, key_lo=0.5, key_hi=1.0)
+        tree.add(a)
+        tree.add(b)
+        f1 = pol._pick_file(tree, 1)
+        f2 = pol._pick_file(tree, 1)
+        f3 = pol._pick_file(tree, 1)
+        assert (f1, f2) == (a, b) and f3 is a
+
+
+# -------------------------------------------------------------- constraints
+class TestConstraints:
+    def test_global(self):
+        tree = make_tree()
+        for _ in range(3):
+            tree.add(Component(size=M, level=0))
+        assert not GlobalConstraint(3).violated(tree)
+        assert GlobalConstraint(2).violated(tree)
+
+    def test_local(self):
+        tree = make_tree()
+        tree.add(Component(size=M, level=0))
+        tree.add(Component(size=M, level=0))
+        tree.add(Component(size=M, level=1))
+        assert not LocalConstraint(2).violated(tree)
+        tree.add(Component(size=M, level=0))
+        assert LocalConstraint(2).violated(tree)
+
+    def test_local_exempts_partitioned_levels(self):
+        tree = make_tree()
+        for k in range(8):
+            tree.add(Component(size=M, level=1, key_lo=k / 8, key_hi=(k + 1) / 8))
+        assert not LocalConstraint(2).violated(tree)
+
+    def test_l0(self):
+        tree = make_tree()
+        for _ in range(11):
+            tree.add(Component(size=M, level=0))
+        assert not L0Constraint(12).violated(tree)
+        tree.add(Component(size=M, level=0))
+        assert L0Constraint(12).violated(tree)
+
+
+# --------------------------------------------------------------- schedulers
+def ops_with_remaining(rem):
+    out = []
+    for r in rem:
+        c = Component(size=r, level=0)
+        out.append(MergeOp(inputs=[c], output_level=1, output_size=r))
+    return out
+
+
+class TestSchedulers:
+    def test_fair_even_split(self):
+        ops = ops_with_remaining([10, 20, 30])
+        alloc = FairScheduler().allocate(ops)
+        assert all(abs(v - 1 / 3) < 1e-12 for v in alloc.values())
+
+    def test_greedy_smallest_first(self):
+        ops = ops_with_remaining([30, 10, 20])
+        alloc = GreedyScheduler().allocate(ops)
+        assert alloc == {ops[1].op_id: 1.0}
+
+    def test_greedy_k2(self):
+        ops = ops_with_remaining([30, 10, 20])
+        alloc = GreedyScheduler(k=2).allocate(ops)
+        assert set(alloc) == {ops[1].op_id, ops[2].op_id}
+        assert all(abs(v - 0.5) < 1e-12 for v in alloc.values())
+
+    def test_single_threaded_no_preemption(self):
+        s = SingleThreadedScheduler()
+        ops = ops_with_remaining([30, 10])
+        first = s.allocate(ops)
+        assert first == {ops[0].op_id: 1.0}  # FIFO by creation
+        ops2 = ops + ops_with_remaining([1])
+        assert s.allocate(ops2) == {ops[0].op_id: 1.0}  # still the same op
+        assert s.allocate(ops2[1:]) == {ops[1].op_id: 1.0}  # after completion

@@ -1,0 +1,150 @@
+"""Property tests for the paper's three theorems (Appendix A).
+
+These exercise the *scheduling laws* directly, with hypothesis-generated
+workloads where the theorem quantifies over arbitrary inputs.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BurstyArrival, Component, ConstantArrival,
+                        GlobalConstraint, GreedyScheduler, LSMSimulator,
+                        MergeOp, OpenClient, SimConfig, TieringPolicy)
+from repro.core.metrics import _invert
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: processing writes as quickly as possible minimizes the latency
+# of EACH write, for any arrival process.
+# ---------------------------------------------------------------------------
+def _completion_times(trace, xs):
+    return _invert(np.asarray(trace.service_t), np.asarray(trace.service_v), xs)
+
+
+def _run(rate_cap, arrival, duration=1800.0):
+    cfg = SimConfig()
+    pol = TieringPolicy(3, cfg.memtable_entries, cfg.unique_keys)
+    controller = None if rate_cap is None else (lambda t, tree: rate_cap)
+    sim = LSMSimulator(pol, GreedyScheduler(),
+                       GlobalConstraint(2 * pol.expected_components()), cfg,
+                       write_controller=controller)
+    return sim.run(OpenClient(arrivals=arrival), duration)
+
+
+@settings(deadline=None, max_examples=12)
+@given(normal=st.floats(1000, 12000), burst=st.floats(12000, 40000),
+       cap=st.floats(4000, 20000))
+def test_theorem1_asap_dominates_delayed(normal, burst, cap):
+    arrival = BurstyArrival(normal, burst, 300.0, 120.0)
+    asap = _run(None, arrival)
+    delayed = _run(cap, arrival)
+    n_done = min(asap.service_v[-1], delayed.service_v[-1])
+    if n_done < 1:
+        return
+    xs = np.linspace(0.0, n_done * 0.999, 512)
+    t_asap = _completion_times(asap, xs)
+    t_delayed = _completion_times(delayed, xs)
+    # same arrivals => identical arrival times; ASAP completes every write
+    # no later (small fluid-integration tolerance)
+    assert np.all(t_asap <= t_delayed + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: for a STATIC set of same-arity merges, greedy minimizes the
+# number of components at every instant, vs any other allocation.
+# ---------------------------------------------------------------------------
+def _static_schedule(remaining, order_or_alloc, bandwidth=1.0):
+    """Execute static jobs; returns sorted completion times.
+
+    ``order_or_alloc`` is 'greedy' (SJF), or a permutation (sequential
+    execution order), or 'fair'.
+    """
+    rem = list(map(float, remaining))
+    n = len(rem)
+    t = 0.0
+    completions = []
+    if order_or_alloc == "fair":
+        live = list(range(n))
+        while live:
+            share = bandwidth / len(live)
+            k = min(live, key=lambda i: rem[i])
+            dt = rem[k] / share
+            for i in live:
+                rem[i] -= share * dt
+            t += dt
+            done = [i for i in live if rem[i] <= 1e-9]
+            for i in done:
+                completions.append(t)
+                live.remove(i)
+    else:
+        order = (np.argsort(remaining, kind="stable")
+                 if order_or_alloc == "greedy" else order_or_alloc)
+        for i in order:
+            t += rem[i] / bandwidth
+            completions.append(t)
+    return np.asarray(sorted(completions))
+
+
+@settings(deadline=None, max_examples=50)
+@given(sizes=st.lists(st.floats(0.1, 100.0), min_size=1, max_size=8),
+       data=st.data())
+def test_theorem2_greedy_minimizes_components(sizes, data):
+    greedy = _static_schedule(sizes, "greedy")
+    perm = data.draw(st.permutations(range(len(sizes))))
+    other = _static_schedule(sizes, list(perm))
+    fair = _static_schedule(sizes, "fair")
+    # greedy's i-th completion is no later than any other schedule's i-th
+    # completion  =>  #components(t) is pointwise minimal.
+    assert np.all(greedy <= other + 1e-9)
+    assert np.all(greedy <= fair + 1e-9)
+
+
+def test_theorem2_on_simulator_allocations():
+    """Greedy vs fair through the actual scheduler classes on a static set."""
+    from repro.core import FairScheduler
+    comps = [Component(size=s, level=0) for s in (5.0, 1.0, 3.0)]
+    def fresh_ops():
+        return [MergeOp(inputs=[Component(size=c.size, level=0)],
+                        output_level=1, output_size=c.size) for c in comps]
+
+    def run(sched):
+        ops = fresh_ops()
+        t, completions = 0.0, []
+        while ops:
+            alloc = sched.allocate(ops)
+            rates = {o.op_id: alloc.get(o.op_id, 0.0) for o in ops}
+            dt = min(o.remaining_output / rates[o.op_id]
+                     for o in ops if rates[o.op_id] > 0)
+            for o in ops:
+                o.written += rates[o.op_id] * dt
+            t += dt
+            done = [o for o in ops if o.done]
+            for o in done:
+                completions.append(t)
+                ops.remove(o)
+        return completions
+
+    greedy = run(GreedyScheduler())
+    from repro.core import FairScheduler as FS
+    fair = run(FS())
+    assert all(g <= f + 1e-9 for g, f in zip(greedy, fair))
+    assert greedy[0] == pytest.approx(1.0)  # smallest (1.0) first
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3: no scheduler minimizes #components at every instant once the
+# policy creates merges dynamically — the appendix counterexample.
+# ---------------------------------------------------------------------------
+def test_theorem3_counterexample():
+    B = 1.0
+    m12, m45, m13 = 10.0, 6.0, 2.0  # |M13| < |M45| < |M12|
+    # S1: M45 then M12 (then M13)
+    s1_first, s1_second = m45 / B, (m45 + m12) / B
+    # S2: M12 first, which unlocks M13
+    s2_first, s2_second = m12 / B, (m12 + m13) / B
+    assert s1_first < s2_first      # S1 wins the first completion
+    assert s2_second < s1_second    # S2 wins the second completion
+    # any scheduler matching S1's first completion must run M45 first and
+    # then cannot beat S2's second completion:
+    best_second_after_m45 = m45 / B + m12 / B  # M13 not yet creatable
+    assert best_second_after_m45 > s2_second

@@ -1,0 +1,131 @@
+"""Real-engine integration + hypothesis property tests: the LSM engine
+(Pallas data plane + paper scheduling plane) is always equivalent to a
+plain dict under newest-wins semantics."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constraints import GlobalConstraint
+from repro.core.engine import LSMEngine
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 SizeTieredPolicy, TieringPolicy)
+from repro.core.scheduler import (FairScheduler, GreedyScheduler,
+                                  SingleThreadedScheduler)
+
+
+def _mk(policy: str, sched: str, memtable=128, unique=2048):
+    pol = {
+        "tiering": lambda: TieringPolicy(3, memtable, unique),
+        "leveling": lambda: LevelingPolicy(3, memtable, unique),
+        "size_tiered": lambda: SizeTieredPolicy(1.2, memtable, unique),
+        "partitioned": lambda: PartitionedLevelingPolicy(
+            4, memtable, unique, file_entries=64, l1_capacity=256),
+    }[policy]()
+    sch = {"single": SingleThreadedScheduler, "fair": FairScheduler,
+           "greedy": GreedyScheduler}[sched]()
+    return LSMEngine(pol, sch, GlobalConstraint(200),
+                     memtable_entries=memtable, unique_keys=unique,
+                     use_kernels=True, merge_block=64)
+
+
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "size_tiered",
+                                    "partitioned"])
+@pytest.mark.parametrize("sched", ["single", "fair", "greedy"])
+def test_engine_matches_dict(policy, sched):
+    rng = np.random.default_rng(42)
+    eng = _mk(policy, sched)
+    ref = {}
+    for i in range(2500):
+        k = int(rng.integers(0, 2048))
+        v = int(rng.integers(0, 1 << 30))
+        while not eng.put(k, v):
+            eng.pump(256)
+        ref[k] = v
+        if i % 50 == 0:
+            eng.pump(128)
+    eng.drain()
+    for k in rng.choice(2048, 200, replace=False):
+        assert eng.get(int(k)) == ref.get(int(k)), (policy, sched, k)
+    lo, hi = 300, 500
+    assert eng.scan_range(lo, hi) == \
+        {k: v for k, v in ref.items() if lo <= k < hi}
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ops=st.lists(st.tuples(st.integers(0, 255), st.integers(0, 1 << 20)),
+                 min_size=1, max_size=400),
+    pump_every=st.integers(5, 60),
+    policy=st.sampled_from(["tiering", "leveling", "size_tiered"]),
+)
+def test_engine_newest_wins_property(ops, pump_every, policy):
+    """Invariant: after any write sequence + any pump schedule, the engine
+    equals a dict (newest write per key wins, nothing lost)."""
+    eng = _mk(policy, "greedy", memtable=32, unique=256)
+    ref = {}
+    for i, (k, v) in enumerate(ops):
+        while not eng.put(k, v):
+            eng.pump(64)
+        ref[k] = v
+        if i % pump_every == 0:
+            eng.pump(48)
+    eng.drain()
+    for k in ref:
+        assert eng.get(k) == ref[k]
+    assert eng.scan_range(0, 256) == ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(budgets=st.lists(st.integers(1, 400), min_size=1, max_size=30))
+def test_engine_pump_budget_invariant(budgets):
+    """Background I/O spent per pump never exceeds the handed budget
+    (+1 flush granule) — the bandwidth-throttling contract."""
+    eng = _mk("tiering", "fair", memtable=64, unique=512)
+    rng = np.random.default_rng(0)
+    for k in rng.integers(0, 512, 900):
+        while not eng.put(int(k), 1):
+            eng.pump(64)
+    for b in budgets:
+        spent = eng.pump(b)
+        assert spent <= b + eng.memtable_entries
+
+
+def test_component_constraint_stalls_writes():
+    eng = _mk("tiering", "fair", memtable=32, unique=512)
+    eng.constraint = GlobalConstraint(2)
+    rng = np.random.default_rng(1)
+    stalled = False
+    for k in rng.integers(0, 512, 2000):
+        if not eng.put(int(k), 1):
+            stalled = True
+            if eng.stalled:
+                break
+            eng.pump(32)
+    assert stalled, "constraint never produced a write stall"
+
+
+def test_background_driver_thread():
+    """The wall-clock driver pumps the engine concurrently with writes."""
+    import time
+    from repro.core.engine import BackgroundDriver
+    eng = _mk("tiering", "greedy", memtable=64, unique=1024)
+    drv = BackgroundDriver(eng, bandwidth_bytes_per_s=4e6, quantum_s=0.002)
+    drv.start()
+    rng = np.random.default_rng(0)
+    ref = {}
+    try:
+        for i in range(1500):
+            k = int(rng.integers(0, 1024))
+            v = int(rng.integers(0, 1 << 30))
+            deadline = time.time() + 10
+            while not eng.put(k, v):
+                time.sleep(0.002)
+                assert time.time() < deadline, "driver failed to drain"
+            ref[k] = v
+    finally:
+        drv.stop()
+    eng.drain()
+    for k in list(ref)[:100]:
+        assert eng.get(k) == ref[k]
