@@ -1,0 +1,150 @@
+"""Engine read/write-plane throughput: scalar vs vectorized batch paths.
+
+Measures puts/sec for the seed's per-entry admission loop vs the bulk
+``put_batch`` slice path, and gets/sec for per-key ``get`` vs the fused
+``get_batch`` (one stacked Bloom launch across all tables) at several
+table counts.  The batch plane must amortize per-call Python + kernel
+dispatch: the acceptance bar is >= 5x on reads at >= 8 tables and >= 3x
+on writes.
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.engine import LSMEngine
+from repro.core.policies import TieringPolicy
+from repro.core.scheduler import SingleThreadedScheduler
+
+from .common import save
+
+KEY_SPACE = 1 << 20
+MEMTABLE = 1024
+
+
+class _FlushOnlyPolicy(TieringPolicy):
+    """Never merges — keeps an exact, stable table count for read benches."""
+
+    def collect_merges(self, tree, now):
+        return []
+
+
+def _seed_scalar_put_batch(eng: LSMEngine, keys, values) -> int:
+    """The seed's per-entry admission loop (the pre-batch-plane hot path),
+    kept verbatim as the scalar baseline."""
+    keys = np.asarray(keys)
+    n_ok = 0
+    for i in range(len(keys)):
+        if not eng.put(int(keys[i]), int(np.asarray(values)[i])):
+            break
+        n_ok += 1
+    return n_ok
+
+
+def _mk_engine(tables: int = 0, seed: int = 0) -> LSMEngine:
+    eng = LSMEngine(_FlushOnlyPolicy(1 << 20, MEMTABLE, KEY_SPACE),
+                    SingleThreadedScheduler(), None,
+                    memtable_entries=MEMTABLE, num_memtables=2,
+                    unique_keys=KEY_SPACE, merge_block=128)
+    rng = np.random.default_rng(seed)
+    for _ in range(tables):
+        keys = rng.integers(0, KEY_SPACE, MEMTABLE, dtype=np.uint32)
+        vals = rng.integers(0, 1 << 30, MEMTABLE).astype(np.int32)
+        assert eng.put_batch(keys, vals) == MEMTABLE
+        eng._seal_active()
+        eng.pump(MEMTABLE)          # flush -> exactly one more table
+    assert len(eng.tables) == tables
+    return eng
+
+
+def _bench_reads(tables: int, n_keys: int, n_scalar: int, reps: int) -> dict:
+    eng = _mk_engine(tables=tables, seed=tables)
+    rng = np.random.default_rng(99)
+    qs = rng.integers(0, KEY_SPACE, n_keys, dtype=np.uint32)
+    eng.get_batch(qs[:8])           # warm both jit paths
+    eng.get(int(qs[0]))
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng.get_batch(qs)
+    batch_s = (time.perf_counter() - t0) / reps
+
+    t0 = time.perf_counter()
+    for k in qs[:n_scalar]:
+        eng.get(int(k))
+    scalar_s = time.perf_counter() - t0
+
+    batch_rate = n_keys / batch_s
+    scalar_rate = n_scalar / scalar_s
+    return {"tables": tables, "batch_gets_per_s": batch_rate,
+            "scalar_gets_per_s": scalar_rate,
+            "speedup": batch_rate / scalar_rate}
+
+
+def _bench_writes(n_entries: int, reps: int) -> dict:
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, KEY_SPACE, n_entries, dtype=np.uint32)
+    vals = rng.integers(0, 1 << 30, n_entries).astype(np.int32)
+
+    def one(bulk: bool) -> tuple[float, int]:
+        best, accepted = float("inf"), 0
+        for _ in range(reps):
+            eng = _mk_engine()
+            t0 = time.perf_counter()
+            if bulk:
+                accepted = eng.put_batch(keys, vals)
+            else:
+                accepted = _seed_scalar_put_batch(eng, keys, vals)
+            best = min(best, time.perf_counter() - t0)
+        return best, accepted
+
+    bulk_s, n_bulk = one(bulk=True)
+    scalar_s, n_scalar = one(bulk=False)
+    assert n_bulk == n_scalar, "accept-count divergence"
+    return {"entries": n_entries, "accepted": n_bulk,
+            "bulk_puts_per_s": n_bulk / bulk_s,
+            "scalar_puts_per_s": n_scalar / scalar_s,
+            "speedup": scalar_s / bulk_s}
+
+
+def run(quick: bool = False) -> dict:
+    table_counts = [2, 8] if quick else [2, 4, 8, 16]
+    n_keys = 256 if quick else 1024
+    n_scalar = 32 if quick else 128
+    reps = 2 if quick else 5
+
+    reads = [_bench_reads(t, n_keys, n_scalar, reps) for t in table_counts]
+    # both memtables fill exactly: scalar and bulk admit the same count
+    writes = _bench_writes(MEMTABLE * 2, reps)
+
+    out = {"reads": reads, "writes": writes, "claims": {}}
+    at8 = [r for r in reads if r["tables"] >= 8]
+    out["claims"]["batch_get_5x_at_8_tables"] = all(
+        r["speedup"] >= 5.0 for r in at8) and bool(at8)
+    out["claims"]["bulk_put_3x"] = writes["speedup"] >= 3.0
+    out["claims"]["accept_counts_equal"] = writes["accepted"] == MEMTABLE * 2
+    save("BENCH_engine", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    res = run(quick=ap.parse_args().quick)
+    for r in res["reads"]:
+        print(f"[engine] gets  @ {r['tables']:3d} tables: "
+              f"batch {r['batch_gets_per_s']:9.0f}/s  "
+              f"scalar {r['scalar_gets_per_s']:9.0f}/s  "
+              f"speedup {r['speedup']:.1f}x")
+    w = res["writes"]
+    print(f"[engine] puts  @ {w['entries']} entries: "
+          f"bulk {w['bulk_puts_per_s']:9.0f}/s  "
+          f"scalar {w['scalar_puts_per_s']:9.0f}/s  "
+          f"speedup {w['speedup']:.1f}x")
+    print(json.dumps(res["claims"], indent=1))
+    raise SystemExit(0 if all(res["claims"].values()) else 1)

@@ -24,6 +24,7 @@ MODULES = [
     "fig21_23_partitioned",
     "fig24_partition_size",
     "fig25_27_secondary",
+    "engine_throughput",
     "kernels_bench",
     "ckpt_twophase",
     "serving_twophase",

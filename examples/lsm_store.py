@@ -20,17 +20,23 @@ def main():
                     unique_keys=8192, merge_block=128)
     ref = {}
     stalls = 0
-    for i in range(10_000):
-        k, v = int(rng.integers(0, 8192)), int(rng.integers(0, 1 << 30))
-        while not eng.put(k, v):
+    keys = rng.integers(0, 8192, 10_000).astype(np.uint32)
+    vals = rng.integers(0, 1 << 30, 10_000).astype(np.int32)
+    # bulk admission: slice-at-a-time, pumping only when admission stalls
+    done = 0
+    while done < len(keys):
+        chunk_k, chunk_v = keys[done:done + 512], vals[done:done + 512]
+        n = eng.put_batch(chunk_k, chunk_v)
+        ref.update(zip(chunk_k[:n].tolist(), chunk_v[:n].tolist()))
+        done += n
+        if n < len(chunk_k):
             stalls += 1
-            eng.pump(1024)
-        ref[k] = v
-        if i % 64 == 0:
-            eng.pump(512)             # background I/O quantum
+        eng.pump(512)                 # background I/O quantum
     eng.drain()
-    qs = rng.choice(8192, 500, replace=False)
-    wrong = sum(eng.get(int(k)) != ref.get(int(k)) for k in qs)
+    qs = rng.choice(8192, 500, replace=False).astype(np.uint32)
+    found, got = eng.get_batch(qs)    # one fused multi-table probe
+    wrong = sum((int(got[i]) if found[i] else None) != ref.get(int(k))
+                for i, k in enumerate(qs))
     print(f"writes={eng.stats['puts']} flushes={eng.stats['flushes']} "
           f"merges={eng.stats['merges']} components={eng.num_components()} "
           f"write-stall-retries={stalls}")

@@ -28,6 +28,11 @@ class Component:
     key_lo: float = 0.0              # [key_lo, key_hi) in unit key space
     key_hi: float = 1.0
     created_at: float = 0.0          # simulation / wall time of creation
+    stamp: float = 0.0               # data age (NOT creation time): the
+                                     # real engine mirrors its flush/merge
+                                     # data stamps here so policies can
+                                     # make age-aware choices; the fluid
+                                     # simulator leaves it 0
     cid: int = field(default_factory=fresh_id)
     merging: bool = False            # currently an input of an active merge
 

@@ -13,6 +13,23 @@ advances background I/O by one bandwidth quantum, split across flushes
 (pause/resume = simply which ops receive quanta).  A wall-clock driver
 (`BackgroundDriver`) turns quanta into a rate-limited background thread
 for the serving example; tests use pump() directly for determinism.
+
+Read view contract: point lookups and scans go through a cached
+``_ReadView`` — the disk tables snapshotted NEWEST-FIRST by
+``(-data_stamp, component.level)`` (on equal stamps the LOWER level holds
+the newer version, since levels are age-ordered) together with the
+stacked, zero-padded Bloom filter words for the fused multi-table probe.
+The view is invalidated (``_view = None``) exactly where ``self.tables``
+changes: flush binding in ``pump`` and merge completion in
+``_finish_merge``; it is rebuilt lazily on the next read.  ``get``,
+``get_batch`` (newest-first, early-exit) and ``scan_range`` (oldest-first
+= ``reversed(view.tables)``, newer overrides) share this one ordering —
+the seed's `(-stamp, level)` vs `(stamp, -level)` sort keys are the same
+total order traversed from opposite ends, now written in one place.
+
+``interpret`` selects the Pallas execution mode for every kernel the
+engine launches (bloom probes and the merge path): True keeps CPU tests
+on the interpreter, False compiles for the accelerator in benchmarks.
 """
 from __future__ import annotations
 
@@ -31,13 +48,29 @@ from .scheduler import MergeScheduler
 from .sstable import SSTable
 
 try:  # the merge kernel needs jax; engine tests always have it
+    from repro.kernels.bloom.ops import bloom_probe_multi, stack_filters
     from repro.kernels.merge.ops import merge_dedup
     import jax.numpy as jnp
 except Exception:  # pragma: no cover
     merge_dedup = None
+    bloom_probe_multi = stack_filters = None
 
 
 ENTRY_BYTES = 1024  # paper's 1 KB records: 1 entry == 1 KB of I/O budget
+
+
+@dataclass
+class _ReadView:
+    """Cached snapshot of the disk tables for the read plane.
+
+    ``tables`` is newest-first by ``(-data_stamp, level)``; ``filts`` /
+    ``meta`` are the stacked padded Bloom words + per-table (n_bits, k)
+    for the fused multi-table probe (None when there are no tables).
+    Rebuilt lazily after any flush/merge completion invalidates it.
+    """
+    tables: tuple
+    filts: Optional[np.ndarray] = None
+    meta: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -59,7 +92,7 @@ class LSMEngine:
                  constraint: ComponentConstraint | None = None,
                  memtable_entries: int = 4096, num_memtables: int = 2,
                  unique_keys: float = 1e6, use_kernels: bool = True,
-                 merge_block: int = 256):
+                 merge_block: int = 256, interpret: bool = True):
         self.policy = policy
         self.scheduler = scheduler
         self.constraint = constraint or NoConstraint()
@@ -68,10 +101,13 @@ class LSMEngine:
         self.num_memtables = int(num_memtables)
         self.use_kernels = bool(use_kernels) and merge_dedup is not None
         self.merge_block = int(merge_block)
+        self.interpret = bool(interpret)
 
         self.active = MemTable(self.memtable_entries)
         self.sealed: list[MemTable] = []
         self.tables: dict[int, SSTable] = {}     # component id -> SSTable
+        self._view: Optional[_ReadView] = None   # cached read view
+        self._view_epoch = 0                     # bumped on invalidation
         self.running: dict[int, _RunningMerge] = {}
         self.pending_flush: list[tuple[np.ndarray, np.ndarray]] = []
         self.now = 0.0
@@ -98,13 +134,31 @@ class LSMEngine:
         return True
 
     def put_batch(self, keys, values) -> int:
-        """Write as many as fit; returns the number accepted."""
-        keys = np.asarray(keys)
+        """Bulk admission: admit entries in numpy-slice chunks, computing
+        the seal/stall boundary once per chunk instead of per entry.
+        Returns the count accepted before the first stall — identical to
+        running the scalar ``put`` loop (the tree, and hence the stall
+        predicate, only changes under ``pump``, so one check per chunk is
+        exact).  Sole divergence: a reserved sentinel key raises
+        ValueError before its chunk admits ANY entry (atomic batch
+        validation), where the scalar loop would admit the prefix
+        first."""
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.int32)
+        n = len(keys)
         n_ok = 0
-        for i in range(len(keys)):
-            if not self.put(int(keys[i]), int(np.asarray(values)[i])):
+        while n_ok < n:
+            self._refresh_stall()
+            if self.stalled:
                 break
-            n_ok += 1
+            if self.active.full:
+                if len(self.sealed) >= self.num_memtables - 1:
+                    self.stats["stall_events"] += 1
+                    break
+                self._seal_active()
+            took = self.active.put_batch(keys[n_ok:], values[n_ok:])
+            n_ok += took
+            self.stats["puts"] += took
         return n_ok
 
     def _seal_active(self):
@@ -115,37 +169,85 @@ class LSMEngine:
         self.stalled = self.constraint.violated(self.tree)
 
     # ------------------------------------------------------------------ read
+    def _read_view(self) -> _ReadView:
+        """The cached read view (see module docstring for the contract).
+        Epoch-guarded against the wall-clock driver: if a flush/merge
+        invalidates mid-build, the snapshot serves this call but is NOT
+        cached, so a stale view can never become sticky."""
+        view = self._view
+        if view is None:
+            epoch = self._view_epoch
+            tables = tuple(sorted(
+                (t for t in self.tables.values() if t.component is not None),
+                key=lambda t: (-t.data_stamp, t.component.level)))
+            if tables and stack_filters is not None:
+                filts, meta = stack_filters(
+                    [t.bloom_host() for t in tables],
+                    [t.n_bits for t in tables],
+                    [t.k_hashes for t in tables])
+                view = _ReadView(tables, filts, meta)
+            else:
+                view = _ReadView(tables)
+            if epoch == self._view_epoch:
+                self._view = view
+        return view
+
+    def _invalidate_view(self):
+        self._view_epoch += 1
+        self._view = None
+
     def get(self, key: int):
-        self.stats["lookups"] += 1
-        v = self.active.get(key)
-        if v is not None:
-            return v
-        for mt in reversed(self.sealed):
-            v = mt.get(key)
-            if v is not None:
-                return v
-        # disk components newest-data-first; on equal stamps the lower
-        # level holds the newer version (levels are age-ordered)
-        tables = sorted((t for t in self.tables.values()
-                         if t.component is not None),
-                        key=lambda t: (-t.data_stamp, t.component.level))
-        for table in tables:
-            if not bool(table.maybe_contains(np.array([key], np.uint32))[0]):
-                self.stats["bloom_skips"] += 1
+        found, vals = self.get_batch(np.array([key], np.uint32))
+        return int(vals[0]) if found[0] else None
+
+    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Resolve a whole key batch in one pass: vectorized newest-wins
+        lookup over the memtables, then ONE fused Bloom probe across all
+        disk tables (a (tables, keys) Pallas grid), then sorted searches
+        only for surviving (table, key) pairs, newest table first with
+        early exit.  Returns (found mask, values)."""
+        keys = np.asarray(keys, np.uint32)
+        q = len(keys)
+        self.stats["lookups"] += q
+        found = np.zeros(q, bool)
+        vals = np.zeros(q, np.int32)
+        for mt in (self.active, *reversed(self.sealed)):
+            if found.all():
+                return found, vals
+            f, v = mt.get_batch(keys)
+            new = f & ~found
+            vals[new] = v[new]
+            found |= new
+        if found.all():
+            return found, vals
+        view = self._read_view()
+        if not view.tables:
+            return found, vals
+        if view.filts is not None:
+            maybe = bloom_probe_multi(view.filts, view.meta, keys,
+                                      interpret=self.interpret)
+        else:  # pragma: no cover - kernels unavailable
+            maybe = np.ones((len(view.tables), q), bool)
+        for ti, table in enumerate(view.tables):
+            pend = ~found
+            if not pend.any():
+                break
+            cand = pend & maybe[ti]
+            self.stats["bloom_skips"] += int((pend & ~maybe[ti]).sum())
+            if not cand.any():
                 continue
-            v = table.get(key)
-            if v is not None:
-                return v
-        return None
+            idx = np.flatnonzero(cand)
+            f, v = table.search(keys[idx])
+            hit = idx[f]
+            vals[hit] = v[f]
+            found[hit] = True
+        return found, vals
 
     def scan_range(self, lo: int, hi: int) -> dict[int, int]:
-        """Newest-wins range scan across all components."""
+        """Newest-wins range scan across all components (oldest-first
+        traversal of the shared read view; newer tables override)."""
         out: dict[int, int] = {}
-        tables = sorted(self.tables.values(),
-                        key=lambda t: (t.data_stamp,
-                                       -(t.component.level
-                                         if t.component else 0)))
-        for table in tables:                   # oldest first; newer overrides
+        for table in reversed(self._read_view().tables):
             ks, vs = table.scan_range(lo, hi)
             out.update(zip(ks.tolist(), vs.tolist()))
         for mt in self.sealed:                 # memory newer than disk
@@ -170,11 +272,14 @@ class LSMEngine:
             keys, vals = mt.seal()
             table = SSTable.build(keys, vals,
                                   level=self.policy.flush_target_level(),
-                                  created_at=self.now)
+                                  created_at=self.now,
+                                  interpret=self.interpret)
             self._stamp += 1
             table.data_stamp = self._stamp
+            table.component.stamp = float(self._stamp)
             self.tree.add(table.component)
             self.tables[table.component.cid] = table
+            self._invalidate_view()
             self.stats["flushes"] += 1
             spent += len(keys)
             self._collect_merges()
@@ -233,7 +338,7 @@ class LSMEngine:
             mk, mv, keep, valid = merge_dedup(
                 jnp.asarray(keys_a, jnp.uint32), jnp.asarray(vals_a, jnp.int32),
                 jnp.asarray(keys_b, jnp.uint32), jnp.asarray(vals_b, jnp.int32),
-                block=self.merge_block)
+                block=self.merge_block, interpret=self.interpret)
             mk, mv = np.asarray(mk), np.asarray(mv)
             keep = np.array(keep)          # writable copy
             keep[valid:] = False
@@ -278,9 +383,11 @@ class LSMEngine:
         # partitioned policies may split the output into several files
         def _bind(comp, ks, vs):
             table = SSTable.build(ks, vs, level=comp.level,
-                                  created_at=self.now)
+                                  created_at=self.now,
+                                  interpret=self.interpret)
             table.component = comp
             table.data_stamp = stamp
+            comp.stamp = float(stamp)
             # keep the scheduling-plane range metadata honest: the policy's
             # overlap selection must see the REAL key span, else adjacent-
             # level overlaps are missed and newest-wins breaks.
@@ -297,6 +404,7 @@ class LSMEngine:
             for comp, idx in zip(outs, splits):
                 _bind(comp, keys[idx], vals[idx])
         self.running.pop(rm.op.op_id, None)
+        self._invalidate_view()
         self.stats["merges"] += 1
         self._collect_merges()
 

@@ -13,12 +13,26 @@ import numpy as np
 SENTINEL_KEY = np.uint32(0xFFFFFFFF)
 
 
+def sorted_lookup(sk: np.ndarray, sv: np.ndarray,
+                  keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(found mask, values) for ``keys`` against a sorted unique run
+    ``(sk, sv)`` — the one sorted-search used by memtables and SSTables."""
+    if len(sk) == 0 or len(keys) == 0:
+        return np.zeros(len(keys), bool), np.zeros(len(keys), np.int32)
+    pos = np.minimum(np.searchsorted(sk, keys), len(sk) - 1)
+    found = sk[pos] == keys
+    return found, np.where(found, sv[pos], 0).astype(np.int32)
+
+
 class MemTable:
     def __init__(self, capacity: int):
         self.capacity = int(capacity)
         self._keys = np.empty(self.capacity, np.uint32)
         self._vals = np.empty(self.capacity, np.int32)
         self._n = 0
+        # sorted newest-wins view, cached between writes (sealed
+        # memtables are immutable, so theirs is computed exactly once)
+        self._sealed: tuple[np.ndarray, np.ndarray] | None = None
 
     def __len__(self) -> int:
         return self._n
@@ -36,18 +50,27 @@ class MemTable:
         self._keys[self._n] = k
         self._vals[self._n] = np.int32(value)
         self._n += 1
+        self._sealed = None
 
-    def put_batch(self, keys, values) -> None:
+    def put_batch(self, keys, values) -> int:
+        """Admit the longest prefix that fits; returns the count admitted
+        (0 when full — never raises on overflow, so bulk admission needs
+        no try/except on the hot path).  A reserved sentinel key anywhere
+        in the batch is rejected ATOMICALLY (ValueError before any entry
+        is admitted) — unlike the scalar ``put`` loop, which would admit
+        the prefix before raising; batch callers get all-or-nothing
+        validation instead."""
         keys = np.asarray(keys, np.uint32)
         values = np.asarray(values, np.int32)
-        n = len(keys)
-        if self._n + n > self.capacity:
-            raise RuntimeError("memtable overflow")
         if (keys == SENTINEL_KEY).any():
             raise ValueError("key 2**32-1 is reserved")
-        self._keys[self._n:self._n + n] = keys
-        self._vals[self._n:self._n + n] = values
-        self._n += n
+        take = min(len(keys), self.capacity - self._n)
+        if take > 0:
+            self._keys[self._n:self._n + take] = keys[:take]
+            self._vals[self._n:self._n + take] = values[:take]
+            self._n += take
+            self._sealed = None
+        return take
 
     def get(self, key: int):
         """Newest-wins lookup over the unsorted tail (scan newest-first)."""
@@ -57,14 +80,42 @@ class MemTable:
             return int(self._vals[idx[-1]])
         return None
 
+    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized newest-wins lookup: (found mask, values) for a key
+        batch.  Small batches against a write-dirtied buffer use the
+        O(n)-per-key linear scan (the scalar hot path under interleaved
+        put/get); larger batches amortize one sort via the cached sealed
+        view."""
+        keys = np.asarray(keys, np.uint32)
+        q = len(keys)
+        if self._n == 0 or q == 0:
+            return np.zeros(q, bool), np.zeros(q, np.int32)
+        if self._sealed is None and q < 16:
+            found = np.zeros(q, bool)
+            vals = np.zeros(q, np.int32)
+            buf_k = self._keys[:self._n]
+            buf_v = self._vals[:self._n]
+            for i in range(q):
+                idx = np.flatnonzero(buf_k == keys[i])
+                if idx.size:
+                    found[i] = True
+                    vals[i] = buf_v[idx[-1]]      # last write wins
+            return found, vals
+        sk, sv = self.seal()
+        return sorted_lookup(sk, sv, keys)
+
     def seal(self):
-        """Sorted, newest-wins-deduplicated (keys, values) arrays."""
-        keys = self._keys[:self._n]
-        vals = self._vals[:self._n]
-        # stable sort keeps insertion order within equal keys; keep the last
-        order = np.argsort(keys, kind="stable")
-        sk, sv = keys[order], vals[order]
-        last = np.ones(len(sk), bool)
-        if len(sk) > 1:
-            last[:-1] = sk[1:] != sk[:-1]
-        return sk[last], sv[last]
+        """Sorted, newest-wins-deduplicated (keys, values) arrays
+        (cached until the next write)."""
+        if self._sealed is None:
+            keys = self._keys[:self._n]
+            vals = self._vals[:self._n]
+            # stable sort keeps insertion order within equal keys; keep
+            # the last
+            order = np.argsort(keys, kind="stable")
+            sk, sv = keys[order], vals[order]
+            last = np.ones(len(sk), bool)
+            if len(sk) > 1:
+                last[:-1] = sk[1:] != sk[:-1]
+            self._sealed = (sk[last], sv[last])
+        return self._sealed

@@ -152,27 +152,59 @@ class LevelingPolicy(MergePolicy):
         merges from level i-1 — up to one merge per level runs
         concurrently instead of the whole tree serializing."""
         ops: list[MergeOp] = []
+        comps = tree.all_components()
+
+        # Age-adjacency guard.  Swap semantics can transiently leave
+        # several runs on a level, and tree-list order is insertion
+        # order, not data-age order — merging incoming data with an OLD
+        # resident while a fresher run sits elsewhere in the tree yields
+        # an output whose data stamp (max over inputs) claims recency the
+        # skipped run violates, so stamp-ordered newest-wins reads in the
+        # real engine return stale values.  Invariant: live runs
+        # partition the flush-age axis into contiguous intervals, so an
+        # incoming run may only merge with the GLOBALLY next-older live
+        # run; when that run is not an eligible candidate (busy, or on a
+        # different level), the incoming run is emitted solo instead —
+        # always sound, since a solo run skips nothing.  The engine
+        # mirrors data stamps onto components; the fluid simulator leaves
+        # every stamp 0, where the rule degrades to the seed's
+        # last-inserted pick (identical fluid dynamics).
+        def target_for(x_stamp: float, cands: list[Component]):
+            if not cands:
+                return []
+            if x_stamp <= 0:            # fluid sim: no data stamps
+                return [cands[-1]]
+            older = [c for c in comps if c.stamp < x_stamp]
+            if not older:
+                return []
+            nxt = max(older, key=lambda c: c.stamp)
+            return [nxt] if nxt in cands else []
+
         # L0 (flushed components) -> the growing (non-frozen) L1
         l0 = tree.level(0)
         if l0 and not any(c.merging for c in l0):
             l1_grow = [c for c in tree.level(1)
                        if not c.merging and c.size < self.capacity(1)]
-            inputs = list(l0) + l1_grow[-1:]
+            inputs = list(l0) + target_for(min(c.stamp for c in l0),
+                                           l1_grow)
             out = tree.merged_size([c.size for c in inputs])
             ops.append(MergeOp(inputs=inputs, output_level=1,
                                output_size=out, created_at=now))
-        # full Li -> growing Li+1
+        # full Li -> growing Li+1 (oldest data first, so a newer frozen
+        # run can never leapfrog an older sibling's drain)
         for lvl in range(1, tree.max_level() + 1):
             if lvl >= self.L:
                 continue
-            full = [c for c in tree.level(lvl)
-                    if not c.merging and c.size >= self.capacity(lvl)]
+            full = sorted((c for c in tree.level(lvl)
+                           if not c.merging and
+                           c.size >= self.capacity(lvl)),
+                          key=lambda c: c.stamp)
             for comp in full:
                 nxt_grow = [c for c in tree.level(lvl + 1)
                             if not c.merging and
                             (lvl + 1 == self.L or
                              c.size < self.capacity(lvl + 1))]
-                inputs = [comp] + nxt_grow[-1:]
+                inputs = [comp] + target_for(comp.stamp, nxt_grow)
                 out = tree.merged_size([c.size for c in inputs])
                 ops.append(MergeOp(inputs=inputs, output_level=lvl + 1,
                                    output_size=out, created_at=now))

@@ -5,10 +5,16 @@ kernel pair, point lookups are vectorized sorted searches, and merges
 (in engine.py) run through the Pallas merge-path kernel.  One SSTable
 corresponds to one scheduling-plane ``Component`` so the paper's
 policies/schedulers drive real bytes.
+
+``interpret`` selects the Pallas execution mode for this table's probe
+kernel (interpret=True for CPU tests, False for compiled TPU runs); the
+engine plumbs it down from its own constructor flag.  ``keys_np``/
+``vals_np`` are host-side mirrors of the run so the batched read plane
+can ``np.searchsorted`` without a device sync per lookup.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax.numpy as jnp
@@ -16,6 +22,7 @@ import numpy as np
 
 from repro.kernels.bloom.ops import bloom_build, bloom_probe, filter_params
 from .component import Component
+from .memtable import sorted_lookup
 
 
 @dataclass
@@ -28,10 +35,14 @@ class SSTable:
     component: Optional[Component] = None
     data_stamp: int = 0                # data age: strictly increasing at
                                        # flush; max over inputs at merge
+    interpret: bool = True             # Pallas mode for probe kernels
+    keys_np: Optional[np.ndarray] = None   # host mirrors (lazy)
+    vals_np: Optional[np.ndarray] = None
+    bloom_np: Optional[np.ndarray] = None
 
     @classmethod
     def build(cls, keys, vals, level: int = 0, created_at: float = 0.0,
-              fpr: float = 0.01) -> "SSTable":
+              fpr: float = 0.01, interpret: bool = True) -> "SSTable":
         keys = jnp.asarray(keys, jnp.uint32)
         vals = jnp.asarray(vals, jnp.int32)
         n = int(keys.shape[0])
@@ -42,17 +53,44 @@ class SSTable:
         comp = Component(size=float(n), level=level, key_lo=lo, key_hi=hi,
                          created_at=created_at)
         return cls(keys=keys, vals=vals, bloom=bloom, n_bits=n_bits,
-                   k_hashes=k_hashes, component=comp)
+                   k_hashes=k_hashes, component=comp, interpret=interpret)
 
     def __len__(self) -> int:
         return int(self.keys.shape[0])
+
+    def _host(self) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side (keys, vals) mirrors, materialized once."""
+        if self.keys_np is None:
+            self.keys_np = np.asarray(self.keys)
+            self.vals_np = np.asarray(self.vals)
+        return self.keys_np, self.vals_np
+
+    def bloom_host(self) -> np.ndarray:
+        """Host-side filter words, materialized once (the engine's read
+        view restacks filters on every flush/merge — without this cache
+        each rebuild would re-sync every table's filter from device)."""
+        if self.bloom_np is None:
+            self.bloom_np = np.asarray(self.bloom)
+        return self.bloom_np
 
     # -- queries --------------------------------------------------------------
     def maybe_contains(self, keys) -> np.ndarray:
         """Bloom-filter screen (vectorized, Pallas probe kernel)."""
         keys = jnp.asarray(keys, jnp.uint32)
         return np.asarray(bloom_probe(self.bloom, keys, self.n_bits,
-                                      self.k_hashes))
+                                      self.k_hashes,
+                                      interpret=self.interpret))
+
+    def search(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Sorted-search lookup WITHOUT the bloom screen: (found mask,
+        values).  The engine's batch plane calls this only for keys the
+        fused multi-table probe said may be present."""
+        keys = np.asarray(keys, np.uint32)
+        n = len(self)
+        if n == 0 or len(keys) == 0:
+            return np.zeros(len(keys), bool), np.zeros(len(keys), np.int32)
+        sk, sv = self._host()
+        return sorted_lookup(sk, sv, keys)
 
     def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
         """(found mask, values) for a key batch; bloom screen + sorted
@@ -62,14 +100,10 @@ class SSTable:
         found = np.zeros(len(keys), bool)
         vals = np.zeros(len(keys), np.int32)
         if maybe.any():
-            sub = jnp.asarray(keys[maybe])
-            pos = jnp.searchsorted(self.keys, sub)
-            pos = jnp.clip(pos, 0, max(len(self) - 1, 0))
-            hit = np.asarray(self.keys[pos] == sub) if len(self) else \
-                np.zeros(sub.shape, bool)
-            v = np.asarray(self.vals[pos])
-            found[maybe] = hit
-            vals[np.flatnonzero(maybe)[hit]] = v[hit]
+            f, v = self.search(keys[maybe])
+            idx = np.flatnonzero(maybe)
+            found[idx] = f
+            vals[idx[f]] = v[f]
         return found, vals
 
     def get(self, key: int):
@@ -78,6 +112,7 @@ class SSTable:
 
     def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
         """All (key, value) with lo <= key < hi."""
-        i = int(jnp.searchsorted(self.keys, jnp.uint32(lo)))
-        j = int(jnp.searchsorted(self.keys, jnp.uint32(hi)))
-        return np.asarray(self.keys[i:j]), np.asarray(self.vals[i:j])
+        sk, sv = self._host()
+        i = int(np.searchsorted(sk, np.uint32(lo)))
+        j = int(np.searchsorted(sk, np.uint32(hi)))
+        return sk[i:j], sv[i:j]

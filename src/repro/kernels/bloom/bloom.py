@@ -43,6 +43,59 @@ def _probe_kernel(filt_ref, keys_ref, out_ref, *, n_bits, k_hashes):
     out_ref[...] = hit.astype(jnp.uint8).reshape(out_ref.shape)
 
 
+def _probe_multi_kernel(filt_ref, meta_ref, keys_ref, out_ref, *, k_max):
+    """One grid step probes one key block against ONE table's filter.
+
+    Per-table (n_bits, k_hashes) arrive as data (``meta``), not statics, so
+    a single launch covers tables with heterogeneous filter geometry: each
+    table hashes modulo its own n_bits (padding words past n_bits/32 are
+    never addressed) and hash lanes beyond its own k are forced to 1 so
+    they cannot veto membership.
+    """
+    filt = filt_ref[...].reshape(-1)
+    n_bits = meta_ref[0, 0]                           # uint32 scalar
+    k = meta_ref[0, 1]
+    keys = keys_ref[...].reshape(-1)
+    h1 = hash_u32(keys, 0x9E3779B9)
+    h2 = hash_u32(keys, 0x85EBCA6B) | jnp.uint32(1)   # odd stride
+    i = jnp.arange(k_max, dtype=jnp.uint32)[:, None]
+    pos = ((h1[None, :] + i * h2[None, :]) % n_bits).astype(jnp.int32)
+    words = filt[pos >> 5]                            # gather (k_max, q)
+    bits = (words >> (pos & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    bits = jnp.where(i < k, bits, jnp.uint32(1))      # unused lanes pass
+    hit = jnp.min(bits, axis=0)                       # AND over k hashes
+    out_ref[...] = hit.astype(jnp.uint8).reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k_max", "block", "interpret"))
+def bloom_probe_multi_kernel(filts, meta, keys, k_max: int,
+                             block: int = 1024, interpret: bool = True):
+    """Fused probe of one key batch against a STACK of filters.
+
+    ``filts`` is (tables, words) uint32 — each row a filter zero-padded to
+    the common word count; ``meta`` is (tables, 2) uint32 rows of
+    (n_bits, k_hashes).  Returns (tables, n_keys) uint8 maybe-present
+    flags in one launch over a (tables, key-blocks) grid — the hot path
+    for batched point lookups across a whole LSM tree.
+    """
+    t, w = filts.shape
+    n = keys.shape[0]
+    assert n % block == 0, "pad keys in ops.py"
+    grid = (t, n // block)
+    return pl.pallas_call(
+        functools.partial(_probe_multi_kernel, k_max=k_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, j: (i, 0)),   # this table's filter
+            pl.BlockSpec((1, 2), lambda i, j: (i, 0)),   # its (n_bits, k)
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.uint8),
+        interpret=interpret,
+    )(filts, meta, keys)
+
+
 @functools.partial(jax.jit, static_argnames=("n_bits", "k_hashes", "block",
                                               "interpret"))
 def bloom_probe_kernel(filt, keys, n_bits: int, k_hashes: int,

@@ -7,8 +7,10 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .bloom import bit_positions, bloom_probe_kernel
+from .bloom import (bit_positions, bloom_probe_kernel,
+                    bloom_probe_multi_kernel)
 
 
 def filter_params(n_keys: int, fpr: float = 0.01) -> tuple[int, int]:
@@ -46,3 +48,39 @@ def bloom_probe(filt, keys, n_bits: int, k_hashes: int, block: int = 1024,
     out = bloom_probe_kernel(filt, kp, n_bits, k_hashes, block=block,
                              interpret=interpret)
     return out[:n].astype(bool)
+
+
+def stack_filters(filters, n_bits_list, k_hashes_list):
+    """Pad per-table filters to a common word count and pack their
+    geometry: returns (filts (T, W) uint32, meta (T, 2) uint32) ready for
+    ``bloom_probe_multi``.  ``meta`` stays host-side numpy so callers can
+    derive the static k_max without a device sync."""
+    t = len(filters)
+    w = max((f.shape[0] for f in filters), default=1)
+    filts = np.zeros((t, max(w, 1)), np.uint32)
+    meta = np.zeros((t, 2), np.uint32)
+    for i, (f, nb, kh) in enumerate(zip(filters, n_bits_list,
+                                        k_hashes_list)):
+        f = np.asarray(f, np.uint32)
+        filts[i, :f.shape[0]] = f
+        meta[i] = (nb, kh)
+    return filts, meta
+
+
+def bloom_probe_multi(filts, meta, keys, block: int = 1024,
+                      interpret: bool = True):
+    """Probe one key batch against a stack of padded filters (see
+    ``stack_filters``) in a single fused launch; returns a (tables, keys)
+    bool maybe-present matrix (no false negatives per table)."""
+    t = filts.shape[0]
+    n = keys.shape[0]
+    if t == 0 or n == 0:
+        return np.zeros((t, n), bool)
+    meta = np.asarray(meta, np.uint32)
+    pad = (-n) % block
+    kp = jnp.concatenate([jnp.asarray(keys, jnp.uint32),
+                          jnp.zeros((pad,), jnp.uint32)])
+    out = bloom_probe_multi_kernel(jnp.asarray(filts), jnp.asarray(meta),
+                                   kp, k_max=int(meta[:, 1].max()),
+                                   block=block, interpret=interpret)
+    return np.asarray(out[:, :n]).astype(bool)

@@ -85,6 +85,36 @@ def test_bloom_sweep(n, fpr):
     assert fp <= max(3 * fpr, 0.02)
 
 
+def test_bloom_probe_multi_equals_per_table():
+    """The fused stacked probe (heterogeneous filter geometry, zero-padded
+    to a common word count) returns exactly the per-table probe rows, with
+    no false negatives on each table's own keys."""
+    from repro.kernels.bloom.ops import bloom_probe_multi, stack_filters
+    rng = np.random.default_rng(0)
+    tables = []
+    for n, fpr in ((17, 0.01), (260, 0.05), (2048, 0.01), (900, 0.02)):
+        keys = rng.choice(1 << 22, n, replace=False).astype(np.uint32)
+        n_bits, k = filter_params(n, fpr)
+        filt = bloom_build(jnp.asarray(keys), n_bits, k)
+        tables.append((keys, filt, n_bits, k))
+    filts, meta = stack_filters([t[1] for t in tables],
+                                [t[2] for t in tables],
+                                [t[3] for t in tables])
+    assert filts.shape[1] == max(t[1].shape[0] for t in tables)
+    qs = rng.integers(0, 1 << 22, 513, dtype=np.uint32)   # non-block-aligned
+    multi = bloom_probe_multi(filts, meta, qs)
+    assert multi.shape == (len(tables), len(qs))
+    for i, (keys, filt, n_bits, k) in enumerate(tables):
+        single = np.asarray(bloom_probe(filt, jnp.asarray(qs), n_bits, k))
+        np.testing.assert_array_equal(multi[i], single)
+        own = bloom_probe_multi(filts, meta, keys)
+        assert own[i].all(), f"false negative in table {i}"
+    # degenerate shapes
+    assert bloom_probe_multi(filts[:0], meta[:0], qs).shape == (0, len(qs))
+    empty_q = np.empty(0, np.uint32)
+    assert bloom_probe_multi(filts, meta, empty_q).shape == (len(tables), 0)
+
+
 # ------------------------------------------------------------- attention
 @pytest.mark.parametrize("B,H,Hkv,S,D,bq,bk", [
     (1, 2, 1, 64, 16, 32, 32),
