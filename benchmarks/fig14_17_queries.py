@@ -5,7 +5,11 @@ the fluid model.
 Point lookups and short scans are sensitive to the number of live
 components; the greedy scheduler minimizes that count, so its query
 throughput dominates fair's — more so under tiering (more components)
-than leveling, exactly the paper's Figure 14/16 structure.
+than leveling, exactly the paper's Figure 14/16 structure.  The range
+workload (Figures 15/17) runs on the real ``scan_range`` plane — each
+scan is one k-way newest-wins merge over every live run's window — and
+is checked against the tracked write history, so the figure replay
+doubles as a differential test of the scan plane under live merges.
 """
 from __future__ import annotations
 
@@ -24,6 +28,9 @@ UNIQUE = 16_384
 MEMTABLE = 512
 
 
+SCAN_SPAN = 512               # short range scans, Figures 15/17
+
+
 def _run_engine(policy_name: str, sched, n_ops: int, rng):
     if policy_name == "tiering":
         pol = TieringPolicy(3, MEMTABLE, UNIQUE)
@@ -32,26 +39,40 @@ def _run_engine(policy_name: str, sched, n_ops: int, rng):
     eng = LSMEngine(pol, sched, GlobalConstraint(64),
                     memtable_entries=MEMTABLE, unique_keys=UNIQUE,
                     use_kernels=True, merge_block=128)
+    ref = {}                  # shadow history: scans double as a diff test
     comps_seen = []
     lookup_cost = []          # components probed per lookup batch
+    scan_cost = []            # live components per range scan
+    scan_entries = 0
     for i in range(n_ops):
         k = int(rng.integers(0, UNIQUE))
         while not eng.put(k, i):
             eng.pump(MEMTABLE)
+        ref[k] = i
         if i % 32 == 0:
             eng.pump(MEMTABLE // 2)
         if i % 256 == 0:
             comps_seen.append(eng.num_components())
             # point-lookup batch: cost proxy = bloom probes + searches
-            before = eng.stats["bloom_skips"]
             keys = rng.integers(0, UNIQUE, 16)
             for q in keys:
                 eng.get(int(q))
             lookup_cost.append(eng.num_components())
+            # short range scans on the REAL scan plane (one k-way merge
+            # over every live run's window), mid-merge
+            lo = int(rng.integers(0, UNIQUE - SCAN_SPAN))
+            sk, sv = eng.scan_range(lo, lo + SCAN_SPAN)
+            scan_entries += len(sk)
+            scan_cost.append(eng.num_components())
+            want = {k: v for k, v in ref.items() if lo <= k < lo + SCAN_SPAN}
+            assert dict(zip(sk.tolist(), sv.tolist())) == want, \
+                (policy_name, sched.name, i)
     return {
         "mean_components": float(np.mean(comps_seen)),
         "max_components": int(np.max(comps_seen)),
         "mean_lookup_components": float(np.mean(lookup_cost)),
+        "mean_scan_components": float(np.mean(scan_cost)),
+        "scan_entries": int(scan_entries),
         "bloom_skips": eng.stats["bloom_skips"],
         "merges": eng.stats["merges"],
     }
@@ -83,5 +104,10 @@ def run(quick: bool = False) -> dict:
     c["leveling_fewer_components_than_tiering"] = (
         out["leveling"]["fair"]["mean_components"] <
         out["tiering"]["fair"]["mean_components"])
+    # range scans (Fig 15/17): cost tracks live components, so greedy's
+    # scan cost cannot exceed fair's under tiering
+    c["greedy_scan_cost_leq_fair_tiering"] = (
+        out["tiering"]["greedy"]["mean_scan_components"] <=
+        out["tiering"]["fair"]["mean_scan_components"] + 1e-9)
     save("fig14_17_queries", out)
     return out

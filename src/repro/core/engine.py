@@ -21,15 +21,33 @@ the newer version, since levels are age-ordered) together with the
 stacked, zero-padded Bloom filter words for the fused multi-table probe.
 The view is invalidated (``_view = None``) exactly where ``self.tables``
 changes: flush binding in ``pump`` and merge completion in
-``_finish_merge``; it is rebuilt lazily on the next read.  ``get``,
-``get_batch`` (newest-first, early-exit) and ``scan_range`` (oldest-first
-= ``reversed(view.tables)``, newer overrides) share this one ordering —
-the seed's `(-stamp, level)` vs `(stamp, -level)` sort keys are the same
-total order traversed from opposite ends, now written in one place.
+``_finish_merge``; it is rebuilt lazily on the next read.  ``get`` and
+``get_batch`` walk the view newest-first with early exit.  ``scan_range``
+is the range plane over the same view: every live run contributes its
+``[lo, hi)`` window (sliced by ``searchsorted`` on the host mirrors —
+active memtable first, then sealed memtables newest-first, then
+``view.tables``), and the windows are resolved newest-wins in ONE k-way
+merge (the ``merge_dedup_kway`` tournament kernel, or its packed-sort
+host equivalent) — the run list's newest-first order IS the age order the
+merge dedups by, so scans and point reads share a single total order.
+``scan_range`` returns sorted (keys, values) arrays;
+``scan_range_dict`` is the dict-compat wrapper.
 
 ``interpret`` selects the Pallas execution mode for every kernel the
 engine launches (bloom probes and the merge path): True keeps CPU tests
 on the interpreter, False compiles for the accelerator in benchmarks.
+``scan_use_kernels`` picks the scan plane's merge backend: None (auto)
+uses the Pallas tournament only when it is compiled (``use_kernels and
+not interpret``) and the packed-sort host merge otherwise — the
+interpreter is a correctness harness, not a fast path; True/False force
+a backend (differential tests force True to drive the kernel).
+
+Thread safety: ``lock()`` returns the engine's reentrant lock.  The
+engine does NOT lock internally — single-threaded callers (tests, the
+fluid-replay benchmarks) pay nothing; concurrent callers (the
+``BackgroundDriver`` pump thread vs foreground put/get/scan) must hold
+it around every engine call.  The driver takes it around ``pump``; the
+serving example takes it on the foreground path.
 """
 from __future__ import annotations
 
@@ -49,10 +67,10 @@ from .sstable import SSTable
 
 try:  # the merge kernel needs jax; engine tests always have it
     from repro.kernels.bloom.ops import bloom_probe_multi, stack_filters
-    from repro.kernels.merge.ops import merge_dedup
+    from repro.kernels.merge.ops import merge_dedup, merge_dedup_kway
     import jax.numpy as jnp
 except Exception:  # pragma: no cover
-    merge_dedup = None
+    merge_dedup = merge_dedup_kway = None
     bloom_probe_multi = stack_filters = None
 
 
@@ -92,7 +110,8 @@ class LSMEngine:
                  constraint: ComponentConstraint | None = None,
                  memtable_entries: int = 4096, num_memtables: int = 2,
                  unique_keys: float = 1e6, use_kernels: bool = True,
-                 merge_block: int = 256, interpret: bool = True):
+                 merge_block: int = 256, interpret: bool = True,
+                 scan_use_kernels: Optional[bool] = None):
         self.policy = policy
         self.scheduler = scheduler
         self.constraint = constraint or NoConstraint()
@@ -102,6 +121,11 @@ class LSMEngine:
         self.use_kernels = bool(use_kernels) and merge_dedup is not None
         self.merge_block = int(merge_block)
         self.interpret = bool(interpret)
+        if scan_use_kernels is None:      # auto: kernel only when compiled
+            scan_use_kernels = self.use_kernels and not self.interpret
+        self.scan_use_kernels = bool(scan_use_kernels) and \
+            merge_dedup_kway is not None
+        self._rlock = threading.RLock()
 
         self.active = MemTable(self.memtable_entries)
         self.sealed: list[MemTable] = []
@@ -243,21 +267,64 @@ class LSMEngine:
             found[hit] = True
         return found, vals
 
-    def scan_range(self, lo: int, hi: int) -> dict[int, int]:
-        """Newest-wins range scan across all components (oldest-first
-        traversal of the shared read view; newer tables override)."""
-        out: dict[int, int] = {}
-        for table in reversed(self._read_view().tables):
+    def _scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
+                                                         np.ndarray]]:
+        """Per-run ``[lo, hi)`` windows, NEWEST first (active memtable,
+        sealed memtables newest-first, then the read view's tables) —
+        the age order the k-way merge dedups by.  Empty windows are
+        dropped."""
+        runs: list[tuple[np.ndarray, np.ndarray]] = []
+        for mt in (self.active, *reversed(self.sealed)):
+            ks, vs = mt.scan_range(lo, hi)
+            if len(ks):
+                runs.append((ks, vs))
+        for table in self._read_view().tables:
             ks, vs = table.scan_range(lo, hi)
-            out.update(zip(ks.tolist(), vs.tolist()))
-        for mt in self.sealed:                 # memory newer than disk
-            sk, sv = mt.seal()
-            m = (sk >= lo) & (sk < hi)
-            out.update(zip(sk[m].tolist(), sv[m].tolist()))
-        sk, sv = self.active.seal()
-        m = (sk >= lo) & (sk < hi)
-        out.update(zip(sk[m].tolist(), sv[m].tolist()))
-        return out
+            if len(ks):
+                runs.append((ks, vs))
+        return runs
+
+    def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Newest-wins range scan: sorted (keys, values) arrays for
+        ``lo <= key < hi``, resolved across all live runs in one k-way
+        merge (vs the seed's per-table Python dict replay)."""
+        runs = self._scan_runs(lo, hi)
+        if not runs:
+            return np.empty(0, np.uint32), np.empty(0, np.int32)
+        if len(runs) == 1:
+            # copy: the windows are views into live run storage (sealed
+            # caches / host mirrors), which callers must not alias
+            return runs[0][0].copy(), runs[0][1].copy()
+        if self.scan_use_kernels:
+            mk, mv = merge_dedup_kway(runs, block=self.merge_block,
+                                      interpret=self.interpret)
+            return np.asarray(mk), np.asarray(mv)
+        return self._merge_kway_host(runs)
+
+    def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
+        """Dict-compat wrapper over ``scan_range`` (the seed's contract)."""
+        ks, vs = self.scan_range(lo, hi)
+        return dict(zip(ks.tolist(), vs.tolist()))
+
+    @staticmethod
+    def _merge_kway_host(runs) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized host k-way newest-wins merge: pack each entry as
+        ``key << 32 | global_index`` (runs concatenated newest-first, so a
+        lower index means a newer version), one uint64 sort, then keep the
+        first entry of each equal-key group and gather only the surviving
+        values.  No per-entry Python — this is the CPU fast path the
+        interpret-mode Pallas tournament cannot be."""
+        ks = np.concatenate([np.asarray(r[0]) for r in runs])
+        n = len(ks)
+        comp = (ks.astype(np.uint64) << np.uint64(32)) \
+            | np.arange(n, dtype=np.uint64)
+        comp.sort()
+        sk = (comp >> np.uint64(32)).astype(np.uint32)
+        first = np.ones(n, bool)
+        first[1:] = sk[1:] != sk[:-1]
+        idx = (comp[first] & np.uint64(0xFFFFFFFF)).astype(np.int64)
+        vs = np.concatenate([np.asarray(r[1]) for r in runs])
+        return sk[first], vs[idx]
 
     # ------------------------------------------------------- background I/O
     def pump(self, budget_entries: int) -> int:
@@ -286,17 +353,35 @@ class LSMEngine:
         if spent >= budget_entries:
             self._refresh_stall()
             return spent
-        # 2. merges, per scheduler allocation
+        # 2. merges, per scheduler allocation.  Quanta are apportioned by
+        # largest remainder: flooring each share (the seed's
+        # ``int(remaining * frac)``) drops every sub-1 share, so
+        # fair-scheduled merges starve and budget silently vanishes at
+        # small quanta — instead the floored shares are topped up, largest
+        # fractional part first, until they sum to the full allocated
+        # budget (never exceeding ``remaining``).
         self._collect_merges()
         ops = [rm.op for rm in self.running.values()]
         alloc = self.scheduler.allocate(ops) if ops else {}
         remaining = budget_entries - spent
-        for op_id, frac in alloc.items():
-            if frac <= 0:
-                continue
-            quantum = int(remaining * frac)
-            if quantum > 0:
-                spent += self._advance_merge(self.running[op_id], quantum)
+        shares = sorted((op_id, frac) for op_id, frac in alloc.items()
+                        if frac > 0)
+        if shares and remaining > 0:
+            targets = [remaining * frac for _, frac in shares]
+            quanta = [int(t) for t in targets]
+            total = min(remaining, int(round(sum(targets))))
+            leftover = total - sum(quanta)
+            order = sorted(range(len(shares)),
+                           key=lambda i: (quanta[i] - targets[i],
+                                          shares[i][0]))
+            for i in order[:leftover]:
+                quanta[i] += 1
+            for (op_id, _), quantum in zip(shares, quanta):
+                if quantum > 0:
+                    spent += self._advance_merge(self.running[op_id],
+                                                 quantum)
+            assert spent <= budget_entries, \
+                "merge quanta exceeded the pump budget"
         self._refresh_stall()
         return spent
 
@@ -317,41 +402,26 @@ class LSMEngine:
     def _materialize_merge(self, rm: _RunningMerge):
         """Compute the full merged run once (kernel or numpy), then emit it
         in scheduler-controlled quanta — I/O pacing is what the paper
-        schedules; the compute itself is one kernel launch."""
-        # newest component wins: fold oldest -> newest with the newer run
-        # as A.  data_stamp is the data-age order (created_at can tie when
-        # a flush and a merge complete in the same pump); on equal stamps
-        # the HIGHER level is older.
+        schedules; the compute itself is one balanced k-way reduction
+        (O(n log k) merged entries) instead of the seed's sequential
+        pairwise oldest->newest fold (O(n*k))."""
+        # newest-first run order = the k-way merge's age order.
+        # data_stamp is the data-age order (created_at can tie when a
+        # flush and a merge complete in the same pump); on equal stamps
+        # the LOWER level holds the newer version.
         tables = sorted(rm.inputs,
-                        key=lambda t: (t.data_stamp,
-                                       -(t.component.level
-                                         if t.component else 0)))
-        runs = [(np.asarray(t.keys), np.asarray(t.vals)) for t in tables]
-        keys, vals = runs[0]
-        for nk, nv in runs[1:]:
-            keys, vals = self._merge_two(nk, nv, keys, vals)
-        rm.merged_keys, rm.merged_vals = keys, vals
-
-    def _merge_two(self, keys_a, vals_a, keys_b, vals_b):
-        """A is newer (wins ties)."""
+                        key=lambda t: (-t.data_stamp,
+                                       t.component.level
+                                       if t.component else 0))
         if self.use_kernels:
-            mk, mv, keep, valid = merge_dedup(
-                jnp.asarray(keys_a, jnp.uint32), jnp.asarray(vals_a, jnp.int32),
-                jnp.asarray(keys_b, jnp.uint32), jnp.asarray(vals_b, jnp.int32),
+            mk, mv = merge_dedup_kway(
+                [(jnp.asarray(t.keys, jnp.uint32),
+                  jnp.asarray(t.vals, jnp.int32)) for t in tables],
                 block=self.merge_block, interpret=self.interpret)
-            mk, mv = np.asarray(mk), np.asarray(mv)
-            keep = np.array(keep)          # writable copy
-            keep[valid:] = False
-            return mk[keep], mv[keep]
-        ks = np.concatenate([keys_a, keys_b])
-        vs = np.concatenate([vals_a, vals_b])
-        src = np.concatenate([np.zeros(len(keys_a), np.int8),
-                              np.ones(len(keys_b), np.int8)])
-        order = np.lexsort((src, ks))
-        ks, vs = ks[order], vs[order]
-        first = np.ones(len(ks), bool)
-        first[1:] = ks[1:] != ks[:-1]
-        return ks[first], vs[first]
+            rm.merged_keys, rm.merged_vals = np.asarray(mk), np.asarray(mv)
+            return
+        runs = [(np.asarray(t.keys), np.asarray(t.vals)) for t in tables]
+        rm.merged_keys, rm.merged_vals = self._merge_kway_host(runs)
 
     def _advance_merge(self, rm: _RunningMerge, quantum: int) -> int:
         if rm.merged_keys is None:
@@ -390,10 +460,15 @@ class LSMEngine:
             comp.stamp = float(stamp)
             # keep the scheduling-plane range metadata honest: the policy's
             # overlap selection must see the REAL key span, else adjacent-
-            # level overlaps are missed and newest-wins breaks.
+            # level overlaps are missed and newest-wins breaks.  An empty
+            # output file spans nothing — an empty range keeps its stale
+            # stamp from shadowing future merges in the policy's
+            # age-safety audit.
             if len(ks):
                 comp.key_lo = float(ks[0]) / 2**32
                 comp.key_hi = (float(ks[-1]) + 1) / 2**32
+            else:
+                comp.key_lo = comp.key_hi = 0.0
             self.tables[comp.cid] = table
 
         if len(outs) == 1:
@@ -409,6 +484,13 @@ class LSMEngine:
         self._collect_merges()
 
     # ------------------------------------------------------------------ info
+    def lock(self) -> threading.RLock:
+        """The engine's reentrant lock (see module docstring): the
+        ``BackgroundDriver`` holds it around ``pump``; foreground callers
+        sharing an engine with a driver must hold it around every engine
+        call (``with engine.lock(): ...``)."""
+        return self._rlock
+
     def num_components(self) -> int:
         return self.tree.num_components()
 
@@ -429,7 +511,12 @@ class BackgroundDriver:
         self.quantum_s = quantum_s
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._lock = threading.Lock()
+        # the ENGINE's lock, not a private one: a driver-private lock
+        # guards nothing, because foreground put/get/scan calls never
+        # took it and raced the pump thread.  Sharing engine.lock()
+        # makes `with engine.lock():` on the foreground path exclude
+        # the pump.
+        self._lock = engine.lock()
 
     def start(self):
         self._thread = threading.Thread(target=self._run, daemon=True)

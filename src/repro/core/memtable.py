@@ -24,6 +24,18 @@ def sorted_lookup(sk: np.ndarray, sv: np.ndarray,
     return found, np.where(found, sv[pos], 0).astype(np.int32)
 
 
+def scan_window(sk: np.ndarray, sv: np.ndarray, lo: int,
+                hi: int) -> tuple[np.ndarray, np.ndarray]:
+    """The ``[lo, hi)`` window of a sorted unique run — the one
+    ``searchsorted`` slice used by memtables and SSTables on the range
+    plane.  Bounds are clamped to the uint32 key space: the sentinel
+    2**32-1 is never stored, so a clamped ``hi`` of 2**32 loses
+    nothing."""
+    i = int(np.searchsorted(sk, np.uint32(min(max(lo, 0), 0xFFFFFFFF))))
+    j = int(np.searchsorted(sk, np.uint32(min(max(hi, 0), 0xFFFFFFFF))))
+    return sk[i:j], sv[i:j]
+
+
 class MemTable:
     def __init__(self, capacity: int):
         self.capacity = int(capacity)
@@ -103,6 +115,14 @@ class MemTable:
             return found, vals
         sk, sv = self.seal()
         return sorted_lookup(sk, sv, keys)
+
+    def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """All (key, value) with lo <= key < hi, sorted newest-wins —
+        a ``scan_window`` over the cached sealed view, so a memtable
+        enters the engine's k-way range merge as one sorted run exactly
+        like an SSTable."""
+        sk, sv = self.seal()
+        return scan_window(sk, sv, lo, hi)
 
     def seal(self):
         """Sorted, newest-wins-deduplicated (keys, values) arrays

@@ -337,10 +337,37 @@ class PartitionedLevelingPolicy(MergePolicy):
         return self.l1_capacity * (self.T ** (lvl - 1))
 
     # -- selection ----------------------------------------------------------
+    def _age_safe(self, tree: LSMTree, lvl: int, f: Component) -> bool:
+        """Stamp-laundering audit (the partitioned analogue of
+        ``LevelingPolicy``'s age-adjacency guard).  Merging ``f`` with its
+        level-(lvl+1) overlaps produces an output stamped ``max`` over the
+        inputs; any key range the output covers BEYOND ``f``'s own span
+        carries data older than that stamp.  If a live component at a
+        shallower level overlaps the output range with a SMALLER stamp, it
+        holds newer versions (the level invariant) that the output would
+        outrank under stamp-ordered newest-wins reads — so the merge must
+        wait until that component has drained past.  Stamp 0 means the
+        fluid simulator (no data stamps): every merge is safe, degrading
+        to the seed's selection exactly."""
+        inputs = [f] + [o for o in tree.level(lvl + 1) if f.overlaps(o)]
+        s_star = max(c.stamp for c in inputs)
+        if s_star <= 0:
+            return True
+        lo = min(c.key_lo for c in inputs)
+        hi = max(c.key_hi for c in inputs)
+        in_ids = {c.cid for c in inputs}
+        for g_lvl in range(1, lvl + 1):
+            for g in tree.level(g_lvl):
+                if g.cid not in in_ids and g.key_lo < hi \
+                        and g.key_hi > lo and g.stamp < s_star:
+                    return False
+        return True
+
     def _pick_file(self, tree: LSMTree, lvl: int) -> Optional[Component]:
         files = [c for c in tree.level(lvl) if not c.merging]
         files = [c for c in files
                  if not any(o.merging and c.overlaps(o) for o in tree.level(lvl + 1))]
+        files = [c for c in files if self._age_safe(tree, lvl, c)]
         if not files:
             return None
         if self.selection == "choose_best":
@@ -381,7 +408,16 @@ class PartitionedLevelingPolicy(MergePolicy):
                 if any(c.merging for c in tree.level(1)):
                     continue
                 k = len(l0_free) if self.l0_merge_all else self.l0_min_merge
-                inputs = sorted(l0_free, key=lambda c: c.created_at)[:k]
+                # oldest-k by DATA age, not created_at: flushes completing
+                # in the same pump share created_at, and merging a newer
+                # run while skipping an older tied sibling launders the
+                # skipped run's L1 shadow above its stamp (newest-wins
+                # inversion).  Stamps are unique in the real engine; the
+                # cid tiebreak keeps the fluid sim (all stamps 0) on the
+                # seed's flush order.
+                inputs = sorted(l0_free,
+                                key=lambda c: (c.stamp, c.created_at,
+                                               c.cid))[:k]
                 inputs += list(tree.level(1))
                 out = tree.merged_size([c.size for c in inputs])
                 return MergeOp(inputs=inputs, output_level=1, output_size=out,

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.kernels.bloom.ops import bloom_build, bloom_probe, filter_params
 from .component import Component
-from .memtable import sorted_lookup
+from .memtable import scan_window, sorted_lookup
 
 
 @dataclass
@@ -111,8 +111,9 @@ class SSTable:
         return int(vals[0]) if found[0] else None
 
     def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
-        """All (key, value) with lo <= key < hi."""
+        """All (key, value) with lo <= key < hi — a zero-copy
+        ``scan_window`` over the host mirrors; this is the per-table
+        slice the engine's k-way range merge consumes (no Bloom screen:
+        range scans probe the run directly)."""
         sk, sv = self._host()
-        i = int(np.searchsorted(sk, np.uint32(lo)))
-        j = int(np.searchsorted(sk, np.uint32(hi)))
-        return sk[i:j], sv[i:j]
+        return scan_window(sk, sv, lo, hi)

@@ -86,6 +86,33 @@ def _merge_kernel(parts_ref, ka_ref, va_ref, kb_ref, vb_ref,
     so_ref[...] = ms[:block]
 
 
+def _merge_age_kernel(parts_ref, ka_ref, va_ref, aa_ref, kb_ref, vb_ref,
+                      ab_ref, ko_ref, vo_ref, ao_ref, *, block: int):
+    """Age-carrying variant for the k-way tournament: instead of the
+    synthetic 0/1 src, each element carries its ORIGINAL run index
+    (smaller = newer), loaded from the input.  The compare-exchange order
+    is (key, age) lexicographic, so intermediate tournament runs — which
+    contain duplicate keys from different source runs — stay totally
+    ordered (runs have unique keys, making (key, age) pairs distinct) and
+    the final newest-wins dedup is still a pure adjacent-key mask."""
+    k = pl.program_id(0)
+    ia = parts_ref[k, 0]
+    ib = parts_ref[k, 1]
+    wka = ka_ref[pl.ds(ia, block)]
+    wva = va_ref[pl.ds(ia, block)]
+    waa = aa_ref[pl.ds(ia, block)]
+    wkb = kb_ref[pl.ds(ib, block)]
+    wvb = vb_ref[pl.ds(ib, block)]
+    wab = ab_ref[pl.ds(ib, block)]
+    keys = jnp.concatenate([wka, wkb])
+    vals = jnp.concatenate([wva, wvb])
+    ages = jnp.concatenate([waa, wab])
+    mk, ma, (mv,) = _bitonic_merge(keys, ages, [vals])
+    ko_ref[...] = mk[:block]
+    vo_ref[...] = mv[:block]
+    ao_ref[...] = ma[:block]
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def merge_path_merge(keys_a, vals_a, keys_b, vals_b, parts,
                      block: int = 256, interpret: bool = True):
@@ -124,3 +151,46 @@ def merge_path_merge(keys_a, vals_a, keys_b, vals_b, parts,
         ],
         interpret=interpret,
     )(parts, keys_a, vals_a, keys_b, vals_b)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def merge_path_merge_age(keys_a, vals_a, age_a, keys_b, vals_b, age_b,
+                         parts, block: int = 256, interpret: bool = True):
+    """Merge two (key, value, age)-sorted runs; ages (original run
+    indices, smaller = newer) replace the synthetic 0/1 src as the
+    tie-breaking payload.  Every age in run A must be smaller than every
+    age in run B (the tournament pairs adjacent newest-first groups, which
+    guarantees this), so the co-rank table from ``ops.merge_partitions``
+    — whose tie rule sends equal keys to run A — stays exact.  Returns
+    (keys, values, ages) of length g*block; entries beyond
+    len(a)+len(b) are sentinels."""
+    g = parts.shape[0] - 1
+    out_len = g * block
+    kdt, vdt = keys_a.dtype, vals_a.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec(keys_a.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(vals_a.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(age_a.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(keys_b.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(vals_b.shape, lambda k, parts: (0,)),
+            pl.BlockSpec(age_b.shape, lambda k, parts: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda k, parts: (k,)),
+            pl.BlockSpec((block,), lambda k, parts: (k,)),
+            pl.BlockSpec((block,), lambda k, parts: (k,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_merge_age_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((out_len,), kdt),
+            jax.ShapeDtypeStruct((out_len,), vdt),
+            jax.ShapeDtypeStruct((out_len,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(parts, keys_a, vals_a, age_a, keys_b, vals_b, age_b)

@@ -28,3 +28,16 @@ def merge_dedup_ref(keys_a, vals_a, keys_b, vals_b):
     ks = np.array([k for k, _ in items])
     vs = np.array([v for _, v in items])
     return ks, vs
+
+
+def merge_dedup_kway_ref(runs):
+    """Oracle for the k-way tournament (runs NEWEST first): replay the
+    runs oldest -> newest into a dict so later (newer) writes win."""
+    d = {}
+    for ks, vs in reversed(list(runs)):
+        for k, v in zip(np.asarray(ks), np.asarray(vs)):
+            d[int(k)] = int(v)
+    items = sorted(d.items())
+    ks = np.array([k for k, _ in items], np.uint32)
+    vs = np.array([v for _, v in items], np.int32)
+    return ks, vs

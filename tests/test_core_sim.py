@@ -57,8 +57,11 @@ class TestConservation:
         assert tr.write_latency_percentiles((99,))[99] < 0.1
 
 
+@pytest.mark.slow
 class TestPaperClaims:
-    """Each test pins one empirical claim from the paper."""
+    """Each test pins one empirical claim from the paper.  These replay
+    multi-hour fluid simulations per figure — the heavyweight end of the
+    suite, so the CI fast lane (-m "not slow") skips them."""
 
     def test_greedy_overreports_in_testing(self):
         """S 5.2.2: greedy measures a higher (unsustainable) max than fair."""

@@ -49,8 +49,11 @@ def test_engine_matches_dict(policy, sched):
     for k in rng.choice(2048, 200, replace=False):
         assert eng.get(int(k)) == ref.get(int(k)), (policy, sched, k)
     lo, hi = 300, 500
-    assert eng.scan_range(lo, hi) == \
-        {k: v for k, v in ref.items() if lo <= k < hi}
+    want = {k: v for k, v in ref.items() if lo <= k < hi}
+    sk, sv = eng.scan_range(lo, hi)           # sorted-array contract
+    assert (np.diff(sk.astype(np.int64)) > 0).all()
+    assert dict(zip(sk.tolist(), sv.tolist())) == want
+    assert eng.scan_range_dict(lo, hi) == want
 
 
 @settings(max_examples=20, deadline=None)
@@ -74,7 +77,7 @@ def test_engine_newest_wins_property(ops, pump_every, policy):
     eng.drain()
     for k in ref:
         assert eng.get(k) == ref[k]
-    assert eng.scan_range(0, 256) == ref
+    assert eng.scan_range_dict(0, 256) == ref
 
 
 @settings(max_examples=15, deadline=None)
@@ -120,7 +123,11 @@ def test_background_driver_thread():
             k = int(rng.integers(0, 1024))
             v = int(rng.integers(0, 1 << 30))
             deadline = time.time() + 10
-            while not eng.put(k, v):
+            while True:
+                with eng.lock():          # exclude the pump thread
+                    ok = eng.put(k, v)
+                if ok:
+                    break
                 time.sleep(0.002)
                 assert time.time() < deadline, "driver failed to drain"
             ref[k] = v

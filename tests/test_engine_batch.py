@@ -101,7 +101,7 @@ def test_scan_and_get_agree_on_ordering():
         ref[k] = v
         if i % 30 == 0:
             eng.pump(64)
-    scan = eng.scan_range(0, 512)
+    scan = eng.scan_range_dict(0, 512)
     assert scan == ref
     keys = np.fromiter(ref, dtype=np.uint32)
     found, vals = eng.get_batch(keys)

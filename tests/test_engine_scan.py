@@ -1,0 +1,236 @@
+"""Differential tests for the vectorized range-scan plane and the
+scheduling-plane bugfixes that ride with it (ISSUE 3):
+
+* ``scan_range`` (k-way newest-wins merge over the read view) must equal
+  a brute-force dict replay of the write history — mid-merge and after
+  drain, under tiering / leveling / partitioned policies, on BOTH merge
+  backends (packed-sort host path and the Pallas tournament kernel).
+* The partitioned-policy newest-wins inversion (stamp laundering through
+  partial-overlap merges) is pinned by the original repro.
+* ``pump`` apportions merge quanta by largest remainder: the allocated
+  budget is spent in full and sub-1 fair shares no longer starve.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.component import MergeOp
+from repro.core.constraints import GlobalConstraint
+from repro.core.engine import LSMEngine, _RunningMerge
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 TieringPolicy)
+from repro.core.scheduler import FairScheduler, GreedyScheduler
+
+
+def _mk(policy: str, memtable=64, unique=1024, constraint=300,
+        use_kernels=True, scan_use_kernels=None):
+    pol = {
+        "tiering": lambda: TieringPolicy(3, memtable, unique),
+        "leveling": lambda: LevelingPolicy(3, memtable, unique),
+        "partitioned": lambda: PartitionedLevelingPolicy(
+            4, memtable, unique, file_entries=32, l1_capacity=128),
+    }[policy]()
+    return LSMEngine(pol, GreedyScheduler(), GlobalConstraint(constraint),
+                     memtable_entries=memtable, unique_keys=unique,
+                     use_kernels=use_kernels, merge_block=64,
+                     scan_use_kernels=scan_use_kernels)
+
+
+def _scan_oracle(ref: dict, lo: int, hi: int):
+    items = sorted((k, v) for k, v in ref.items() if lo <= k < hi)
+    return (np.array([k for k, _ in items], np.uint32),
+            np.array([v for _, v in items], np.int32))
+
+
+def _assert_scan_equal(eng: LSMEngine, ref: dict, lo: int, hi: int, ctx):
+    sk, sv = eng.scan_range(lo, hi)
+    ok, ov = _scan_oracle(ref, lo, hi)
+    np.testing.assert_array_equal(sk, ok, err_msg=str(ctx))
+    np.testing.assert_array_equal(sv, ov, err_msg=str(ctx))
+
+
+# ----------------------------------------------------------- scan plane
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
+@pytest.mark.parametrize("kernel_scan", [False, True])
+def test_scan_range_equals_dict_replay(policy, kernel_scan):
+    """Random workload with heavy key reuse, scanned MID-MERGE (memtables
+    populated, merges in flight) and after drain: the k-way scan plane is
+    byte-identical to the brute-force dict replay on both backends."""
+    rng = np.random.default_rng(3)
+    eng = _mk(policy, scan_use_kernels=kernel_scan)
+    ref = {}
+    for i in range(1500):
+        k = int(rng.integers(0, 1024))
+        v = int(rng.integers(0, 1 << 30))
+        while not eng.put(k, v):
+            eng.pump(192)
+        ref[k] = v
+        if i % 40 == 0:
+            eng.pump(96)
+        if i % 500 == 250:          # mid-stream: memtables + live merges
+            lo = int(rng.integers(0, 900))
+            _assert_scan_equal(eng, ref, lo, lo + 128,
+                               (policy, kernel_scan, "mid", i))
+    _assert_scan_equal(eng, ref, 0, 1024, (policy, kernel_scan, "pre-drain"))
+    eng.drain()
+    _assert_scan_equal(eng, ref, 0, 1024, (policy, kernel_scan, "drained"))
+    _assert_scan_equal(eng, ref, 200, 300, (policy, kernel_scan, "window"))
+    # empty + degenerate windows
+    sk, sv = eng.scan_range(1024, 2048)
+    assert len(sk) == 0 and len(sv) == 0
+    sk, _ = eng.scan_range(5, 5)
+    assert len(sk) == 0
+    # full-key-space bounds clamp (hi = 2**32 overflows a raw uint32
+    # cast; the sentinel key is never stored, so clamping is lossless)
+    sk, sv = eng.scan_range(0, 1 << 32)
+    ok, ov = _scan_oracle(ref, 0, 1 << 32)
+    np.testing.assert_array_equal(sk, ok)
+    np.testing.assert_array_equal(sv, ov)
+
+
+def test_scan_range_memtable_only_and_single_run():
+    """The 0-run and 1-run short-circuits: scans before any flush, and
+    scans hitting exactly one run."""
+    eng = _mk("tiering")
+    assert len(eng.scan_range(0, 1024)[0]) == 0
+    eng.put_batch(np.array([7, 3, 7], np.uint32),
+                  np.array([1, 2, 9], np.int32))
+    sk, sv = eng.scan_range(0, 1024)        # active memtable only
+    assert sk.tolist() == [3, 7] and sv.tolist() == [2, 9]
+    eng._seal_active()
+    eng.pump(64)                            # one disk table, empty memtable
+    sk, sv = eng.scan_range(0, 1024)
+    assert sk.tolist() == [3, 7] and sv.tolist() == [2, 9]
+
+
+def test_scan_dict_wrapper_matches_arrays():
+    eng = _mk("leveling")
+    rng = np.random.default_rng(0)
+    ref = {}
+    for k in rng.integers(0, 512, 700):
+        v = int(rng.integers(0, 1 << 30))
+        while not eng.put(int(k), v):
+            eng.pump(128)
+        ref[int(k)] = v
+    sk, sv = eng.scan_range(100, 400)
+    assert eng.scan_range_dict(100, 400) == dict(zip(sk.tolist(),
+                                                     sv.tolist()))
+    assert eng.scan_range_dict(100, 400) == \
+        {k: v for k, v in ref.items() if 100 <= k < 400}
+
+
+# ------------------------------------------- partitioned newest-wins fix
+def test_partitioned_newest_wins_regression():
+    """Regression (ISSUE 3 / ROADMAP PR 1 follow-up): partial-overlap
+    merges at partitioned levels >= 1 stamped their output ``max`` over
+    the inputs, laundering OLD deeper data above a shallower live file's
+    stamp (and L0 picks ordered by ``created_at`` could skip an older
+    tied run).  On the seed this exact workload returned stale values
+    for several keys; the ``_age_safe`` audit + stamp-ordered L0 pick
+    must keep every read fresh."""
+    for seed in (5, 6):                     # seeds that reproduced on seed
+        rng = np.random.default_rng(seed)
+        eng = LSMEngine(
+            PartitionedLevelingPolicy(4, 64, 2048, file_entries=32,
+                                      l1_capacity=128),
+            GreedyScheduler(), GlobalConstraint(400),
+            memtable_entries=64, unique_keys=2048, use_kernels=False)
+        ref = {}
+        for i in range(4000):
+            k = int(rng.integers(0, 2048))
+            v = int(rng.integers(0, 1 << 30))
+            while not eng.put(k, v):
+                eng.pump(256)               # heavy pump
+            ref[k] = v
+            if i % 20 == 0:
+                eng.pump(192)
+        eng.drain()
+        keys = np.fromiter(ref, dtype=np.uint32)
+        found, vals = eng.get_batch(keys)
+        assert found.all(), f"seed {seed}: lost keys"
+        stale = [int(k) for k, f, v in zip(keys.tolist(), found,
+                                           vals.tolist())
+                 if v != ref[int(k)]]
+        assert not stale, f"seed {seed}: stale reads {stale[:5]}"
+        _assert_scan_equal(eng, ref, 0, 2048, ("partitioned", seed))
+
+
+# ----------------------------------------------------- pump apportionment
+def _fake_running_merges(eng: LSMEngine, n: int) -> dict[int, int]:
+    """Install ``n`` fake running merges and record per-op quanta."""
+    got: dict[int, int] = {}
+    for _ in range(n):
+        op = MergeOp(inputs=[], output_level=1, output_size=1e9,
+                     output_ranges=[(0.0, 1.0)])
+        eng.running[op.op_id] = _RunningMerge(op=op, inputs=[])
+        got[op.op_id] = 0
+
+    def advance(rm, quantum):
+        got[rm.op.op_id] += quantum
+        return quantum
+
+    eng._advance_merge = advance
+    return got
+
+
+@pytest.mark.parametrize("n_ops,budget", [(3, 2), (3, 10), (4, 1),
+                                          (7, 5), (2, 101)])
+def test_pump_quanta_largest_remainder(n_ops, budget):
+    """Fair shares must sum to the full budget (the seed's floor dropped
+    every sub-1 share: pump(2) over 3 merges spent 0), and no op may
+    exceed its ceiling share."""
+    eng = _mk("tiering")
+    eng.scheduler = FairScheduler()
+    got = _fake_running_merges(eng, n_ops)
+    spent = eng.pump(budget)
+    assert spent == budget                  # nothing silently vanishes
+    assert sum(got.values()) == budget
+    assert max(got.values()) <= -(-budget // n_ops)   # ceil share
+    assert min(got.values()) >= budget // n_ops
+
+
+def test_pump_small_quanta_make_progress():
+    """Integration: with TWO concurrent merges under the fair scheduler,
+    pump(1) quanta starved forever on the seed (``int(1 * 0.5) == 0`` for
+    both ops, so the budget vanished every pump); largest-remainder
+    apportionment must complete them."""
+    from repro.core.constraints import NoConstraint
+    eng = LSMEngine(TieringPolicy(3, 32, 4096), FairScheduler(),
+                    NoConstraint(), memtable_entries=32,
+                    unique_keys=4096, use_kernels=False)
+    base = 0
+
+    def fill_and_flush():
+        nonlocal base
+        n = eng.put_batch(np.arange(base, base + 32, dtype=np.uint32),
+                          np.full(32, 1, np.int32))
+        assert n == 32
+        base += 32
+        eng._seal_active()
+        eng.pump(32)                        # exactly the flush
+
+    for _ in range(2):                      # two L0 rounds -> L1 x2
+        for _ in range(3):
+            fill_and_flush()
+        eng.drain()
+    for _ in range(3):                      # third round: L0 merge C
+        fill_and_flush()
+    eng.pump(288)                           # C completes -> L1 x3 -> D at L1
+    assert len(eng.running) == 1            # D (L1 -> L2), zero progress
+    for _ in range(3):                      # fresh L0 runs -> E at L0
+        fill_and_flush()
+    eng.pump(0)                             # collect E without advancing
+    assert len(eng.running) == 2, "expected concurrent L0 + L1 merges"
+    for _ in range(2000):                   # seed: no progress, ever
+        eng.pump(1)
+        if not eng.running:
+            break
+    assert not eng.running, "pump(1) quanta starved the fair merges"
+
+
+def test_background_driver_shares_engine_lock():
+    from repro.core.engine import BackgroundDriver
+    eng = _mk("tiering")
+    drv = BackgroundDriver(eng, bandwidth_bytes_per_s=1e6)
+    assert drv._lock is eng.lock()

@@ -13,8 +13,10 @@ from repro.kernels.attention.ops import attention
 from repro.kernels.attention.ref import attention_ref
 from repro.kernels.bloom.ops import bloom_build, bloom_probe, filter_params
 from repro.kernels.bloom.ref import bloom_build_ref, bloom_probe_ref
-from repro.kernels.merge.ops import merge_dedup, merge_sorted
-from repro.kernels.merge.ref import merge_dedup_ref, merge_sorted_ref
+from repro.kernels.merge.ops import (merge_dedup, merge_dedup_kway,
+                                     merge_sorted)
+from repro.kernels.merge.ref import (merge_dedup_kway_ref, merge_dedup_ref,
+                                     merge_sorted_ref)
 from repro.kernels.ssd.ops import ssd, ssd_decode_step
 from repro.kernels.ssd.ref import ssd_scan_ref
 
@@ -60,6 +62,64 @@ def test_merge_dedup_matches_dict_oracle(na, nb):
     rk, rv = merge_dedup_ref(ka, va, kb, vb)
     np.testing.assert_array_equal(np.asarray(mk)[keep], rk)
     np.testing.assert_array_equal(np.asarray(mv)[keep], rv)
+
+
+def _mk_runs(rng, sizes, key_space):
+    runs = []
+    for n in sizes:
+        ks = np.sort(rng.choice(key_space, n, replace=False)).astype(
+            np.uint32)
+        vs = rng.integers(0, 1 << 30, n).astype(np.int32)
+        runs.append((ks, vs))
+    return runs
+
+
+@pytest.mark.parametrize("sizes,block", [
+    ((100, 80), 64),                 # k=2: degenerates to the pairwise path
+    ((64, 0, 200), 64),              # empty run dropped
+    ((33, 128, 7, 255, 64), 128),    # odd k: carry-over leg
+    ((100,) * 8, 64),                # balanced 3-round tournament
+    ((50,), 64),                     # k=1 passthrough
+])
+def test_merge_dedup_kway_matches_dict_oracle(sizes, block):
+    rng = np.random.default_rng(sum(sizes))
+    runs = _mk_runs(rng, sizes, max(sizes) * 2 + 1)   # heavy key overlap
+    mk, mv = merge_dedup_kway(runs, block=block)
+    rk, rv = merge_dedup_kway_ref(runs)
+    np.testing.assert_array_equal(np.asarray(mk), rk)
+    np.testing.assert_array_equal(np.asarray(mv), rv)
+
+
+def test_merge_dedup_kway_equals_pairwise_fold():
+    """The balanced tournament must equal the sequential pairwise fold
+    (oldest -> newest, newer run as A) it replaces in the engine."""
+    rng = np.random.default_rng(9)
+    runs = _mk_runs(rng, (120, 90, 255, 33, 64, 128), 400)
+    mk, mv = merge_dedup_kway(runs, block=64)
+
+    fk, fv = (jnp.asarray(runs[-1][0]), jnp.asarray(runs[-1][1]))
+    for ks, vs in reversed(runs[:-1]):     # fold oldest->newest, newer = A
+        k2, v2, keep, valid = merge_dedup(jnp.asarray(ks), jnp.asarray(vs),
+                                          fk, fv, block=64)
+        keep = np.array(keep)
+        keep[valid:] = False
+        fk, fv = jnp.asarray(np.asarray(k2)[keep]), \
+            jnp.asarray(np.asarray(v2)[keep])
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(fk))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(fv))
+
+
+def test_merge_dedup_kway_duplicate_heavy():
+    """Every run holds the SAME key set: output is run 0 verbatim (the
+    newest version of every key), the hardest dedup case for the
+    age-carrying tournament."""
+    rng = np.random.default_rng(4)
+    ks = np.sort(rng.choice(2048, 300, replace=False)).astype(np.uint32)
+    runs = [(ks, rng.integers(0, 1 << 30, 300).astype(np.int32))
+            for _ in range(5)]
+    mk, mv = merge_dedup_kway(runs, block=64)
+    np.testing.assert_array_equal(np.asarray(mk), ks)
+    np.testing.assert_array_equal(np.asarray(mv), runs[0][1])
 
 
 # ---------------------------------------------------------------- bloom
