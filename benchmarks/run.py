@@ -25,6 +25,7 @@ MODULES = [
     "fig24_partition_size",
     "fig25_27_secondary",
     "engine_throughput",
+    "twophase_engine",
     "kernels_bench",
     "ckpt_twophase",
     "serving_twophase",

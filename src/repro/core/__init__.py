@@ -4,7 +4,7 @@ the JAX-backed storage engine)."""
 from .component import Component, FlushOp, LSMTree, MergeOp, MergeState, fresh_id
 from .constraints import (ComponentConstraint, GlobalConstraint, L0Constraint,
                           LocalConstraint, NoConstraint)
-from .metrics import Trace
+from .metrics import Trace, WriteTraceRecorder
 from .policies import (LevelingPolicy, MergePolicy, PartitionedLevelingPolicy,
                        POLICIES, SizeTieredPolicy, TieringPolicy)
 from .scheduler import (FairScheduler, GreedyScheduler, MergeScheduler,
@@ -12,7 +12,8 @@ from .scheduler import (FairScheduler, GreedyScheduler, MergeScheduler,
 from .sim import (ArrivalProcess, BurstyArrival, ClosedClient, ConstantArrival,
                   LSMSimulator, OpenClient, SimConfig)
 from .blsm import BLSMSimulator
-from .twophase import TwoPhaseResult, run_two_phase
+from .twophase import (EngineSystem, TwoPhaseResult, TwoPhaseSystem,
+                       run_two_phase)
 from .engine import BackgroundDriver, LSMEngine
 from .memtable import MemTable
 from .sstable import SSTable
@@ -20,13 +21,14 @@ from .sstable import SSTable
 __all__ = [
     "Component", "FlushOp", "LSMTree", "MergeOp", "MergeState", "fresh_id",
     "ComponentConstraint", "GlobalConstraint", "L0Constraint",
-    "LocalConstraint", "NoConstraint", "Trace",
+    "LocalConstraint", "NoConstraint", "Trace", "WriteTraceRecorder",
     "LevelingPolicy", "MergePolicy", "PartitionedLevelingPolicy", "POLICIES",
     "SizeTieredPolicy", "TieringPolicy",
     "FairScheduler", "GreedyScheduler", "MergeScheduler", "SCHEDULERS",
     "SingleThreadedScheduler", "make_scheduler",
     "ArrivalProcess", "BurstyArrival", "ClosedClient", "ConstantArrival",
     "LSMSimulator", "OpenClient", "SimConfig",
-    "BLSMSimulator", "TwoPhaseResult", "run_two_phase",
+    "BLSMSimulator", "EngineSystem", "TwoPhaseResult", "TwoPhaseSystem",
+    "run_two_phase",
     "BackgroundDriver", "LSMEngine", "MemTable", "SSTable",
 ]

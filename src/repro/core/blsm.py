@@ -41,6 +41,11 @@ class BLSMSimulator:
         self.step = float(step)
         self.cfg = type("cfg", (), {"mem_write_rate": 250_000.0})()
 
+    @property
+    def write_capacity(self) -> float:
+        """Backend-agnostic system protocol (see ``twophase.py``)."""
+        return self.cfg.mem_write_rate
+
     def _wcap(self, s1: float, job: float) -> float:
         return self.r * self.M0 * self.B / (job + self.r * (s1 + self.M0))
 

@@ -1,9 +1,15 @@
-"""Trace capture and metric extraction for the fluid simulator.
+"""Trace capture and metric extraction, shared by the fluid simulator and
+the real engine's two-phase harness.
 
-The simulator records cumulative arrivals A(t) and cumulative completions
+Both backends record cumulative arrivals A(t) and cumulative completions
 S(t) as piecewise-linear breakpoint lists.  Open-system write latency of
 the x-th write is then exactly  S^-1(x) - A^-1(x)  (queuing + processing),
-computed by vectorized inversion — deterministic, no sampling noise.
+computed by vectorized inversion — deterministic, no sampling noise.  The
+fluid simulator emits breakpoints at its event boundaries;
+``WriteTraceRecorder`` ingests the real engine's discrete write-path
+events (wall- or virtual-clock timestamps, one call per ``put_batch``)
+into the same curves, so every metric below works unchanged for either
+backend.
 """
 from __future__ import annotations
 
@@ -102,17 +108,23 @@ class Trace:
         return {p: float(np.percentile(lat, p)) for p in pcts}
 
     def processing_latency_percentiles(self, pcts=(50, 90, 99, 99.9),
-                                       n: int = 200_001) -> dict[float, float]:
+                                       n: int = 200_001,
+                                       t_from: float = 0.0) -> dict[float, float]:
         """Per-write processing time = inverse instantaneous capacity at the
         write's completion time (the delay injected into that write), with
         stalled intervals contributing the remaining stall length for the
         writes in flight.  Closed systems additionally expose stall time to
-        the ``n_clients`` in-flight writes only (Figure 5a discussion)."""
+        the ``n_clients`` in-flight writes only (Figure 5a discussion).
+        ``t_from`` excludes writes completed before it (warm-up cutoff,
+        matching ``write_latency_percentiles``)."""
         if not self.capacity_t:
             return {p: 0.0 for p in pcts}
         stt = np.asarray(self.service_t)
         sv = np.asarray(self.service_v)
-        xs = np.linspace(0.0, sv[-1], n)
+        lo = float(np.interp(t_from, stt, sv)) if t_from > 0.0 else 0.0
+        if sv[-1] <= lo:
+            return {p: 0.0 for p in pcts}
+        xs = np.linspace(lo, sv[-1], n)
         t_done = _invert(stt, sv, xs)
         ct = np.asarray(self.capacity_t)
         cv = np.asarray(self.capacity_v)
@@ -121,8 +133,12 @@ class Trace:
         lat = 1.0 / np.maximum(cap, 1e-9)
         if self.closed_system and self.stalls:
             # in-flight writes at each stall onset wait out the stall
-            extra = [s1 - s0 for (s0, s1) in self.stalls] * self.n_clients
-            lat = np.concatenate([lat, np.asarray(extra)])
+            # (warm-up stalls are excluded together with warm-up writes;
+            # a stall straddling the cutoff contributes its in-window part)
+            extra = [s1 - max(s0, t_from) for (s0, s1) in self.stalls
+                     if s1 > t_from] * self.n_clients
+            if extra:
+                lat = np.concatenate([lat, np.asarray(extra)])
         return {p: float(np.percentile(lat, p)) for p in pcts}
 
     def stall_time(self) -> float:
@@ -139,3 +155,73 @@ class Trace:
             "merges": self.merges_completed,
             "max_components": self.max_components(),
         }
+
+
+class WriteTraceRecorder:
+    """Ingests the real engine's discrete write-path events into a ``Trace``.
+
+    The engine calls ``on_puts(admitted, offered)`` once per ``put`` /
+    ``put_batch`` (one call per batch — the hot path stays vectorized);
+    the harness calls ``on_arrivals(cum)`` when it generates client
+    arrivals and ``finish(duration)`` at run end.  Timestamps come from
+    ``clock`` — ``time.monotonic`` relative to the run start for the
+    wall-clock harness, a virtual tick counter for the deterministic one —
+    so the resulting arrival/service curves, stall intervals and capacity
+    steps feed ``Trace``'s fluid-trace metrics unchanged.
+
+    A stall interval opens at the first attempt that admits less than it
+    offered (``admitted < offered``) and closes at the next attempt that
+    admits anything — the writer-observed stall, exactly what the paper's
+    write-latency metric charges.  Capacity drops to 0 during the stall so
+    ``processing_latency_percentiles`` sees the injected delay.
+    """
+
+    def __init__(self, trace: "Trace", clock, capacity: float):
+        self.trace = trace
+        self.clock = clock
+        self.capacity = float(capacity)
+        self.cum = 0.0
+        self._stall_t0: float | None = None
+        trace.record_capacity(0.0, self.capacity)
+
+    @property
+    def stalled(self) -> bool:
+        return self._stall_t0 is not None
+
+    def _now(self) -> float:
+        """Clock reading clamped to the trace's duration: a wall-clock
+        harness can observe a put slightly after its cutoff (the loop's
+        duration check happens before a possibly-blocking engine call),
+        and an event stamped past ``duration`` would invert the stall
+        interval ``finish`` closes at ``duration``."""
+        t = self.clock()
+        d = self.trace.duration
+        return min(t, d) if d > 0 else t
+
+    def on_puts(self, admitted: int, offered: int) -> None:
+        if offered <= 0:
+            return
+        t = self._now()
+        if self._stall_t0 is not None and admitted > 0:
+            # close the stall with a flat service plateau so latency
+            # inversion sees no progress during [stall_t0, t]
+            self.trace.record_service(t, self.cum)
+            self.trace.stalls.append((self._stall_t0, t))
+            self.trace.record_capacity(t, self.capacity)
+            self._stall_t0 = None
+        if admitted > 0:
+            self.cum += admitted
+            self.trace.record_service(t, self.cum)
+        if admitted < offered and self._stall_t0 is None:
+            self.trace.record_service(t, self.cum)
+            self.trace.record_capacity(t, 0.0)
+            self._stall_t0 = t
+
+    def on_arrivals(self, cum: float) -> None:
+        self.trace.record_arrival(self._now(), cum)
+
+    def finish(self, duration: float) -> None:
+        if self._stall_t0 is not None:
+            self.trace.stalls.append((self._stall_t0, duration))
+            self._stall_t0 = None
+        self.trace.record_service(duration, self.cum)

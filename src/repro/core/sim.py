@@ -28,7 +28,10 @@ INF = float("inf")
 
 
 # --------------------------------------------------------------------------
-# Arrival processes / clients
+# Arrival processes / clients — shared by BOTH two-phase backends: the
+# fluid simulator below integrates them event-by-event, the engine-backed
+# harness (``twophase.EngineSystem``) integrates them per tick via
+# ``cum_entries`` and replays the result as real ``put_batch`` traffic.
 # --------------------------------------------------------------------------
 class ArrivalProcess:
     """Piecewise-constant arrival rate (entries/s)."""
@@ -38,6 +41,19 @@ class ArrivalProcess:
 
     def next_change(self, t: float) -> float:
         return INF
+
+    def cum_entries(self, t0: float, t1: float) -> float:
+        """Exact integral of ``rate`` over ``[t0, t1)``, stepping through
+        the piecewise-constant segments — the tick-level arrival count the
+        engine-backed harness offers to ``put_batch``."""
+        total, t = 0.0, t0
+        while t < t1 - EPS:
+            nxt = min(self.next_change(t), t1)
+            if nxt <= t:
+                nxt = t1
+            total += self.rate(t) * (nxt - t)
+            t = nxt
+        return total
 
 
 class ConstantArrival(ArrivalProcess):
@@ -126,6 +142,13 @@ class LSMSimulator:
         self.tree = LSMTree(self.cfg.unique_keys, self.cfg.entry_size)
         if not fresh_tree:
             policy.initial_tree(self.tree)
+
+    @property
+    def write_capacity(self) -> float:
+        """In-memory insert capacity (entries/s) — the per-thread rate
+        ``run_two_phase`` gives the testing phase's closed client.  Part
+        of the backend-agnostic system protocol (see ``twophase.py``)."""
+        return self.cfg.mem_write_rate
 
     # -- main loop ----------------------------------------------------------
     def run(self, client, duration: float) -> Trace:

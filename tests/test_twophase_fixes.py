@@ -1,0 +1,196 @@
+"""Regression tests for the two-phase measurement-plane bugfixes.
+
+Each test pins a bug that the pre-fix code exhibits:
+
+1. ``run_two_phase`` excluded warm-up from the testing-phase throughput
+   but NOT from the running-phase latency percentiles, so cold-start
+   transients polluted p99 and the ``sustainable`` verdict (and
+   ``processing_latency_percentiles`` had no warm-up cutoff at all).
+2. ``BackgroundDriver._run`` computed a fixed per-quantum budget and
+   slept a fixed quantum per iteration, so pump compute time / lock
+   contention / sleep overshoot silently under-delivered the configured
+   bandwidth.
+3. ``TwoPhaseResult.sustainable`` read ``write_latencies.get(99, inf)``
+   — callers passing custom ``pcts`` without 99 silently got
+   "unsustainable".
+4. ``LSMEngine.pump`` flushed whole memtables while ``spent < budget``,
+   overshooting the quantum for free — at pacing quanta smaller than a
+   memtable the configured I/O budget did not throttle flush-bound work.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.constraints import NoConstraint
+from repro.core.engine import ENTRY_BYTES, BackgroundDriver, LSMEngine
+from repro.core.metrics import Trace
+from repro.core.policies import TieringPolicy
+from repro.core.scheduler import GreedyScheduler
+from repro.core.twophase import run_two_phase
+
+
+# --------------------------------------------------------------------------
+# synthetic systems: traces crafted so warm-up and steady state differ
+# --------------------------------------------------------------------------
+class _CannedSystem:
+    """TwoPhaseSystem stub returning a pre-built trace."""
+
+    def __init__(self, trace: Trace):
+        self._trace = trace
+        self.write_capacity = 1000.0
+
+    def run(self, client, duration: float) -> Trace:
+        return self._trace
+
+
+def _steady_trace(duration=100.0, rate=100.0) -> Trace:
+    """Arrivals == service at ``rate``: zero-latency baseline."""
+    tr = Trace(duration=duration)
+    tr.record_arrival(duration, rate * duration)
+    tr.record_service(duration, rate * duration)
+    tr.record_capacity(0.0, rate)
+    return tr
+
+
+def _coldstart_trace(duration=100.0, rate=100.0, slow_until=60.0) -> Trace:
+    """Cold start: service crawls at rate/10 (with ~zero instantaneous
+    capacity => huge per-write processing delay) until ``slow_until``,
+    then catches up to the arrival curve instantly and tracks it exactly
+    — so every write completed before ``slow_until`` sees a huge latency
+    and every steady-state write ~none."""
+    tr = Trace(duration=duration)
+    tr.record_arrival(duration, rate * duration)
+    tr.record_service(slow_until, rate / 10 * slow_until)
+    # instant catch-up: back on the arrival curve half a second later
+    tr.record_service(slow_until + 0.5, rate * (slow_until + 0.5))
+    tr.record_service(duration, rate * duration)
+    tr.record_capacity(0.0, 1e-3)       # processing delay 1000 s ...
+    tr.record_capacity(slow_until, rate)    # ... until steady state
+    return tr
+
+
+def test_running_phase_percentiles_exclude_warmup():
+    """Bugfix 1: with warm-up >= the cold-start transient, the running
+    phase's p99 write AND processing latencies must reflect steady state
+    only (pre-fix: both were dominated by the transient)."""
+    res = run_two_phase(
+        testing_system=lambda: _CannedSystem(_steady_trace()),
+        running_system=lambda: _CannedSystem(_coldstart_trace()),
+        testing_duration=100.0, running_duration=100.0, warmup=60.0)
+    assert res.write_latencies[99] < 1.0          # pre-fix: ~40 s
+    assert res.processing_latencies[99] < 1.0     # pre-fix: ~1000 s
+    assert res.sustainable
+
+
+def test_processing_latency_percentiles_t_from():
+    """The new warm-up cutoff on processing percentiles, directly."""
+    tr = _coldstart_trace()
+    cold = tr.processing_latency_percentiles((99,))
+    warm = tr.processing_latency_percentiles((99,), t_from=60.0)
+    assert cold[99] > 100.0
+    assert warm[99] < 1.0
+
+
+def test_closed_stall_extras_respect_t_from():
+    """Closed-system stall contributions before the cutoff are excluded,
+    and a stall straddling the cutoff contributes only its in-window
+    part."""
+    tr = _steady_trace()
+    tr.closed_system = True
+    tr.stalls = [(10.0, 30.0)]          # 20 s stall inside warm-up
+    # small n so the single in-flight stall write is >1% of the samples
+    cold = tr.processing_latency_percentiles((99,), n=50)
+    warm = tr.processing_latency_percentiles((99,), n=50, t_from=60.0)
+    assert cold[99] > 1.0
+    assert warm[99] < 1.0
+    tr.stalls = [(50.0, 70.0)]          # straddles the cutoff: 10 s inside
+    strad = tr.processing_latency_percentiles((99,), n=50, t_from=60.0)
+    assert 1.0 < strad[99] <= 10.0
+
+
+def test_sustainable_without_p99_in_pcts():
+    """Bugfix 3: pcts omitting 99 must still compute p99 (pre-fix: the
+    verdict fell back to +inf => 'unsustainable')."""
+    res = run_two_phase(
+        testing_system=lambda: _CannedSystem(_steady_trace()),
+        running_system=lambda: _CannedSystem(_steady_trace()),
+        testing_duration=100.0, running_duration=100.0, warmup=10.0,
+        pcts=(50,))
+    assert 99 in res.write_latencies
+    assert res.sustainable
+
+
+# --------------------------------------------------------------------------
+# BackgroundDriver pacing
+# --------------------------------------------------------------------------
+class _SlowPumpEngine:
+    """Engine stub whose pump costs real time (compute/lock contention):
+    under the pre-fix fixed-quantum loop this halves-or-worse the
+    delivered budget; the deficit-paced driver repays it with larger
+    quanta."""
+
+    def __init__(self, pump_cost_s: float):
+        self._lock = threading.RLock()
+        self.cost = pump_cost_s
+        self.offered = 0
+
+    def lock(self):
+        return self._lock
+
+    def pump(self, budget_entries: int) -> int:
+        self.offered += budget_entries
+        time.sleep(self.cost)
+        return budget_entries
+
+
+def test_driver_delivers_configured_bandwidth_under_contention():
+    """Bugfix 2: delivered budget must track elapsed * rate even when
+    each pump call eats ~2 quanta of wall time (pre-fix: ~1/3 of the
+    configured bandwidth)."""
+    rate_entries = 2000.0
+    eng = _SlowPumpEngine(pump_cost_s=0.02)
+    drv = BackgroundDriver(eng, bandwidth_bytes_per_s=rate_entries * ENTRY_BYTES,
+                           quantum_s=0.01)
+    t0 = time.monotonic()
+    drv.start()
+    time.sleep(0.6)
+    drv.stop()
+    elapsed = time.monotonic() - t0
+    expected = rate_entries * elapsed
+    # generous CI bounds; the pre-fix driver lands near 0.33x
+    assert eng.offered > 0.55 * expected
+    assert eng.offered < 1.5 * expected
+
+
+# --------------------------------------------------------------------------
+# pump flush-debt
+# --------------------------------------------------------------------------
+def _flush_engine(memtable=64, num_memtables=3) -> LSMEngine:
+    return LSMEngine(TieringPolicy(3, memtable, 4096), GreedyScheduler(),
+                     NoConstraint(), memtable_entries=memtable,
+                     num_memtables=num_memtables, unique_keys=4096)
+
+
+def test_pump_flush_overshoot_carried_as_debt():
+    """Bugfix 4: a flush bigger than the quantum must charge the
+    overshoot to later quanta — two sealed 64-entry memtables at
+    16-entry quanta cost 8 pumps, not 2 (pre-fix: one free flush per
+    pump call regardless of budget)."""
+    eng = _flush_engine()
+    for i in range(2 * 64 + 1):         # fill + seal two memtables
+        assert eng.put(i % 4096, i)
+    assert len(eng.sealed) == 2
+    flushes = []
+    for _ in range(8):
+        eng.pump(16)
+        flushes.append(eng.stats["flushes"])
+    # first flush on pump 1, debt 48 repaid over pumps 2-4 (pump 4's
+    # budget is fully consumed by the last repayment), second flush on
+    # pump 5, its debt repaid over pumps 6-8
+    assert flushes[0] == 1
+    assert flushes[2] == 1              # pre-fix: already 2 by pump 2
+    assert flushes[-1] == 2
+    assert eng._flush_debt == 0         # 128 entries == 8 * 16 quanta
