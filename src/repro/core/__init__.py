@@ -4,7 +4,7 @@ the JAX-backed storage engine)."""
 from .component import Component, FlushOp, LSMTree, MergeOp, MergeState, fresh_id
 from .constraints import (ComponentConstraint, GlobalConstraint, L0Constraint,
                           LocalConstraint, NoConstraint)
-from .metrics import Trace, WriteTraceRecorder
+from .metrics import LatencyRecorder, Trace, WriteTraceRecorder
 from .policies import (LevelingPolicy, MergePolicy, PartitionedLevelingPolicy,
                        POLICIES, SizeTieredPolicy, TieringPolicy)
 from .scheduler import (FairScheduler, GreedyScheduler, MergeScheduler,
@@ -21,7 +21,8 @@ from .sstable import SSTable
 __all__ = [
     "Component", "FlushOp", "LSMTree", "MergeOp", "MergeState", "fresh_id",
     "ComponentConstraint", "GlobalConstraint", "L0Constraint",
-    "LocalConstraint", "NoConstraint", "Trace", "WriteTraceRecorder",
+    "LocalConstraint", "NoConstraint", "LatencyRecorder", "Trace",
+    "WriteTraceRecorder",
     "LevelingPolicy", "MergePolicy", "PartitionedLevelingPolicy", "POLICIES",
     "SizeTieredPolicy", "TieringPolicy",
     "FairScheduler", "GreedyScheduler", "MergeScheduler", "SCHEDULERS",

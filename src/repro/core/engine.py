@@ -1,8 +1,8 @@
 """The real LSM storage engine: paper's scheduling plane + JAX data plane.
 
 Writes land in a MemTable; flushes turn sealed memtables into SSTables
-(sorted runs + Pallas-built Bloom filters); merges execute through the
-Pallas merge-path kernel.  The *decisions* — which components to merge
+(sorted runs; Bloom filters build lazily on first probe); merges execute
+through the Pallas merge-path kernel.  The *decisions* — which components to merge
 (policy), who gets I/O bandwidth (scheduler), when writes stall
 (constraint) — are exactly the classes the fluid simulator exercises, so
 every figure-level claim in the paper can be replayed against real bytes.
@@ -15,23 +15,68 @@ advances background I/O by one bandwidth quantum, split across flushes
 for the serving example; tests use pump() directly for determinism.
 
 Read view contract: point lookups and scans go through a cached
-``_ReadView`` — the disk tables snapshotted NEWEST-FIRST by
+``_ReadView`` over the disk tables, NEWEST-FIRST by
 ``(-data_stamp, component.level)`` (on equal stamps the LOWER level holds
-the newer version, since levels are age-ordered) together with the
-stacked, zero-padded Bloom filter words for the fused multi-table probe.
-The view is invalidated (``_view = None``) exactly where ``self.tables``
-changes: flush binding in ``pump`` and merge completion in
-``_finish_merge``; it is rebuilt lazily on the next read.  ``get`` and
-``get_batch`` walk the view newest-first with early exit.  ``scan_range``
-is the range plane over the same view: every live run contributes its
-``[lo, hi)`` window (sliced by ``searchsorted`` on the host mirrors —
-active memtable first, then sealed memtables newest-first, then
-``view.tables``), and the windows are resolved newest-wins in ONE k-way
-merge (the ``merge_dedup_kway`` tournament kernel, or its packed-sort
-host equivalent) — the run list's newest-first order IS the age order the
-merge dedups by, so scans and point reads share a single total order.
-``scan_range`` returns sorted (keys, values) arrays;
+the newer version, since levels are age-ordered).  The view is maintained
+INCREMENTALLY, per-event cost proportional to the event, never to total
+engine state:
+
+* ``self._order`` is the authoritative newest-first table list, updated
+  by insertion — a flush carries the globally newest stamp and prepends
+  one table; a merge completion removes its k inputs and bisect-inserts
+  its outputs at their ``(-stamp, level)`` rank (outputs of one merge
+  share that rank and hold disjoint key ranges, so their relative order
+  is free).  There is no full re-sort anywhere on the maintenance path.
+* The Bloom filter stack for the fused multi-table probe lives in a
+  persistent ``_FilterStack``: a preallocated padded DEVICE array with
+  slot reuse, maintained EVENT-DRIVEN.  Background events only journal
+  their adds/removes (O(1), no device work); the first point lookup
+  after an event applies the journal — a flush's table takes one donated
+  O(filter-width) row write, a merge frees its k input slots and writes
+  one row per output, and an add whose table was merged away before any
+  read cancels outright (with lazy Bloom construction, its filter is
+  never even built).  The stack is rebuilt from scratch only when
+  capacity or row width must grow, or occupancy drops below 1/4
+  (geometric, amortized O(1) rows per event).  ``_ReadView.filts``
+  stays ``None`` until that first point lookup (``_view_filters``), so
+  scan-only and write-only workloads never pay for filter maintenance
+  at all; each table's probe row is its own ``stack_slot``, so probing
+  needs no per-view gather.
+
+The view is invalidated (``_view = None``, epoch bump) exactly where
+``self.tables`` changes: flush binding in ``pump`` and merge completion
+in ``_finish_merge``; rebuilding it is an O(tables) tuple snapshot of
+``_order``.  The epoch guard keeps a snapshot built concurrently with an
+invalidation from becoming sticky.  Because row writes donate the
+previous device buffer, a reader NOT holding ``lock()`` against a
+concurrent pump may observe a deleted-buffer error rather than stale
+bits — the locking discipline below was already mandatory.
+
+``get`` and ``get_batch`` walk the view newest-first with early exit.
+``scan_range`` is the range plane over the same view: every live run
+contributes its ``[lo, hi)`` window (sliced by ``searchsorted`` on the
+host mirrors — active memtable first, then sealed memtables newest-first,
+then ``view.tables``), and the windows are resolved newest-wins in ONE
+k-way merge (the ``merge_dedup_kway`` tournament kernel, or its
+packed-sort host equivalent) — the run list's newest-first order IS the
+age order the merge dedups by, so scans and point reads share a single
+total order.  ``scan_range`` returns sorted (keys, values) arrays;
 ``scan_range_dict`` is the dict-compat wrapper.
+
+Background execution model: ALL background work is streamed so that one
+scheduler quantum costs O(quantum), never O(total state).  A merge never
+materializes its full output: ``_advance_merge`` keeps per-input-run
+cursors and, per quantum, cuts the next window at a GLOBAL key boundary
+(binary search on the key space over the host mirrors — the merge-path
+pivot), merges just that window (``merge_dedup_kway_window`` on the
+kernel path, the packed-sort host merge otherwise) and appends it to the
+pending output.  Key-boundary cuts mean no equal-key group straddles
+windows, so concatenated window outputs are bit-identical to the one-shot
+merge; ``streaming_merge=False`` keeps the legacy
+materialize-then-emit path as a benchmark baseline.  This bounds the
+time ``BackgroundDriver`` holds the engine lock per pump, which is what
+makes writer/reader tail latency track the configured quantum instead of
+the largest in-flight merge (see ``benchmarks/latency_tail.py``).
 
 ``interpret`` selects the Pallas execution mode for every kernel the
 engine launches (bloom probes and the merge path): True keeps CPU tests
@@ -51,6 +96,7 @@ serving example takes it on the foreground path.
 """
 from __future__ import annotations
 
+import bisect
 import threading
 import time
 from dataclasses import dataclass, field
@@ -66,12 +112,13 @@ from .scheduler import MergeScheduler
 from .sstable import SSTable
 
 try:  # the merge kernel needs jax; engine tests always have it
-    from repro.kernels.bloom.ops import bloom_probe_multi, stack_filters
-    from repro.kernels.merge.ops import merge_dedup, merge_dedup_kway
+    from repro.kernels.bloom.ops import bloom_probe_multi, set_stack_row
+    from repro.kernels.merge.ops import (merge_dedup, merge_dedup_kway,
+                                         merge_dedup_kway_window)
     import jax.numpy as jnp
 except Exception:  # pragma: no cover
-    merge_dedup = merge_dedup_kway = None
-    bloom_probe_multi = stack_filters = None
+    merge_dedup = merge_dedup_kway = merge_dedup_kway_window = None
+    bloom_probe_multi = set_stack_row = None
 
 
 ENTRY_BYTES = 1024  # paper's 1 KB records: 1 entry == 1 KB of I/O budget
@@ -81,28 +128,147 @@ ENTRY_BYTES = 1024  # paper's 1 KB records: 1 entry == 1 KB of I/O budget
 class _ReadView:
     """Cached snapshot of the disk tables for the read plane.
 
-    ``tables`` is newest-first by ``(-data_stamp, level)``; ``filts`` /
-    ``meta`` are the stacked padded Bloom words + per-table (n_bits, k)
-    for the fused multi-table probe (None when there are no tables).
-    ``filts`` is uploaded to a DEVICE array once at view build, so
-    repeated ``get_batch`` calls between invalidations reuse it instead
-    of re-staging the host stack through ``jnp.asarray`` per probe;
-    ``meta`` stays host-side numpy so the probe's static ``k_max`` needs
-    no device sync.  Rebuilt lazily after any flush/merge completion
-    invalidates it.
+    ``tables`` is newest-first by ``(-data_stamp, level)`` — an O(tables)
+    tuple snapshot of the engine's insertion-maintained ``_order`` list.
+    ``filts``/``meta`` stay ``None`` until the first point lookup applies
+    the persistent ``_FilterStack``'s pending journal
+    (``LSMEngine._view_filters``): ``filts`` is the stack's DEVICE array
+    (capacity rows, only live slots meaningful), ``meta`` the host-side
+    per-row (n_bits, k) geometry; each table's probe row is its own
+    ``stack_slot``.  Scan-only workloads never populate them.
     """
     tables: tuple
     filts: Optional["jnp.ndarray"] = None
     meta: Optional[np.ndarray] = None
 
 
+class _FilterStack:
+    """Persistent device-side Bloom filter stack with slot reuse — the
+    fused multi-table probe's operand, maintained incrementally and
+    EVENT-DRIVEN.
+
+    The engine notes every table add/remove as it happens
+    (``note_add``/``note_remove``, O(1) bookkeeping, NO device work — so
+    background quanta and scan-only workloads never touch the stack).
+    ``sync(tables)``, called on the first point lookup after a view
+    rebuild, applies the pending journal: removed tables free their
+    rows; each added table takes a free row via ONE donated device row
+    write (``set_stack_row``, O(filter width)) and records the row in
+    ``SSTable.stack_slot`` so the probe path needs no per-view gather.
+    An add whose table is merged away before any read CANCELS against
+    its remove — its filter row (and, with lazy Bloom construction, the
+    filter itself) is never built at all.
+
+    The stack is rebuilt from scratch only when capacity or row width
+    must grow or occupancy falls below 1/4 of capacity — geometric
+    sizing, amortized O(rows changed) per background event instead of
+    the O(tables * filter-bytes) restack-and-reupload of the per-view
+    ``stack_filters`` path this replaces.  Free rows keep
+    (n_bits=128, k=1) metadata so they never inflate the probe's static
+    ``k_max``; their stale word content is only reachable through a
+    stale (raced, uncached) view's ``stack_slot``.
+    """
+
+    def __init__(self):
+        self.filts: Optional["jnp.ndarray"] = None   # (cap, width) uint32
+        self.meta = np.zeros((0, 2), np.uint32)      # host (cap, 2)
+        self.slots: dict[int, int] = {}              # component cid -> row
+        self.free: list[int] = []
+        self._add: dict[int, SSTable] = {}           # pending, cid-keyed
+        self._remove: list[int] = []                 # pending, cids
+
+    @property
+    def cap(self) -> int:
+        return 0 if self.filts is None else int(self.filts.shape[0])
+
+    @property
+    def width(self) -> int:
+        return 0 if self.filts is None else int(self.filts.shape[1])
+
+    def note_add(self, table: SSTable) -> None:
+        self._add[table.component.cid] = table
+
+    def note_remove(self, cid: int) -> None:
+        if self._add.pop(cid, None) is not None:
+            return                       # never materialized: cancelled
+        if cid in self.slots:
+            self._remove.append(cid)
+
+    def _rebuild(self, tables) -> None:
+        cap = max(4, 2 * len(tables))
+        width = max(max((t.bloom_host().shape[0] for t in tables),
+                        default=1), 1)
+        stk = np.zeros((cap, width), np.uint32)
+        self.meta = np.zeros((cap, 2), np.uint32)
+        self.meta[:, 0] = 128
+        self.meta[:, 1] = 1
+        self.slots = {}
+        for i, t in enumerate(tables):
+            w = t.bloom_host()
+            stk[i, :w.shape[0]] = w
+            self.meta[i] = (t.n_bits, t.k_hashes)
+            self.slots[t.component.cid] = i
+            t.stack_slot = i
+        self.free = list(range(len(tables), cap))
+        self.filts = jnp.asarray(stk)
+        self._add.clear()
+        self._remove.clear()
+
+    def sync(self, tables) -> tuple["jnp.ndarray", np.ndarray]:
+        """Apply the pending add/remove journal; returns
+        ``(filts, meta)`` (probe rows come from each table's
+        ``stack_slot``).  The previous device array is donated by row
+        writes — every external reference must be replaced by the
+        returned one."""
+        if self.filts is None:
+            self._rebuild(tables)
+            return self.filts, self.meta
+        for cid in self._remove:
+            row = self.slots.pop(cid, None)
+            if row is not None:
+                self.free.append(row)
+                self.meta[row] = (128, 1)
+        self._remove.clear()
+        if self._add:
+            adds = list(self._add.values())
+            need_w = max(t.bloom_host().shape[0] for t in adds)
+            n_live = len(self.slots) + len(adds)
+            if need_w > self.width or len(adds) > len(self.free) \
+                    or (self.cap > 8 and 4 * n_live < self.cap):
+                self._rebuild(tables)
+                return self.filts, self.meta
+            for t in adds:
+                row = self.free.pop()
+                words = t.bloom_host()
+                if words.shape[0] != self.width:
+                    padded = np.zeros(self.width, np.uint32)
+                    padded[:words.shape[0]] = words
+                    words = padded
+                self.filts = set_stack_row(self.filts, words, row)
+                self.meta[row] = (t.n_bits, t.k_hashes)
+                self.slots[t.component.cid] = row
+                t.stack_slot = row
+            self._add.clear()
+        elif self.cap > 8 and 4 * len(self.slots) < self.cap:
+            self._rebuild(tables)
+        return self.filts, self.meta
+
+
 @dataclass
 class _RunningMerge:
     op: MergeOp
     inputs: list[SSTable]
+    # -- streaming cursor state (opened lazily by ``_open_merge``) -----
+    tables: Optional[list] = None          # inputs sorted newest-first
+    run_keys: Optional[list] = None        # per-run host key mirrors
+    run_vals: Optional[list] = None
+    cursors: Optional[np.ndarray] = None   # per-run consumed prefix
+    lens: Optional[np.ndarray] = None
     # merged-but-unreleased output accumulated across quanta
     out_keys: list[np.ndarray] = field(default_factory=list)
     out_vals: list[np.ndarray] = field(default_factory=list)
+    emitted: int = 0           # post-dedup entries emitted so far
+    # -- legacy one-shot state (``streaming_merge=False`` baseline) ----
     cursor: int = 0            # entries of the merged stream already emitted
     merged_keys: Optional[np.ndarray] = None
     merged_vals: Optional[np.ndarray] = None
@@ -116,7 +282,8 @@ class LSMEngine:
                  memtable_entries: int = 4096, num_memtables: int = 2,
                  unique_keys: float = 1e6, use_kernels: bool = True,
                  merge_block: int = 256, interpret: bool = True,
-                 scan_use_kernels: Optional[bool] = None):
+                 scan_use_kernels: Optional[bool] = None,
+                 streaming_merge: bool = True):
         self.policy = policy
         self.scheduler = scheduler
         self.constraint = constraint or NoConstraint()
@@ -130,11 +297,16 @@ class LSMEngine:
             scan_use_kernels = self.use_kernels and not self.interpret
         self.scan_use_kernels = bool(scan_use_kernels) and \
             merge_dedup_kway is not None
+        self.streaming_merge = bool(streaming_merge)
         self._rlock = threading.RLock()
 
         self.active = MemTable(self.memtable_entries)
         self.sealed: list[MemTable] = []
         self.tables: dict[int, SSTable] = {}     # component id -> SSTable
+        self._order: list[SSTable] = []          # newest-first (see module
+                                                 # docstring: insertion-
+                                                 # maintained, no re-sort)
+        self._fstack = _FilterStack()            # lazy device filter stack
         self._view: Optional[_ReadView] = None   # cached read view
         self._view_epoch = 0                     # bumped on invalidation
         self.running: dict[int, _RunningMerge] = {}
@@ -145,8 +317,8 @@ class LSMEngine:
         self._flush_debt = 0             # flush-quantum overshoot owed
         self._recorder = None            # optional WriteTraceRecorder
         self.stats = {"puts": 0, "stall_events": 0, "flushes": 0,
-                      "merges": 0, "merge_bytes": 0, "lookups": 0,
-                      "bloom_skips": 0}
+                      "merges": 0, "merge_bytes": 0, "merge_touched": 0,
+                      "lookups": 0, "bloom_skips": 0}
 
     def attach_write_recorder(self, recorder) -> None:
         """Attach a ``metrics.WriteTraceRecorder`` (or None to detach).
@@ -165,6 +337,11 @@ class LSMEngine:
         self._refresh_stall()
         ok = True
         if self.stalled:
+            # a constraint-induced rejection IS a stall event: the paper's
+            # stall accounting charges the writer whenever the write path
+            # refuses work, whichever side (memtable backpressure or the
+            # component constraint) refused it
+            self.stats["stall_events"] += 1
             ok = False
         elif self.active.full and len(self.sealed) >= self.num_memtables - 1:
             self.stats["stall_events"] += 1
@@ -195,6 +372,10 @@ class LSMEngine:
         while n_ok < n:
             self._refresh_stall()
             if self.stalled:
+                # mirror ``put``: one stall event per batch rejection,
+                # whichever predicate (constraint here, memtable
+                # backpressure below) refused the remainder
+                self.stats["stall_events"] += 1
                 break
             if self.active.full:
                 if len(self.sealed) >= self.num_memtables - 1:
@@ -217,34 +398,41 @@ class LSMEngine:
 
     # ------------------------------------------------------------------ read
     def _read_view(self) -> _ReadView:
-        """The cached read view (see module docstring for the contract).
-        Epoch-guarded against the wall-clock driver: if a flush/merge
-        invalidates mid-build, the snapshot serves this call but is NOT
-        cached, so a stale view can never become sticky."""
+        """The cached read view (see module docstring for the contract):
+        an O(tables) snapshot of the insertion-maintained ``_order`` list
+        — no sorting, no filter work (filters sync lazily in
+        ``_view_filters``).  Epoch-guarded against the wall-clock driver:
+        if a flush/merge invalidates mid-build, the snapshot serves this
+        call but is NOT cached, so a stale view can never become
+        sticky."""
         view = self._view
         if view is None:
             epoch = self._view_epoch
-            tables = tuple(sorted(
-                (t for t in self.tables.values() if t.component is not None),
-                key=lambda t: (-t.data_stamp, t.component.level)))
-            if tables and stack_filters is not None:
-                filts, meta = stack_filters(
-                    [t.bloom_host() for t in tables],
-                    [t.n_bits for t in tables],
-                    [t.k_hashes for t in tables])
-                # upload the stacked words once per view build; probes
-                # pass the device array straight through (jnp.asarray on
-                # a device array is a no-op)
-                view = _ReadView(tables, jnp.asarray(filts), meta)
-            else:
-                view = _ReadView(tables)
+            view = _ReadView(tuple(self._order))
             if epoch == self._view_epoch:
                 self._view = view
         return view
 
+    def _view_filters(self, view: _ReadView):
+        """Lazily apply the filter stack's pending add/remove journal
+        (first point lookup after a background event pays O(rows
+        changed); scans never call this).  The stack syncs against the
+        authoritative ``_order`` list — a raced, uncached view probes
+        through its tables' ``stack_slot``s, which stay correct for
+        every table still live.  Returns ``(filts, meta)`` — ``None``s
+        when the bloom kernels are unavailable."""
+        if view.filts is None and view.tables and set_stack_row is not None:
+            view.filts, view.meta = self._fstack.sync(self._order)
+        return view.filts, view.meta
+
     def _invalidate_view(self):
         self._view_epoch += 1
         self._view = None
+
+    @staticmethod
+    def _order_key(t: SSTable):
+        """Newest-first rank of a table in the read view / merge order."""
+        return (-t.data_stamp, t.component.level if t.component else 0)
 
     def get(self, key: int):
         found, vals = self.get_batch(np.array([key], np.uint32))
@@ -273,17 +461,22 @@ class LSMEngine:
         view = self._read_view()
         if not view.tables:
             return found, vals
-        if view.filts is not None:
-            maybe = bloom_probe_multi(view.filts, view.meta, keys,
-                                      interpret=self.interpret)
+        filts, meta = self._view_filters(view)
+        if filts is not None:
+            # probe the full stack (capacity rows, <= 2x live tables);
+            # each table's row is its own stack_slot — no gather
+            probed = np.asarray(bloom_probe_multi(
+                filts, meta, keys, interpret=self.interpret))
         else:  # pragma: no cover - kernels unavailable
-            maybe = np.ones((len(view.tables), q), bool)
-        for ti, table in enumerate(view.tables):
+            probed = None
+        for table in view.tables:
             pend = ~found
             if not pend.any():
                 break
-            cand = pend & maybe[ti]
-            self.stats["bloom_skips"] += int((pend & ~maybe[ti]).sum())
+            maybe_t = probed[table.stack_slot] if probed is not None \
+                else np.ones(q, bool)
+            cand = pend & maybe_t
+            self.stats["bloom_skips"] += int((pend & ~maybe_t).sum())
             if not cand.any():
                 continue
             idx = np.flatnonzero(cand)
@@ -380,12 +573,7 @@ class LSMEngine:
                                   level=self.policy.flush_target_level(),
                                   created_at=self.now,
                                   interpret=self.interpret)
-            self._stamp += 1
-            table.data_stamp = self._stamp
-            table.component.stamp = float(self._stamp)
-            self.tree.add(table.component)
-            self.tables[table.component.cid] = table
-            self._invalidate_view()
+            self._bind_table(table)
             self.stats["flushes"] += 1
             cost = len(keys)
             avail = budget_entries - spent
@@ -430,6 +618,21 @@ class LSMEngine:
         self._refresh_stall()
         return spent
 
+    def _bind_table(self, table: SSTable) -> None:
+        """Register a freshly built run as the globally NEWEST table:
+        stamp it, enter it into the scheduling plane and the read plane
+        (prepend to ``_order`` — O(1) rank — and journal the filter-stack
+        add).  The flush path binds through here; benchmarks use it to
+        inject preloaded runs with flush-identical semantics."""
+        self._stamp += 1
+        table.data_stamp = self._stamp
+        table.component.stamp = float(self._stamp)
+        self.tree.add(table.component)
+        self.tables[table.component.cid] = table
+        self._order.insert(0, table)
+        self._fstack.note_add(table)
+        self._invalidate_view()
+
     def drain(self, budget_entries: int = 1 << 30, max_pumps: int = 10_000):
         """Pump until no background work remains (tests/shutdown)."""
         for _ in range(max_pumps):
@@ -444,20 +647,123 @@ class LSMEngine:
             self.running[op.op_id] = _RunningMerge(op=op, inputs=inputs)
 
     # -- merge execution (the paper's unit of schedulable I/O) ---------------
+    def _open_merge(self, rm: _RunningMerge):
+        """Set up the streaming cursor: sort inputs newest-first (the
+        k-way age order — data_stamp is the data-age order; on equal
+        stamps the LOWER level holds the newer version) and zero the
+        per-run cursors.  No merged output is computed here: each quantum
+        merges only its own window."""
+        rm.tables = sorted(rm.inputs, key=self._order_key)
+        hosts = [t._host() for t in rm.tables]
+        rm.run_keys = [h[0] for h in hosts]
+        rm.run_vals = [h[1] for h in hosts]
+        rm.lens = np.array([len(k) for k in rm.run_keys], np.int64)
+        rm.cursors = np.zeros(len(rm.tables), np.int64)
+
+    def _merge_cut(self, rm: _RunningMerge,
+                   target: int) -> tuple[np.ndarray, int]:
+        """The merge-path pivot: the largest key-boundary cut whose
+        remaining input entries number at most ``target`` (binary search
+        for the pivot key over the uint32 key space; per-run window ends
+        via ``searchsorted`` on the host mirrors, so only O(k log n)
+        entries are touched).  Cutting at a key boundary means no
+        equal-key group straddles windows — per-window newest-wins dedup
+        composes to the one-shot result.  When even the first key group
+        exceeds ``target`` (up to k duplicates of one key), that group is
+        taken whole as forced minimal progress: it emits exactly one
+        entry.  Returns ``(stops, consumed)``."""
+        cur, lens, ks = rm.cursors, rm.lens, rm.run_keys
+        rem = int((lens - cur).sum())
+        if rem <= target:
+            return lens.copy(), rem
+
+        def below(p: int) -> int:
+            c = 0
+            for i, k in enumerate(ks):
+                if cur[i] < lens[i]:
+                    c += max(0, int(np.searchsorted(k, np.uint32(p)))
+                             - int(cur[i]))
+            return c
+
+        lo, hi = 0, 0xFFFFFFFF      # sentinel key never stored: p covers all
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if below(mid) <= target:
+                lo = mid
+            else:
+                hi = mid - 1
+        stops = np.array(
+            [min(int(lens[i]),
+                 max(int(cur[i]), int(np.searchsorted(ks[i],
+                                                      np.uint32(lo)))))
+             for i in range(len(ks))], np.int64)
+        consumed = int((stops - cur).sum())
+        if consumed == 0:
+            # forced progress: the whole first key group (<= k entries)
+            nxt = min(int(ks[i][cur[i]]) for i in range(len(ks))
+                      if cur[i] < lens[i])
+            stops = np.array(
+                [min(int(lens[i]),
+                     max(int(cur[i]),
+                         int(np.searchsorted(ks[i], np.uint32(nxt),
+                                             side="right"))))
+                 for i in range(len(ks))], np.int64)
+            consumed = int((stops - cur).sum())
+        return stops, consumed
+
+    def _advance_merge(self, rm: _RunningMerge, quantum: int) -> int:
+        """Advance one merge by ~``quantum`` output entries: cut the next
+        window at a global key boundary and merge ONLY that window, so
+        the work (and lock-hold time) under a live ``BackgroundDriver``
+        is O(quantum + k), never O(total merge size).  Emitted entries
+        (post-dedup) are what the budget is charged for, matching the
+        paper's written-bytes accounting; heavy dedup therefore spends
+        less than the allocated quantum rather than overshooting it."""
+        if not self.streaming_merge:
+            return self._advance_merge_oneshot(rm, quantum)
+        if rm.tables is None:
+            self._open_merge(rm)
+        if int((rm.lens - rm.cursors).sum()) == 0:
+            self._finish_merge(rm)
+            return 0
+        starts = rm.cursors
+        stops, consumed = self._merge_cut(rm, quantum)
+        if self.use_kernels:
+            mk, mv = merge_dedup_kway_window(
+                [(t.keys, t.vals) for t in rm.tables],
+                starts.tolist(), stops.tolist(),
+                block=self.merge_block, interpret=self.interpret)
+            wk, wv = np.asarray(mk), np.asarray(mv)
+        else:
+            runs = [(rm.run_keys[i][starts[i]:stops[i]],
+                     rm.run_vals[i][starts[i]:stops[i]])
+                    for i in range(len(rm.tables))
+                    if stops[i] > starts[i]]
+            if len(runs) == 1:
+                wk, wv = runs[0]
+            else:
+                wk, wv = self._merge_kway_host(runs)
+        take = len(wk)
+        assert take <= max(quantum, 1), "window emitted beyond its quantum"
+        rm.cursors = stops
+        rm.out_keys.append(wk)
+        rm.out_vals.append(wv)
+        rm.emitted += take
+        rm.op.written += take
+        self.stats["merge_bytes"] += take * ENTRY_BYTES
+        self.stats["merge_touched"] += consumed
+        if int((rm.lens - rm.cursors).sum()) == 0:
+            self._finish_merge(rm)
+        return take
+
     def _materialize_merge(self, rm: _RunningMerge):
-        """Compute the full merged run once (kernel or numpy), then emit it
-        in scheduler-controlled quanta — I/O pacing is what the paper
-        schedules; the compute itself is one balanced k-way reduction
-        (O(n log k) merged entries) instead of the seed's sequential
-        pairwise oldest->newest fold (O(n*k))."""
-        # newest-first run order = the k-way merge's age order.
-        # data_stamp is the data-age order (created_at can tie when a
-        # flush and a merge complete in the same pump); on equal stamps
-        # the LOWER level holds the newer version.
-        tables = sorted(rm.inputs,
-                        key=lambda t: (-t.data_stamp,
-                                       t.component.level
-                                       if t.component else 0))
+        """LEGACY one-shot path (``streaming_merge=False``; kept as the
+        measured baseline in ``benchmarks/latency_tail.py`` and the
+        streaming differential tests): compute the full merged run at the
+        first quantum — an unbounded compute spike under the engine lock,
+        which is exactly the cliff the streaming cursor removes."""
+        self.stats["merge_touched"] += sum(len(t) for t in rm.inputs)
+        tables = sorted(rm.inputs, key=self._order_key)
         if self.use_kernels:
             mk, mv = merge_dedup_kway(
                 [(jnp.asarray(t.keys, jnp.uint32),
@@ -468,7 +774,7 @@ class LSMEngine:
         runs = [(np.asarray(t.keys), np.asarray(t.vals)) for t in tables]
         rm.merged_keys, rm.merged_vals = self._merge_kway_host(runs)
 
-    def _advance_merge(self, rm: _RunningMerge, quantum: int) -> int:
+    def _advance_merge_oneshot(self, rm: _RunningMerge, quantum: int) -> int:
         if rm.merged_keys is None:
             self._materialize_merge(rm)
         total = len(rm.merged_keys)
@@ -492,8 +798,12 @@ class LSMEngine:
         # keep the policy's metadata model in sync with the real output size
         rm.op.output_size = float(len(keys))
         rm.op.written = float(len(keys))
-        for c in rm.op.inputs:
-            self.tables.pop(c.cid, None)
+        in_cids = {c.cid for c in rm.op.inputs}
+        for cid in in_cids:
+            self.tables.pop(cid, None)
+            self._fstack.note_remove(cid)
+        self._order = [t for t in self._order
+                       if t.component.cid not in in_cids]
         outs = self.policy.complete_merge(self.tree, rm.op, self.now)
         # partitioned policies may split the output into several files
         def _bind(comp, ks, vs):
@@ -523,6 +833,18 @@ class LSMEngine:
             splits = np.array_split(np.arange(len(keys)), n)
             for comp, idx in zip(outs, splits):
                 _bind(comp, keys[idx], vals[idx])
+        # bisect-insert the outputs at their (-stamp, level) rank: all
+        # outputs of one merge share the rank (same stamp, same level)
+        # and hold disjoint key ranges, so inserting them adjacently
+        # keeps the newest-first order without a full re-sort
+        out_tables = [self.tables[c.cid] for c in outs]
+        if out_tables:          # a policy may complete a merge to nothing
+            pos = bisect.bisect_left(self._order,
+                                     self._order_key(out_tables[0]),
+                                     key=self._order_key)
+            self._order[pos:pos] = out_tables
+        for t in out_tables:
+            self._fstack.note_add(t)
         self.running.pop(rm.op.op_id, None)
         self._invalidate_view()
         self.stats["merges"] += 1

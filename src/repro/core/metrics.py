@@ -157,6 +157,42 @@ class Trace:
         }
 
 
+class LatencyRecorder:
+    """Per-operation latency sampler for wall-clock foreground loops (the
+    tail-latency benchmark's writer/reader threads).
+
+    ``observe`` appends one operation's latency in seconds; ``percentiles``
+    summarizes.  Callers measuring under a concurrent background plane
+    should drive an OPEN loop — schedule operations at fixed arrival
+    times and observe ``completion - scheduled`` rather than
+    ``completion - issue`` — so a stall charges every operation it
+    delays instead of just the one that happened to be in flight
+    (coordinated-omission-free, the discipline the paper's running-phase
+    latency metric assumes).
+    """
+
+    def __init__(self):
+        self._samples: list[float] = []
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def observe(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+
+    def percentiles(self, pcts=(50.0, 99.0, 99.9)) -> dict[float, float]:
+        if not self._samples:
+            return {float(p): 0.0 for p in pcts}
+        a = np.asarray(self._samples)
+        return {float(p): float(np.percentile(a, p)) for p in pcts}
+
+    def summary(self) -> dict:
+        p = self.percentiles()
+        return {"n": len(self), "p50": p[50.0], "p99": p[99.0],
+                "p999": p[99.9], "max": float(max(self._samples))
+                if self._samples else 0.0}
+
+
 class WriteTraceRecorder:
     """Ingests the real engine's discrete write-path events into a ``Trace``.
 

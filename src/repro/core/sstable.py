@@ -29,31 +29,51 @@ from .memtable import scan_window, sorted_lookup
 class SSTable:
     keys: jnp.ndarray                  # (n,) uint32, sorted ascending, unique
     vals: jnp.ndarray                  # (n,) int32
-    bloom: jnp.ndarray = None          # uint32 words
+    bloom: jnp.ndarray = None          # uint32 words, built LAZILY on the
+                                       # first probe/stack sync — never on
+                                       # the background (flush/merge) path,
+                                       # whose quanta must stay O(quantum)
     n_bits: int = 0
     k_hashes: int = 0
     component: Optional[Component] = None
     data_stamp: int = 0                # data age: strictly increasing at
                                        # flush; max over inputs at merge
+    stack_slot: int = -1               # row in the engine's persistent
+                                       # filter stack (set by its sync)
     interpret: bool = True             # Pallas mode for probe kernels
-    keys_np: Optional[np.ndarray] = None   # host mirrors (lazy)
+    keys_np: Optional[np.ndarray] = None   # host mirrors: seeded by
+                                           # ``build``; lazy fallback for
+                                           # hand-constructed tables
     vals_np: Optional[np.ndarray] = None
     bloom_np: Optional[np.ndarray] = None
 
     @classmethod
     def build(cls, keys, vals, level: int = 0, created_at: float = 0.0,
               fpr: float = 0.01, interpret: bool = True) -> "SSTable":
-        keys = jnp.asarray(keys, jnp.uint32)
-        vals = jnp.asarray(vals, jnp.int32)
-        n = int(keys.shape[0])
+        # Host-first: the flush/merge call sites already hold numpy
+        # arrays (``MemTable.seal`` output / merge-output concatenation),
+        # so component bounds come from the host copy and the read
+        # plane's ``keys_np``/``vals_np`` mirrors are seeded for free —
+        # the seed's ``float(keys[0])``/``float(keys[-1])`` round-tripped
+        # the device once per flush just to compute bounds.
+        keys_np = np.asarray(keys, np.uint32)
+        vals_np = np.asarray(vals, np.int32)
+        keys = jnp.asarray(keys_np)
+        vals = jnp.asarray(vals_np)
+        n = int(keys_np.shape[0])
         n_bits, k_hashes = filter_params(n, fpr)
-        bloom = bloom_build(keys, n_bits, k_hashes)
-        lo = float(keys[0]) / 2**32 if n else 0.0
-        hi = (float(keys[-1]) + 1) / 2**32 if n else 1.0
+        # the Bloom filter itself is NOT built here: flush/merge
+        # completions run under the engine lock in scheduler quanta, and
+        # an O(n) filter build there is exactly the compute cliff the
+        # bounded background plane forbids.  ``_ensure_bloom`` builds it
+        # on the first probe (point-read paths only — scans never pay).
+        lo = float(keys_np[0]) / 2**32 if n else 0.0
+        hi = (float(keys_np[-1]) + 1) / 2**32 if n else 1.0
         comp = Component(size=float(n), level=level, key_lo=lo, key_hi=hi,
                          created_at=created_at)
-        return cls(keys=keys, vals=vals, bloom=bloom, n_bits=n_bits,
-                   k_hashes=k_hashes, component=comp, interpret=interpret)
+        return cls(keys=keys, vals=vals, n_bits=n_bits,
+                   k_hashes=k_hashes, component=comp, interpret=interpret,
+                   keys_np=keys_np, vals_np=vals_np)
 
     def __len__(self) -> int:
         return int(self.keys.shape[0])
@@ -65,20 +85,28 @@ class SSTable:
             self.vals_np = np.asarray(self.vals)
         return self.keys_np, self.vals_np
 
+    def _ensure_bloom(self) -> jnp.ndarray:
+        """Build the filter on first use (never on the background path)."""
+        if self.bloom is None:
+            self.bloom = bloom_build(jnp.asarray(self.keys, jnp.uint32),
+                                     self.n_bits, self.k_hashes)
+        return self.bloom
+
     def bloom_host(self) -> np.ndarray:
-        """Host-side filter words, materialized once (the engine's read
-        view restacks filters on every flush/merge — without this cache
-        each rebuild would re-sync every table's filter from device)."""
+        """Host-side filter words, built/materialized once on first use
+        (the engine's incremental filter stack syncs new tables' words
+        from here — one O(filter) cost on the first point read after a
+        flush/merge, zero on the background quanta themselves)."""
         if self.bloom_np is None:
-            self.bloom_np = np.asarray(self.bloom)
+            self.bloom_np = np.asarray(self._ensure_bloom())
         return self.bloom_np
 
     # -- queries --------------------------------------------------------------
     def maybe_contains(self, keys) -> np.ndarray:
         """Bloom-filter screen (vectorized, Pallas probe kernel)."""
         keys = jnp.asarray(keys, jnp.uint32)
-        return np.asarray(bloom_probe(self.bloom, keys, self.n_bits,
-                                      self.k_hashes,
+        return np.asarray(bloom_probe(self._ensure_bloom(), keys,
+                                      self.n_bits, self.k_hashes,
                                       interpret=self.interpret))
 
     def search(self, keys) -> tuple[np.ndarray, np.ndarray]:

@@ -22,7 +22,12 @@ Backends.  ``run_two_phase`` takes factories of any object satisfying the
   inline (``realtime=False``).  The engine's write path reports
   (admitted, offered) events into a ``metrics.WriteTraceRecorder``, so
   arrival/service curves, stall intervals and every ``Trace`` metric —
-  and therefore ``TwoPhaseResult.sustainable`` — work unchanged.
+  and therefore ``TwoPhaseResult.sustainable`` — work unchanged.  The
+  realtime harness inherits the engine's bounded background quanta
+  (streaming merges + incremental read-view maintenance): each pump
+  holds the lock for O(quantum), so measured tails reflect the
+  scheduler's I/O allocation, not compute cliffs the scheduler cannot
+  see (``benchmarks/latency_tail.py`` quantifies the difference).
 
 Both backends share the client abstractions in ``sim.py``
 (``ClosedClient``/``OpenClient``/``ArrivalProcess``): the simulator
@@ -84,6 +89,7 @@ class TwoPhaseResult:
             "running_stall_time": self.running.stall_time(),
             "p50_write_latency": self.write_latencies.get(50),
             "p99_write_latency": self.write_latencies.get(99),
+            "p999_write_latency": self.write_latencies.get(99.9),
             "sustainable": self.sustainable,
         }
 

@@ -67,6 +67,27 @@ def stack_filters(filters, n_bits_list, k_hashes_list):
     return filts, meta
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _set_row_donated(filts, row, slot):
+    return filts.at[slot].set(row)
+
+
+def set_stack_row(filts, row_words, slot):
+    """Write one filter's words into row ``slot`` of a stacked device
+    filter array, donating the input buffer so backends that support
+    input-output aliasing update the row IN PLACE — O(row) instead of the
+    O(tables * width) restack-and-reupload of ``stack_filters``.  This is
+    the engine's incremental read-view maintenance primitive: one call
+    per flush output / merge output.  ``row_words`` shorter than the
+    stack width must be pre-padded by the caller.  The donated input
+    array is consumed — callers must replace every reference with the
+    returned array.  Operands cross the jit boundary raw (the row as
+    host uint32 words, the slot as a Python int): explicit
+    ``jnp.asarray``/``jnp.int32`` staging costs an order of magnitude
+    more dispatch than the row write itself."""
+    return _set_row_donated(filts, row_words, int(slot))
+
+
 def bloom_probe_multi(filts, meta, keys, block: int = 1024,
                       interpret: bool = True):
     """Probe one key batch against a stack of padded filters (see

@@ -118,6 +118,27 @@ def merge_sorted_age(keys_a, vals_a, age_a, keys_b, vals_b, age_b,
     return mk, mv, ma, n_a + n_b
 
 
+def merge_dedup_kway_window(runs, starts, stops, block: int = 256,
+                            interpret: bool = True):
+    """Streaming-quantum (block-stepped) variant of ``merge_dedup_kway``:
+    merge only the ``[starts[i], stops[i])`` window of each run.
+
+    The engine's streaming merge cursor cuts windows at a GLOBAL key
+    boundary (no equal-key group straddles a cut), so per-window
+    newest-wins dedup composes exactly: concatenating successive windows'
+    outputs is bit-identical to ``merge_dedup_kway`` over the full runs.
+    Run-list order is still newest-first, and an empty window keeps its
+    position's age rank (``merge_dedup_kway`` tags ages by list index),
+    so the tournament's tie-breaking is unchanged.  Per call the kernel
+    touches O(sum(stops - starts) + k*block) entries — each window pads
+    to the block grid — which is the bounded-lock-hold contract of the
+    engine's background plane.
+    """
+    windows = [(k[s:e], v[s:e])
+               for (k, v), s, e in zip(runs, starts, stops)]
+    return merge_dedup_kway(windows, block=block, interpret=interpret)
+
+
 def merge_dedup_kway(runs, block: int = 256, interpret: bool = True):
     """K-way newest-wins merge of sorted unique runs (NEWEST run first).
 

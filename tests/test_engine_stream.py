@@ -1,0 +1,291 @@
+"""Bounded-latency background plane (PR 5): streaming merge quanta +
+incremental read-view maintenance.
+
+What is pinned here:
+
+* The streaming merge cursor's concatenated output is BIT-IDENTICAL to
+  the one-shot k-way merge — for every merge the real policies generate
+  ({tiering, leveling, partitioned} x {host, kernel} backends), and for
+  a direct cursor unit drive under an adversarial quantum schedule.
+* A single ``pump(q)`` touches O(q + k) merge entries and emits at most
+  ``q`` — the bounded-lock-hold contract that makes the scheduler's
+  quantum the actual knob (the one-shot path materialized the WHOLE
+  merge at its first quantum).
+* The read view is maintained incrementally: the insertion-maintained
+  ``_order`` list always equals the full ``(-data_stamp, level)`` sort,
+  the device filter stack reuses slots (one row write per flush, no
+  restack), and scan-only workloads never build the filter stack at all.
+* Regressions: constraint-induced write rejections count as
+  ``stall_events`` (the seed only counted the memtable-full branch), and
+  ``SSTable.build`` seeds host mirrors/bounds from its numpy inputs
+  instead of round-tripping the device per flush.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.component import MergeOp
+from repro.core.constraints import ComponentConstraint, NoConstraint
+from repro.core.engine import LSMEngine, _RunningMerge
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 TieringPolicy)
+from repro.core.scheduler import FairScheduler
+from repro.core.sstable import SSTable
+
+
+def _mk_engine(policy: str, use_kernels: bool, streaming: bool = True,
+               memtable: int = 64, unique: int = 2048) -> LSMEngine:
+    pol = {
+        "tiering": lambda: TieringPolicy(3, memtable, unique),
+        "leveling": lambda: LevelingPolicy(3, memtable, unique),
+        "partitioned": lambda: PartitionedLevelingPolicy(
+            4, memtable, unique, file_entries=64, l1_capacity=256),
+    }[policy]()
+    return LSMEngine(pol, FairScheduler(), NoConstraint(),
+                     memtable_entries=memtable, unique_keys=unique,
+                     use_kernels=use_kernels, merge_block=64,
+                     streaming_merge=streaming)
+
+
+def _oneshot_reference(eng: LSMEngine, inputs) -> tuple[np.ndarray,
+                                                        np.ndarray]:
+    """The one-shot k-way merge of ``inputs`` on the engine's backend."""
+    tables = sorted(inputs, key=eng._order_key)
+    if not any(len(t) for t in tables):
+        return np.empty(0, np.uint32), np.empty(0, np.int32)
+    if eng.use_kernels:
+        from repro.kernels.merge.ops import merge_dedup_kway
+        mk, mv = merge_dedup_kway([(t.keys, t.vals) for t in tables],
+                                  block=eng.merge_block, interpret=True)
+        return np.asarray(mk), np.asarray(mv)
+    return LSMEngine._merge_kway_host(
+        [t._host() for t in tables if len(t)])
+
+
+# ------------------------------------------------- streaming differential
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["host", "kernel"])
+def test_streaming_merge_bit_identical_under_policies(policy, use_kernels):
+    """Every merge the policy schedules: the concatenation of the
+    streaming cursor's per-quantum windows must equal the one-shot merge
+    of the same inputs, bit for bit."""
+    eng = _mk_engine(policy, use_kernels)
+    orig_finish = eng._finish_merge
+    checked = []
+
+    def checking_finish(rm):
+        got_k = np.concatenate(rm.out_keys) if rm.out_keys else \
+            np.empty(0, np.uint32)
+        got_v = np.concatenate(rm.out_vals) if rm.out_vals else \
+            np.empty(0, np.int32)
+        want_k, want_v = _oneshot_reference(eng, rm.inputs)
+        assert np.array_equal(got_k, want_k), \
+            (policy, use_kernels, len(got_k), len(want_k))
+        assert np.array_equal(got_v, want_v)
+        checked.append(len(got_k))
+        orig_finish(rm)
+
+    eng._finish_merge = checking_finish
+    rng = np.random.default_rng(5)
+    for i, (k, v) in enumerate(zip(rng.integers(0, 2048, 700),
+                                   rng.integers(0, 1 << 30, 700))):
+        while not eng.put(int(k), int(v)):
+            eng.pump(53)            # odd quanta: windows never align
+        if i % 17 == 0:
+            eng.pump(29)
+    eng.drain(budget_entries=97)
+    assert checked, f"workload produced no merges under {policy}"
+
+
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["host", "kernel"])
+def test_streaming_cursor_unit_adversarial_quanta(use_kernels):
+    """Direct cursor drive: heavily overlapping runs (every key present
+    in every run — maximal dedup) under a quantum schedule mixing 1s with
+    large steps; the streamed output must equal the one-shot merge and
+    every advance must emit at most its quantum."""
+    rng = np.random.default_rng(11)
+    tables = []
+    for i in range(4):
+        keys = np.unique(rng.integers(0, 3000, 1500).astype(np.uint32))
+        vals = rng.integers(0, 1 << 30, len(keys)).astype(np.int32)
+        t = SSTable.build(keys, vals, level=0)
+        t.data_stamp = 10 - i
+        t.component.stamp = float(10 - i)
+        tables.append(t)
+
+    eng = _mk_engine("tiering", use_kernels)
+    op = MergeOp(inputs=[t.component for t in tables], output_level=1,
+                 output_size=float(sum(len(t) for t in tables)))
+    rm = _RunningMerge(op=op, inputs=tables)
+    got = {}
+
+    def fake_finish(r):
+        got["k"] = np.concatenate(r.out_keys)
+        got["v"] = np.concatenate(r.out_vals)
+
+    eng._finish_merge = fake_finish
+    quanta = [1, 2, 3, 257, 1, 5, 1000, 7, 1, 64]
+    qi = 0
+    while "k" not in got:
+        q = quanta[qi % len(quanta)]
+        qi += 1
+        emitted = eng._advance_merge(rm, q)
+        assert emitted <= q
+        assert qi < 10_000, "cursor failed to make progress"
+    want_k, want_v = _oneshot_reference(eng, tables)
+    assert np.array_equal(got["k"], want_k)
+    assert np.array_equal(got["v"], want_v)
+
+
+def test_pump_touch_bound():
+    """Bounded lock hold: a single ``pump(q)`` advancing a large k-way
+    merge touches at most q + k merge entries on the host path (the
+    one-shot baseline touches the ENTIRE merge at its first quantum) and
+    emits at most q."""
+    n, k = 4096, 4
+    eng = LSMEngine(TieringPolicy(k, n, 1 << 20), FairScheduler(),
+                    NoConstraint(), memtable_entries=n, num_memtables=2,
+                    unique_keys=1 << 20, use_kernels=False)
+    rng = np.random.default_rng(3)
+    for i in range(k):
+        keys = rng.choice(1 << 16, n, replace=False).astype(np.uint32)
+        vals = rng.integers(0, 1 << 30, n).astype(np.int32)
+        assert eng.put_batch(keys, vals) == n
+        eng._seal_active()
+        eng.pump(n)                       # flush exactly; merge collects
+    assert eng.running, "expected a running k-way merge"
+    for q in (1, 100, 257):
+        before = eng.stats["merge_touched"]
+        spent = eng.pump(q)
+        assert spent <= q
+        assert eng.stats["merge_touched"] - before <= q + k, \
+            f"pump({q}) touched {eng.stats['merge_touched'] - before}"
+
+    # the one-shot baseline materializes everything at the first quantum
+    eng2 = LSMEngine(TieringPolicy(k, n, 1 << 20), FairScheduler(),
+                     NoConstraint(), memtable_entries=n, num_memtables=2,
+                     unique_keys=1 << 20, use_kernels=False,
+                     streaming_merge=False)
+    rng = np.random.default_rng(3)
+    for i in range(k):
+        keys = rng.choice(1 << 16, n, replace=False).astype(np.uint32)
+        vals = rng.integers(0, 1 << 30, n).astype(np.int32)
+        eng2.put_batch(keys, vals)
+        eng2._seal_active()
+        eng2.pump(n)
+    eng2.pump(1)
+    rm = next(iter(eng2.running.values()))
+    assert rm.merged_keys is not None and len(rm.merged_keys) > n, \
+        "baseline lost its one-shot materialization (benchmark invalid)"
+
+
+# ------------------------------------------------- incremental read view
+def test_order_list_matches_full_sort():
+    """``_order`` (insertion-maintained) must always equal the full
+    ``(-data_stamp, level)`` sort the seed recomputed per view."""
+    for policy in ("tiering", "leveling", "partitioned"):
+        eng = _mk_engine(policy, use_kernels=False)
+        rng = np.random.default_rng(7)
+        for i, k in enumerate(rng.integers(0, 2048, 900)):
+            while not eng.put(int(k), i):
+                eng.pump(41)
+            if i % 11 == 0:
+                eng.pump(23)
+                want = sorted(
+                    eng.tables.values(),
+                    key=lambda t: (-t.data_stamp, t.component.level))
+                got = [t.component.cid for t in eng._order]
+                assert got == [t.component.cid for t in want], (policy, i)
+        eng.drain()
+
+
+def test_filter_stack_incremental_slot_reuse():
+    """A flush adds ONE row to the persistent stack (no rebuild while
+    capacity lasts); a merge frees its input slots for reuse; the stack's
+    device buffer object survives row writes only via replacement."""
+    eng = _mk_engine("tiering", use_kernels=False, memtable=32,
+                     unique=1 << 16)
+    rng = np.random.default_rng(1)
+
+    def flush_one():
+        keys = rng.choice(1 << 16, 32, replace=False).astype(np.uint32)
+        assert eng.put_batch(keys, np.ones(32, np.int32)) == 32
+        eng._seal_active()
+        eng.pump(32)
+
+    flush_one()
+    eng.get_batch(np.arange(8, dtype=np.uint32))      # builds the stack
+    fs = eng._fstack
+    assert fs.filts is not None
+    cap0 = fs.cap
+    slots0 = dict(fs.slots)
+    flush_one()
+    eng.get_batch(np.arange(8, dtype=np.uint32))      # one-row reconcile
+    assert fs.cap == cap0, "flush should not rebuild the stack"
+    assert slots0.items() <= fs.slots.items(), \
+        "existing tables must keep their slots"
+    assert len(fs.slots) == len(slots0) + 1
+    # drive merges: departed inputs must free rows for reuse
+    for _ in range(8):
+        flush_one()
+    eng.drain()
+    eng.get_batch(np.arange(8, dtype=np.uint32))
+    live = {t.component.cid for t in eng._read_view().tables}
+    assert set(fs.slots) == live, "stack holds slots for departed tables"
+    assert len(fs.free) == fs.cap - len(live)
+
+
+def test_filter_stack_is_lazy_for_scans():
+    """Scan-only / write-only workloads never pay for filter
+    maintenance: the stack stays unbuilt until the first point read."""
+    eng = _mk_engine("tiering", use_kernels=False, memtable=32,
+                     unique=1 << 16)
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        keys = rng.choice(1 << 16, 32, replace=False).astype(np.uint32)
+        eng.put_batch(keys, np.ones(32, np.int32))
+        eng._seal_active()
+        eng.pump(32)
+    eng.scan_range(0, 1 << 16)
+    eng.scan_range(100, 5000)
+    assert eng._fstack.filts is None, "scans built the filter stack"
+    assert eng._read_view().filts is None
+    eng.get(int(keys[0]))                             # first point read
+    assert eng._fstack.filts is not None
+
+
+# ------------------------------------------------------- satellite fixes
+class _AlwaysViolated(ComponentConstraint):
+    def violated(self, tree) -> bool:
+        return True
+
+
+def test_constraint_rejections_count_as_stall_events():
+    """Seed bug: ``put``/``put_batch`` bumped ``stall_events`` only on
+    the memtable-full branch; a constraint-induced rejection (the paper's
+    actual stall mechanism) was invisible to the stats."""
+    eng = _mk_engine("tiering", use_kernels=False)
+    eng.constraint = _AlwaysViolated()
+    assert eng.put(1, 1) is False
+    assert eng.stats["stall_events"] == 1
+    assert eng.put_batch(np.arange(4, dtype=np.uint32),
+                         np.ones(4, np.int32)) == 0
+    assert eng.stats["stall_events"] == 2
+
+
+def test_sstable_build_seeds_host_mirrors():
+    """``build`` must take its bounds and mirrors from the numpy inputs
+    the flush path already has — not from a device round-trip."""
+    keys = np.array([10, 20, 4000], np.uint32)
+    vals = np.array([1, 2, 3], np.int32)
+    t = SSTable.build(keys, vals, level=1)
+    assert t.keys_np is keys and t.vals_np is vals, \
+        "mirrors must BE the numpy inputs (no copy, no device sync)"
+    assert t.component.key_lo == pytest.approx(10 / 2**32)
+    assert t.component.key_hi == pytest.approx(4001 / 2**32)
+    # empty build keeps the documented [0, 1) whole-range default
+    e = SSTable.build(np.empty(0, np.uint32), np.empty(0, np.int32))
+    assert (e.component.key_lo, e.component.key_hi) == (0.0, 1.0)

@@ -157,9 +157,10 @@ def test_bursty_cum_entries_integral():
 
 
 def test_read_view_bloom_stack_cached_on_device():
-    """ROADMAP follow-up: the read view's stacked filter words are a
-    device array built once per view — repeated ``get_batch`` calls reuse
-    the same buffer instead of re-staging the host stack."""
+    """The read view's filter stack is a device array synced lazily on
+    the first point lookup (PR 5: scan-only workloads never build it)
+    and reused by every ``get_batch`` until the next flush/merge — no
+    per-probe host re-staging, no per-view restack."""
     import jax
 
     eng = _engine_factory()()
@@ -174,9 +175,11 @@ def test_read_view_bloom_stack_cached_on_device():
     eng.drain()
     view = eng._read_view()
     assert len(view.tables) >= 1
+    assert view.filts is None, "filter stack must be lazy (scans-only)"
+    eng.get_batch(keys[:64])                  # first point read: sync
+    view = eng._read_view()
     assert isinstance(view.filts, jax.Array)
     filts_before = view.filts
-    eng.get_batch(keys[:64])
     eng.get_batch(keys[64:128])
     assert eng._read_view().filts is filts_before
 
