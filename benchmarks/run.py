@@ -36,6 +36,7 @@ MODULES = [
     "kernels_bench",
     "ckpt_twophase",
     "serving_twophase",
+    "fleet_scaling",
     "roofline",
 ]
 

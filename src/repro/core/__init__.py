@@ -4,17 +4,20 @@ the JAX-backed storage engine)."""
 from .component import Component, FlushOp, LSMTree, MergeOp, MergeState, fresh_id
 from .constraints import (ComponentConstraint, GlobalConstraint, L0Constraint,
                           LocalConstraint, NoConstraint)
-from .metrics import LatencyRecorder, Trace, WriteTraceRecorder
+from .metrics import LatencyRecorder, Trace, WriteTraceRecorder, rollup_stats
 from .policies import (LevelingPolicy, MergePolicy, PartitionedLevelingPolicy,
                        POLICIES, SizeTieredPolicy, TieringPolicy)
 from .scheduler import (FairScheduler, GreedyScheduler, MergeScheduler,
-                        SCHEDULERS, SingleThreadedScheduler, make_scheduler)
+                        SCHEDULERS, SingleThreadedScheduler,
+                        apportion_largest_remainder, make_scheduler)
 from .sim import (ArrivalProcess, BurstyArrival, ClosedClient, ConstantArrival,
                   LSMSimulator, OpenClient, SimConfig)
 from .blsm import BLSMSimulator
 from .twophase import (EngineSystem, TwoPhaseResult, TwoPhaseSystem,
                        run_two_phase)
-from .engine import BackgroundDriver, LSMEngine
+from .engine import BackgroundDriver, LSMEngine, merge_kway_host
+from .fleet import (FleetBackgroundDriver, FleetSystem, GlobalBudgetArbiter,
+                    LSMFleet)
 from .memtable import MemTable
 from .sstable import SSTable
 
@@ -22,7 +25,7 @@ __all__ = [
     "Component", "FlushOp", "LSMTree", "MergeOp", "MergeState", "fresh_id",
     "ComponentConstraint", "GlobalConstraint", "L0Constraint",
     "LocalConstraint", "NoConstraint", "LatencyRecorder", "Trace",
-    "WriteTraceRecorder",
+    "WriteTraceRecorder", "rollup_stats", "apportion_largest_remainder",
     "LevelingPolicy", "MergePolicy", "PartitionedLevelingPolicy", "POLICIES",
     "SizeTieredPolicy", "TieringPolicy",
     "FairScheduler", "GreedyScheduler", "MergeScheduler", "SCHEDULERS",
@@ -32,4 +35,6 @@ __all__ = [
     "BLSMSimulator", "EngineSystem", "TwoPhaseResult", "TwoPhaseSystem",
     "run_two_phase",
     "BackgroundDriver", "LSMEngine", "MemTable", "SSTable",
+    "merge_kway_host", "LSMFleet", "GlobalBudgetArbiter",
+    "FleetBackgroundDriver", "FleetSystem",
 ]

@@ -87,12 +87,17 @@ not interpret``) and the packed-sort host merge otherwise — the
 interpreter is a correctness harness, not a fast path; True/False force
 a backend (differential tests force True to drive the kernel).
 
-Thread safety: ``lock()`` returns the engine's reentrant lock.  The
-engine does NOT lock internally — single-threaded callers (tests, the
-fluid-replay benchmarks) pay nothing; concurrent callers (the
-``BackgroundDriver`` pump thread vs foreground put/get/scan) must hold
-it around every engine call.  The driver takes it around ``pump``; the
-serving example takes it on the foreground path.
+Thread safety: every foreground entry point (``put``/``put_batch``,
+``get``/``get_batch``, ``scan_range``) and the background plane
+(``pump``/``drain``) takes the engine's REENTRANT lock internally, so a
+router worker thread racing a live ``BackgroundDriver`` can never
+observe a half-updated ``_order`` list or a donated filter-stack buffer
+(``scan_range`` releases the lock for the k-way merge itself — its run
+windows are immutable snapshots).  ``lock()`` still exposes the lock for
+callers needing compound atomicity (e.g. read-modify-write sequences, or
+the harnesses' multi-call invariant checks); holding it around a call
+that also locks internally costs one reentrant acquire.  Uncontended
+acquisition is ~100 ns — noise against any engine call's numpy work.
 """
 from __future__ import annotations
 
@@ -108,7 +113,7 @@ from .component import Component, LSMTree, MergeOp
 from .constraints import ComponentConstraint, NoConstraint
 from .memtable import MemTable
 from .policies import MergePolicy
-from .scheduler import MergeScheduler
+from .scheduler import MergeScheduler, apportion_largest_remainder
 from .sstable import SSTable
 
 try:  # the merge kernel needs jax; engine tests always have it
@@ -122,6 +127,28 @@ except Exception:  # pragma: no cover
 
 
 ENTRY_BYTES = 1024  # paper's 1 KB records: 1 entry == 1 KB of I/O budget
+
+
+def merge_kway_host(runs) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized host k-way newest-wins merge: pack each entry as
+    ``key << 32 | global_index`` (runs concatenated newest-first, so a
+    lower index means a newer version), one uint64 sort, then keep the
+    first entry of each equal-key group and gather only the surviving
+    values.  No per-entry Python — this is the CPU fast path the
+    interpret-mode Pallas tournament cannot be.  Module-level so the
+    fleet router's scan gather shares it (shards hold disjoint keys, so
+    for the fleet the dedup is a no-op and this is a pure merge-sort)."""
+    ks = np.concatenate([np.asarray(r[0]) for r in runs])
+    n = len(ks)
+    comp = (ks.astype(np.uint64) << np.uint64(32)) \
+        | np.arange(n, dtype=np.uint64)
+    comp.sort()
+    sk = (comp >> np.uint64(32)).astype(np.uint32)
+    first = np.ones(n, bool)
+    first[1:] = sk[1:] != sk[:-1]
+    idx = (comp[first] & np.uint64(0xFFFFFFFF)).astype(np.int64)
+    vs = np.concatenate([np.asarray(r[1]) for r in runs])
+    return sk[first], vs[idx]
 
 
 @dataclass
@@ -334,6 +361,10 @@ class LSMEngine:
     def put(self, key: int, value: int) -> bool:
         """Returns False when the write must stall (component constraint or
         no free memtable slot) — the caller decides to retry/queue."""
+        with self._rlock:
+            return self._put_locked(key, value)
+
+    def _put_locked(self, key: int, value: int) -> bool:
         self._refresh_stall()
         ok = True
         if self.stalled:
@@ -367,6 +398,10 @@ class LSMEngine:
         first."""
         keys = np.asarray(keys, np.uint32)
         values = np.asarray(values, np.int32)
+        with self._rlock:
+            return self._put_batch_locked(keys, values)
+
+    def _put_batch_locked(self, keys, values) -> int:
         n = len(keys)
         n_ok = 0
         while n_ok < n:
@@ -443,8 +478,18 @@ class LSMEngine:
         lookup over the memtables, then ONE fused Bloom probe across all
         disk tables (a (tables, keys) Pallas grid), then sorted searches
         only for surviving (table, key) pairs, newest table first with
-        early exit.  Returns (found mask, values)."""
+        early exit.  Returns (found mask, values).
+
+        Thread-safe: the whole resolution runs under ``lock()`` — the
+        memtable walk, the view snapshot, the filter-stack sync (whose
+        row writes DONATE the previous device buffer) and the per-table
+        sorted searches must all see one consistent engine state against
+        a live ``BackgroundDriver`` pump."""
         keys = np.asarray(keys, np.uint32)
+        with self._rlock:
+            return self._get_batch_locked(keys)
+
+    def _get_batch_locked(self, keys) -> tuple[np.ndarray, np.ndarray]:
         q = len(keys)
         self.stats["lookups"] += q
         found = np.zeros(q, bool)
@@ -506,8 +551,18 @@ class LSMEngine:
     def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
         """Newest-wins range scan: sorted (keys, values) arrays for
         ``lo <= key < hi``, resolved across all live runs in one k-way
-        merge (vs the seed's per-table Python dict replay)."""
-        runs = self._scan_runs(lo, hi)
+        merge (vs the seed's per-table Python dict replay).
+
+        Thread-safe: the run-window snapshot (``_scan_runs`` — the part
+        that reads ``_order`` and the live memtables) runs under
+        ``lock()``; the k-way merge itself runs OUTSIDE it, because the
+        captured windows are (copies of, or views into) immutable
+        arrays — sealed-memtable caches and SSTable host mirrors stay
+        valid and unchanged even if a concurrent merge retires their
+        tables — so a large scan never extends the pump's lock-hold
+        tail."""
+        with self._rlock:
+            runs = self._scan_runs(lo, hi)
         if not runs:
             return np.empty(0, np.uint32), np.empty(0, np.int32)
         if len(runs) == 1:
@@ -520,30 +575,24 @@ class LSMEngine:
             return np.asarray(mk), np.asarray(mv)
         return self._merge_kway_host(runs)
 
+    def scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
+                                                        np.ndarray]]:
+        """Locked snapshot of the per-run ``[lo, hi)`` windows, newest
+        first (the k-way merge's age order), merge NOT applied.  The
+        fleet router gathers these across shards into ONE flat k-way
+        merge instead of merging per shard and re-merging the gather —
+        half the sort work for a fan-out scan.  The returned windows are
+        immutable snapshots (sealed caches / host mirrors) but may alias
+        live storage: callers must not write through them."""
+        with self._rlock:
+            return self._scan_runs(lo, hi)
+
     def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
         """Dict-compat wrapper over ``scan_range`` (the seed's contract)."""
         ks, vs = self.scan_range(lo, hi)
         return dict(zip(ks.tolist(), vs.tolist()))
 
-    @staticmethod
-    def _merge_kway_host(runs) -> tuple[np.ndarray, np.ndarray]:
-        """Vectorized host k-way newest-wins merge: pack each entry as
-        ``key << 32 | global_index`` (runs concatenated newest-first, so a
-        lower index means a newer version), one uint64 sort, then keep the
-        first entry of each equal-key group and gather only the surviving
-        values.  No per-entry Python — this is the CPU fast path the
-        interpret-mode Pallas tournament cannot be."""
-        ks = np.concatenate([np.asarray(r[0]) for r in runs])
-        n = len(ks)
-        comp = (ks.astype(np.uint64) << np.uint64(32)) \
-            | np.arange(n, dtype=np.uint64)
-        comp.sort()
-        sk = (comp >> np.uint64(32)).astype(np.uint32)
-        first = np.ones(n, bool)
-        first[1:] = sk[1:] != sk[:-1]
-        idx = (comp[first] & np.uint64(0xFFFFFFFF)).astype(np.int64)
-        vs = np.concatenate([np.asarray(r[1]) for r in runs])
-        return sk[first], vs[idx]
+    _merge_kway_host = staticmethod(merge_kway_host)
 
     # ------------------------------------------------------- background I/O
     def pump(self, budget_entries: int) -> int:
@@ -559,6 +608,10 @@ class LSMEngine:
         a memtable (the seed spent the overshoot for free, which made the
         I/O budget knob a no-op for flush-bound workloads at fine
         quanta)."""
+        with self._rlock:
+            return self._pump_locked(budget_entries)
+
+    def _pump_locked(self, budget_entries: int) -> int:
         spent = 0
         self.now += 1.0
         # 0. repay flush overshoot from previous quanta
@@ -587,12 +640,9 @@ class LSMEngine:
             self._refresh_stall()
             return spent
         # 2. merges, per scheduler allocation.  Quanta are apportioned by
-        # largest remainder: flooring each share (the seed's
-        # ``int(remaining * frac)``) drops every sub-1 share, so
-        # fair-scheduled merges starve and budget silently vanishes at
-        # small quanta — instead the floored shares are topped up, largest
-        # fractional part first, until they sum to the full allocated
-        # budget (never exceeding ``remaining``).
+        # largest remainder (``scheduler.apportion_largest_remainder``,
+        # shared with the fleet's GlobalBudgetArbiter): sub-1 fair shares
+        # must not starve, and the quanta never exceed ``remaining``.
         self._collect_merges()
         ops = [rm.op for rm in self.running.values()]
         alloc = self.scheduler.allocate(ops) if ops else {}
@@ -600,15 +650,7 @@ class LSMEngine:
         shares = sorted((op_id, frac) for op_id, frac in alloc.items()
                         if frac > 0)
         if shares and remaining > 0:
-            targets = [remaining * frac for _, frac in shares]
-            quanta = [int(t) for t in targets]
-            total = min(remaining, int(round(sum(targets))))
-            leftover = total - sum(quanta)
-            order = sorted(range(len(shares)),
-                           key=lambda i: (quanta[i] - targets[i],
-                                          shares[i][0]))
-            for i in order[:leftover]:
-                quanta[i] += 1
+            quanta = apportion_largest_remainder(shares, remaining)
             for (op_id, _), quantum in zip(shares, quanta):
                 if quantum > 0:
                     spent += self._advance_merge(self.running[op_id],
@@ -635,11 +677,12 @@ class LSMEngine:
 
     def drain(self, budget_entries: int = 1 << 30, max_pumps: int = 10_000):
         """Pump until no background work remains (tests/shutdown)."""
-        for _ in range(max_pumps):
-            self._collect_merges()
-            if not self.sealed and not self.running:
-                break
-            self.pump(budget_entries)
+        with self._rlock:
+            for _ in range(max_pumps):
+                self._collect_merges()
+                if not self.sealed and not self.running:
+                    break
+                self.pump(budget_entries)
 
     def _collect_merges(self):
         for op in self.policy.collect_merges(self.tree, self.now):
@@ -859,11 +902,31 @@ class LSMEngine:
         return self._rlock
 
     def num_components(self) -> int:
-        return self.tree.num_components()
+        with self._rlock:
+            return self.tree.num_components()
 
     def total_entries(self) -> int:
-        return sum(len(t) for t in self.tables.values()) + \
-            sum(len(m) for m in self.sealed) + len(self.active)
+        with self._rlock:
+            return sum(len(t) for t in self.tables.values()) + \
+                sum(len(m) for m in self.sealed) + len(self.active)
+
+    def pending_background_entries(self) -> int:
+        """Background I/O debt in entries: outstanding flush-quantum debt,
+        sealed memtables awaiting flush, and the unconsumed inputs of
+        every running merge (plus merges the policy would start right
+        now).  This is the per-shard 'pending debt' the fleet's
+        ``GlobalBudgetArbiter`` apportions the global budget by."""
+        with self._rlock:
+            self._collect_merges()
+            pending = self._flush_debt + sum(len(m) for m in self.sealed)
+            for rm in self.running.values():
+                if rm.lens is not None:       # streaming cursor open
+                    pending += int((rm.lens - rm.cursors).sum())
+                elif rm.merged_keys is not None:   # one-shot materialized
+                    pending += len(rm.merged_keys) - rm.cursor
+                else:
+                    pending += sum(len(t) for t in rm.inputs)
+            return pending
 
 
 class BackgroundDriver:

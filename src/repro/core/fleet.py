@@ -1,0 +1,562 @@
+"""Sharded multi-engine serving plane: a key-partitioned fleet of
+``LSMEngine`` shards behind a batched router, with fleet-level merge
+arbitration under ONE global I/O budget.
+
+Routing / consistency contract
+------------------------------
+Keys are partitioned by a fixed stateless hash: shard(key) =
+``mix64(key) % n_shards`` (a multiplicative Fibonacci mix, so adjacent
+keys spread across shards even for sequential workloads).  Every version
+of a key therefore lives on exactly one shard, which gives the fleet its
+consistency contract:
+
+* **per-key ordering is guaranteed per shard, not across shards** — all
+  writes to one key land on one engine in issue order, so newest-wins
+  reads of any single key are exact; writes to DIFFERENT keys in one
+  batch may be admitted by their shards in any interleaving, and a
+  partially-stalled ``put_batch`` admits a per-shard prefix rather than
+  a global prefix — callers that must know WHICH keys landed use
+  ``put_batch_admitted`` (returns the admitted mask) and retry
+  ``keys[~mask]``; a count-based ``keys[n:]`` retry is wrong under
+  partial admission.
+* shards hold DISJOINT key sets, so the scan gather is a pure k-way
+  merge-sort (the newest-wins dedup of ``merge_kway_host`` is a no-op
+  across shards) and a fleet replay of any put/get/scan trace is
+  bit-identical to a single engine fed the same trace (pinned by
+  ``tests/test_fleet.py``).
+
+The router is fully batched: ``put_batch``/``get_batch`` scatter one
+numpy ``argsort`` bucketing pass (no per-key Python), issue ONE sub-batch
+per shard, and gather results back into caller order by inverting the
+same permutation.  ``scan_range`` fans the ``[lo, hi)`` window out to
+every shard and gathers with the existing k-way merge.  Shards are
+served by a worker-thread pool, so foreground sub-batches proceed in
+parallel across per-shard engine locks — one shard flushing under its
+lock no longer blocks the other shards' traffic (the engines lock
+internally; the fleet adds no global lock).
+
+Background plane: the paper's merge-scheduler comparison lifted one
+level.  Each shard keeps its own within-engine scheduler, but the
+fleet-wide I/O budget is split across shards each pump epoch by a
+``GlobalBudgetArbiter``:
+
+* ``fair``   — largest-remainder apportionment by pending background
+  debt (``scheduler.apportion_largest_remainder``, the same helper
+  ``LSMEngine.pump`` uses for merge quanta, so sub-1 shares never
+  starve a shard);
+* ``greedy`` — the fewest-remaining-bytes shard first (Theorem 2's
+  fewest-remaining-pages rule, applied to shards);
+* ``single`` — one shard at a time, FIFO and never preempted (the
+  strawman; unspent budget is stranded within the epoch, exactly like
+  the single-threaded merge scheduler inside one engine).
+
+``sum(shard grants) <= global budget`` holds every epoch, and no shard
+is granted beyond its debt.  ``FleetBackgroundDriver`` turns epochs into
+a wall-clock pacing thread (same deficit-carry discipline as
+``BackgroundDriver``); ``FleetSystem`` implements the ``TwoPhaseSystem``
+protocol so the paper's two-phase stall harness and the open-loop
+latency methodology run unchanged against the fleet
+(``benchmarks/fleet_scaling.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from .engine import ENTRY_BYTES, LSMEngine, merge_kway_host
+from .memtable import SENTINEL_KEY
+from .metrics import Trace, WriteTraceRecorder, rollup_stats
+from .scheduler import apportion_largest_remainder
+
+_MIX64 = np.uint64(0x9E3779B97F4A7C15)   # 2^64 / golden ratio
+
+# Per-shard work (entries) below which a pool handoff costs more than it
+# buys: submit + worker wake + result is ~0.1 ms/job, admission is ~ns
+# per entry.  Point batches run inline; scans and large pump epochs fan
+# out (their per-shard work is ms-scale numpy that releases the GIL).
+POOL_MIN_PER_SHARD = 8192
+
+
+class GlobalBudgetArbiter:
+    """Splits one fleet-wide I/O budget (entries per epoch) across shards
+    by pending background debt.  ``allocate(debts, budget)`` returns
+    per-shard integer grants with two invariants the fleet relies on
+    (and tests pin): ``sum(grants) <= budget`` and
+    ``grants[i] <= debts[i]`` for every shard."""
+
+    POLICIES = ("fair", "greedy", "single")
+
+    def __init__(self, policy: str = "fair"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown arbiter policy {policy!r}")
+        self.policy = policy
+        self._active: Optional[int] = None   # sticky shard ("single")
+        self.epochs = 0
+
+    def reset(self) -> None:
+        self._active = None
+        self.epochs = 0
+
+    def allocate(self, debts, budget: int) -> list[int]:
+        debts = [int(d) for d in debts]
+        n = len(debts)
+        grants = [0] * n
+        remaining = int(budget)
+        self.epochs += 1
+        if remaining <= 0 or n == 0:
+            return grants
+        if self.policy == "single":
+            # one shard at a time, FIFO, never preempted: the sticky
+            # shard takes what it can; leftover budget is STRANDED for
+            # this epoch (matching the single-threaded merge scheduler's
+            # within-engine behavior) — the next epoch re-picks.
+            if self._active is None or debts[self._active] == 0:
+                live = [i for i in range(n) if debts[i] > 0]
+                self._active = live[0] if live else None
+            if self._active is not None:
+                grants[self._active] = min(debts[self._active], remaining)
+            return grants
+        if self.policy == "greedy":
+            # fewest-remaining-bytes shard first (ties by shard index)
+            for i in sorted(range(n), key=lambda i: (debts[i], i)):
+                if remaining <= 0:
+                    break
+                g = min(debts[i], remaining)
+                grants[i] += g
+                remaining -= g
+            return grants
+        # fair: largest-remainder apportionment by debt, re-apportioning
+        # the leftover when a grant caps at its shard's debt.  Each round
+        # either exhausts the budget or fully satisfies a shard, so this
+        # terminates in <= n rounds.
+        while remaining > 0:
+            live = [(i, debts[i] - grants[i]) for i in range(n)
+                    if debts[i] - grants[i] > 0]
+            if not live:
+                break
+            total = float(sum(d for _, d in live))
+            shares = [(i, d / total) for i, d in live]
+            quanta = apportion_largest_remainder(shares, remaining)
+            progressed = False
+            for (i, _), q in zip(shares, quanta):
+                g = min(q, debts[i] - grants[i])
+                if g > 0:
+                    grants[i] += g
+                    remaining -= g
+                    progressed = True
+            if not progressed:
+                break
+        assert sum(grants) <= budget, "arbiter granted beyond the budget"
+        return grants
+
+
+class LSMFleet:
+    """N key-partitioned ``LSMEngine`` shards behind a batched router
+    (see module docstring for the routing/consistency contract).
+
+    ``engine_factory(shard_index)`` builds each shard; ``parallel=True``
+    serves shards from a worker-thread pool (one worker per shard) so
+    foreground sub-batches and background pump grants run concurrently
+    across engine locks.  Call ``close()`` (or use the fleet as a
+    context manager) to retire the pool."""
+
+    def __init__(self, n_shards: int,
+                 engine_factory: Callable[[int], LSMEngine],
+                 arbiter: GlobalBudgetArbiter | str = "fair",
+                 parallel: bool = True):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = int(n_shards)
+        self.engines = [engine_factory(i) for i in range(self.n_shards)]
+        self.arbiter = (GlobalBudgetArbiter(arbiter)
+                        if isinstance(arbiter, str) else arbiter)
+        self._pool: Optional[ThreadPoolExecutor] = None
+        if parallel and self.n_shards > 1:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_shards, thread_name_prefix="fleet-shard")
+        self._recorder = None
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "LSMFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- routing
+    def shard_ids(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized shard of each key: ``mix64(key) % n_shards``."""
+        h = keys.astype(np.uint64) * _MIX64
+        h ^= h >> np.uint64(32)
+        return (h % np.uint64(self.n_shards)).astype(np.int64)
+
+    def _scatter(self, keys: np.ndarray):
+        """One bucketing pass: a stable argsort by shard id.  Returns
+        ``(order, bounds)`` — ``keys[order[bounds[s]:bounds[s+1]]]`` is
+        shard ``s``'s sub-batch, in issue order (stability preserves
+        per-key write ordering within the batch)."""
+        sid = self.shard_ids(keys)
+        order = np.argsort(sid, kind="stable")
+        bounds = np.searchsorted(sid[order], np.arange(self.n_shards + 1))
+        return order, bounds
+
+    def _map(self, jobs: list[tuple[int, Callable]],
+             use_pool: bool = True) -> dict[int, object]:
+        """Run ``(shard, thunk)`` jobs — on the worker pool when present
+        and ``use_pool``, inline otherwise.  Returns {shard: result}.
+
+        Dispatch is ADAPTIVE: a pool handoff costs ~0.1 ms per job
+        (submit + wake + result), while admission costs nanoseconds per
+        entry, so callers fan out only when per-shard work amortizes the
+        handoff (``POOL_MIN_PER_SHARD``) — small point batches run inline
+        and never queue behind a pump epoch's jobs (head-of-line
+        blocking on the shared pool was the dominant open-loop tail cost
+        pre-fix; ``benchmarks/fleet_scaling.py`` pins the tail bar)."""
+        if self._pool is None or not use_pool or len(jobs) <= 1:
+            return {s: fn() for s, fn in jobs}
+        futs = {s: self._pool.submit(fn) for s, fn in jobs}
+        return {s: f.result() for s, f in futs.items()}
+
+    # ------------------------------------------------------------- write
+    def attach_write_recorder(self, recorder) -> None:
+        """Attach a fleet-level ``WriteTraceRecorder`` (or None): ONE
+        (admitted, offered) report per fleet ``put_batch``, aggregated
+        across shards.  Per-shard curves attach recorders to the shard
+        engines directly (``fleet.engines[s].attach_write_recorder``) —
+        both levels work simultaneously."""
+        self._recorder = recorder
+
+    def put_batch(self, keys, values) -> int:
+        """Scatter the batch by shard and admit each sub-batch; returns
+        the total admitted.  A reserved sentinel key anywhere rejects the
+        WHOLE batch atomically (before any shard admits), matching
+        ``MemTable.put_batch``'s all-or-nothing validation."""
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.int32)
+        n = len(keys)
+        if (keys == SENTINEL_KEY).any():
+            raise ValueError("key 2**32-1 is reserved")
+        if self.n_shards == 1:
+            n_ok = self.engines[0].put_batch(keys, values)
+        else:
+            order, bounds = self._scatter(keys)
+            jobs = []
+            for s in range(self.n_shards):
+                lo, hi = int(bounds[s]), int(bounds[s + 1])
+                if hi > lo:
+                    idx = order[lo:hi]
+                    jobs.append((s, lambda e=self.engines[s],
+                                 k=keys[idx], v=values[idx]:
+                                 e.put_batch(k, v)))
+            n_ok = sum(self._map(
+                jobs, use_pool=n >= POOL_MIN_PER_SHARD * self.n_shards
+            ).values())
+        if self._recorder is not None and n > 0:
+            self._recorder.on_puts(n_ok, n)
+        return n_ok
+
+    def put_batch_admitted(self, keys, values) -> np.ndarray:
+        """Like ``put_batch`` but returns the per-position admitted MASK.
+
+        Each shard admits a PREFIX of its scattered sub-batch (engine
+        admission is prefix-shaped), so under a partial admission the
+        fleet-wide admitted set is NOT a prefix of the caller's batch: a
+        count-based retry (``keys[n_ok:]``) re-sends keys that already
+        landed and silently drops rejected ones.  Callers that track key
+        identity retry ``keys[~mask]`` instead; the rejected remainder
+        keeps its relative order, so per-key write ordering holds across
+        retries."""
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.int32)
+        n = len(keys)
+        if (keys == SENTINEL_KEY).any():
+            raise ValueError("key 2**32-1 is reserved")
+        mask = np.zeros(n, bool)
+        if n == 0:
+            return mask
+        if self.n_shards == 1:
+            n_ok = self.engines[0].put_batch(keys, values)
+            mask[:n_ok] = True
+        else:
+            order, bounds = self._scatter(keys)
+            jobs = []
+            for s in range(self.n_shards):
+                lo, hi = int(bounds[s]), int(bounds[s + 1])
+                if hi > lo:
+                    idx = order[lo:hi]
+                    jobs.append((s, lambda e=self.engines[s],
+                                 k=keys[idx], v=values[idx]:
+                                 e.put_batch(k, v)))
+            took = self._map(
+                jobs, use_pool=n >= POOL_MIN_PER_SHARD * self.n_shards)
+            for s, n_s in took.items():
+                lo = int(bounds[s])
+                mask[order[lo:lo + n_s]] = True
+        if self._recorder is not None:
+            self._recorder.on_puts(int(mask.sum()), n)
+        return mask
+
+    # ------------------------------------------------------------- read
+    def get(self, key: int):
+        found, vals = self.get_batch(np.array([key], np.uint32))
+        return int(vals[0]) if found[0] else None
+
+    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Scatter the key batch, resolve one fused-probe ``get_batch``
+        per shard in parallel, and gather (found, values) back into
+        caller order."""
+        keys = np.asarray(keys, np.uint32)
+        q = len(keys)
+        if self.n_shards == 1:
+            return self.engines[0].get_batch(keys)
+        found = np.zeros(q, bool)
+        vals = np.zeros(q, np.int32)
+        if q == 0:
+            return found, vals
+        order, bounds = self._scatter(keys)
+        jobs = []
+        for s in range(self.n_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            if hi > lo:
+                idx = order[lo:hi]
+                jobs.append((s, lambda e=self.engines[s], k=keys[idx]:
+                             e.get_batch(k)))
+        results = self._map(
+            jobs, use_pool=q >= POOL_MIN_PER_SHARD * self.n_shards)
+        for s, (f, v) in results.items():
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            idx = order[lo:hi]
+            found[idx] = f
+            vals[idx] = v
+        return found, vals
+
+    def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Fan the ``[lo, hi)`` window out to every shard and resolve ALL
+        run windows in one flat k-way merge (``engine.scan_runs`` exposes
+        the locked snapshots).  Within a shard the snapshot is newest
+        first, so the merge's dedup order is correct; across shards keys
+        are disjoint, so concatenating the shards' run lists in any order
+        is safe and the cross-shard part of the merge is a pure
+        merge-sort.  One merge instead of N+1 (per-shard merges plus a
+        gather re-merge) — the dominant scan cost halves."""
+        jobs = [(s, lambda e=self.engines[s]: e.scan_runs(lo, hi))
+                for s in range(self.n_shards)]
+        # the window width bounds every shard's result (disjoint keys),
+        # so it is the dispatch-cost proxy: narrow scans run inline
+        results = self._map(
+            jobs,
+            use_pool=(hi - lo) >= POOL_MIN_PER_SHARD * self.n_shards)
+        runs = [r for rs in results.values() for r in rs]
+        if not runs:
+            return np.empty(0, np.uint32), np.empty(0, np.int32)
+        if len(runs) == 1:
+            # copy: windows may alias live run storage
+            return runs[0][0].copy(), runs[0][1].copy()
+        return merge_kway_host(runs)
+
+    def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
+        ks, vs = self.scan_range(lo, hi)
+        return dict(zip(ks.tolist(), vs.tolist()))
+
+    # ------------------------------------------------------------- background
+    def pending_debts(self) -> list[int]:
+        """Per-shard background I/O debt (entries) — the arbiter's input."""
+        return [e.pending_background_entries() for e in self.engines]
+
+    def pump(self, budget_entries: int) -> int:
+        """One fleet pump epoch: the arbiter splits the global budget
+        across shards by pending debt, then every granted shard pumps its
+        grant (in parallel across engine locks).  Returns total entries
+        spent; ``sum(grants) <= budget_entries`` always."""
+        grants = self.arbiter.allocate(self.pending_debts(), budget_entries)
+        jobs = [(s, lambda e=self.engines[s], g=g: e.pump(g))
+                for s, g in enumerate(grants) if g > 0]
+        return sum(self._map(
+            jobs, use_pool=max(grants, default=0) >= POOL_MIN_PER_SHARD
+        ).values())
+
+    def drain(self, budget_entries: int = 1 << 30,
+              max_pumps: int = 10_000) -> None:
+        """Pump every shard until no background work remains."""
+        jobs = [(s, lambda e=e: e.drain(budget_entries, max_pumps))
+                for s, e in enumerate(self.engines)]
+        self._map(jobs)
+
+    # ------------------------------------------------------------- info
+    @property
+    def stats(self) -> dict:
+        """Fleet-wide rollup of the per-shard engine ``stats`` counters
+        (``metrics.rollup_stats``): ``stall_events``, ``merge_touched``,
+        ``merges``, ... summed across shards."""
+        return rollup_stats([e.stats for e in self.engines])
+
+    def per_shard_stats(self) -> list[dict]:
+        return [dict(e.stats) for e in self.engines]
+
+    def num_components(self) -> int:
+        return sum(e.num_components() for e in self.engines)
+
+    def total_entries(self) -> int:
+        return sum(e.total_entries() for e in self.engines)
+
+
+class FleetBackgroundDriver:
+    """Wall-clock driver for a fleet: pumps ``fleet.pump`` epochs at
+    ``bandwidth_bytes_per_s`` TOTAL across all shards, with the same
+    monotonic deficit-carry pacing as the single-engine
+    ``BackgroundDriver`` (slow epochs are repaid by larger quanta, capped
+    at 4x pace so catch-up bursts stay bounded)."""
+
+    def __init__(self, fleet: LSMFleet, bandwidth_bytes_per_s: float,
+                 quantum_s: float = 0.01):
+        self.fleet = fleet
+        self.rate = bandwidth_bytes_per_s
+        self.quantum_s = quantum_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        t0 = time.monotonic()
+        delivered = 0.0
+        per_s = self.rate / ENTRY_BYTES
+        q_max = max(1, int(4 * per_s * self.quantum_s))
+        while not self._stop.is_set():
+            deficit = (time.monotonic() - t0) * per_s - delivered
+            quantum = min(int(deficit), q_max)
+            if quantum >= 1:
+                self.fleet.pump(quantum)
+                delivered += quantum
+            self._stop.wait(self.quantum_s)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+
+# --------------------------------------------------------------------------
+# The fleet as a TwoPhaseSystem backend
+# --------------------------------------------------------------------------
+@dataclass
+class FleetSystem:
+    """Drives an ``LSMFleet`` under the two-phase clients — the
+    ``TwoPhaseSystem`` protocol implementation for the fleet, so
+    ``run_two_phase`` and the open-loop latency methodology run unchanged
+    against N shards (the fleet-level ``WriteTraceRecorder`` sees one
+    aggregated (admitted, offered) event per batch).
+
+    Mirrors ``twophase.EngineSystem``: closed clients offer writes as
+    fast as ``write_capacity`` accrues, open clients draw arrivals from
+    the shared ``ArrivalProcess``; background I/O is paced at
+    ``bandwidth_bytes_per_s`` GLOBALLY — split across shards each epoch
+    by the fleet's arbiter — either on the wall clock
+    (``FleetBackgroundDriver``, ``realtime=True``) or by a deterministic
+    inline-epoch virtual clock."""
+
+    fleet_factory: Callable[[], LSMFleet]
+    bandwidth_bytes_per_s: float
+    mem_write_rate: float = 50_000.0
+    tick_s: float = 0.01
+    realtime: bool = False
+    seed: int = 0
+    key_space: int = 1 << 20
+    max_batch: int = 1 << 15
+    last_fleet: LSMFleet | None = None
+
+    @property
+    def write_capacity(self) -> float:
+        return self.mem_write_rate
+
+    def run(self, client, duration: float) -> Trace:
+        fleet = self.fleet_factory()
+        self.last_fleet = fleet
+        tr = Trace(duration=duration, closed_system=client.closed,
+                   n_clients=getattr(client, "n_threads", 1))
+        vt = {"t": 0.0}
+        if self.realtime:
+            t0 = time.monotonic()
+            clock = lambda: time.monotonic() - t0  # noqa: E731
+        else:
+            clock = lambda: vt["t"]                # noqa: E731
+        capacity = client.capacity if client.closed else self.mem_write_rate
+        rec = WriteTraceRecorder(tr, clock, capacity=capacity)
+        fleet.attach_write_recorder(rec)
+        rng = np.random.default_rng(self.seed)
+        pump_per_s = self.bandwidth_bytes_per_s / ENTRY_BYTES
+        driver = None
+        if self.realtime:
+            driver = FleetBackgroundDriver(fleet, self.bandwidth_bytes_per_s,
+                                           quantum_s=self.tick_s)
+            driver.start()
+
+        arrived = 0.0
+        admitted = 0
+        admit_credit = 0.0
+        pump_credit = 0.0
+        t_prev = 0.0
+        try:
+            while t_prev < duration - 1e-12:
+                if self.realtime:
+                    t = clock()
+                    if t >= duration:
+                        break
+                    t = max(t, t_prev)
+                else:
+                    t = min(t_prev + self.tick_s, duration)
+                    vt["t"] = t
+                dt = t - t_prev
+                admit_credit = min(admit_credit + capacity * dt,
+                                   max(capacity * dt, 1.0))
+                if client.closed:
+                    offer = int(min(admit_credit, self.max_batch))
+                else:
+                    arrived += client.arrivals.cum_entries(t_prev, t)
+                    rec.on_arrivals(arrived)
+                    backlog = arrived - admitted
+                    offer = int(min(backlog, admit_credit, self.max_batch))
+                if offer > 0:
+                    keys = rng.integers(0, self.key_space, offer,
+                                        dtype=np.uint32)
+                    vals = rng.integers(0, 1 << 30, offer, dtype=np.int32)
+                    n_ok = fleet.put_batch(keys, vals)
+                    admitted += n_ok
+                    admit_credit -= n_ok
+                    if client.closed and n_ok:
+                        arrived += n_ok
+                        rec.on_arrivals(arrived)
+                    if n_ok < offer:
+                        admit_credit = 0.0
+                if not self.realtime:
+                    pump_credit += pump_per_s * dt
+                    q = int(pump_credit)
+                    if q > 0:
+                        fleet.pump(q)
+                        pump_credit -= q
+                else:
+                    time.sleep(self.tick_s)
+                tr.record_components(t, fleet.num_components())
+                t_prev = t
+        finally:
+            if driver is not None:
+                driver.stop()
+            fleet.attach_write_recorder(None)
+            fleet.close()
+        rec.finish(duration)
+        tr.record_arrival(duration, arrived)
+        tr.record_components(duration, fleet.num_components())
+        tr.merges_completed = fleet.stats["merges"]
+        return tr

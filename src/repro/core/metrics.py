@@ -18,6 +18,20 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+def rollup_stats(per_shard: "list[dict] | tuple[dict, ...]") -> dict:
+    """Aggregate per-shard engine ``stats`` dicts (or any dicts of numeric
+    counters) into one fleet-wide dict: every key present in any shard is
+    summed across shards (missing keys count 0).  The fleet's
+    ``LSMFleet.stats`` property and the fleet benchmarks use this so
+    ``stall_events`` / ``merge_touched`` / admitted-offered accounting
+    reads identically per-shard and fleet-wide."""
+    out: dict = {}
+    for stats in per_shard:
+        for k, v in stats.items():
+            out[k] = out.get(k, 0) + v
+    return out
+
+
 def _invert(pts_t: np.ndarray, pts_v: np.ndarray, values: np.ndarray) -> np.ndarray:
     """Given monotone piecewise-linear (t, v) breakpoints, find t(v)."""
     idx = np.searchsorted(pts_v, values, side="left")
@@ -217,8 +231,22 @@ class WriteTraceRecorder:
         self.clock = clock
         self.capacity = float(capacity)
         self.cum = 0.0
+        self.offered = 0.0        # cumulative entries offered (admitted or
+                                  # not) — with ``cum`` (admitted), the
+                                  # pair ``rollup_stats`` aggregates for
+                                  # fleet-wide admitted/offered accounting
         self._stall_t0: float | None = None
         trace.record_capacity(0.0, self.capacity)
+
+    @property
+    def admitted(self) -> float:
+        return self.cum
+
+    def counters(self) -> dict:
+        """The recorder's cumulative counters in ``rollup_stats`` shape."""
+        return {"admitted": self.cum, "offered": self.offered,
+                "stall_intervals": len(self.trace.stalls)
+                + (1 if self._stall_t0 is not None else 0)}
 
     @property
     def stalled(self) -> bool:
@@ -237,6 +265,7 @@ class WriteTraceRecorder:
     def on_puts(self, admitted: int, offered: int) -> None:
         if offered <= 0:
             return
+        self.offered += offered
         t = self._now()
         if self._stall_t0 is not None and admitted > 0:
             # close the stall with a flat service plateau so latency

@@ -15,6 +15,34 @@ from typing import Sequence
 from .component import MergeOp
 
 
+def apportion_largest_remainder(shares: Sequence[tuple[int, float]],
+                                budget: int) -> list[int]:
+    """Split an integer ``budget`` across fractional ``shares`` by
+    largest-remainder apportionment: flooring each share (the seed's
+    ``int(budget * frac)``) drops every sub-1 share, so small fractions
+    starve and budget silently vanishes at small quanta — instead the
+    floored shares are topped up, largest fractional part first (ties by
+    id), until they sum to ``min(budget, round(sum(targets)))``.
+
+    ``shares`` is a sequence of ``(id, fraction)`` pairs (fractions sum
+    to <= 1); the returned quanta align with ``shares`` and always sum to
+    at most ``budget``.  Shared by ``LSMEngine.pump`` (merge quanta
+    within one engine) and the fleet's ``GlobalBudgetArbiter`` (shard
+    budgets across engines), so the sub-1-share starvation fix lives in
+    exactly one place."""
+    if not shares or budget <= 0:
+        return [0] * len(shares)
+    targets = [budget * frac for _, frac in shares]
+    quanta = [int(t) for t in targets]
+    total = min(budget, int(round(sum(targets))))
+    leftover = total - sum(quanta)
+    order = sorted(range(len(shares)),
+                   key=lambda i: (quanta[i] - targets[i], shares[i][0]))
+    for i in order[:leftover]:
+        quanta[i] += 1
+    return quanta
+
+
 class MergeScheduler(ABC):
     name: str = "abstract"
 

@@ -28,6 +28,11 @@ Backends.  ``run_two_phase`` takes factories of any object satisfying the
   holds the lock for O(quantum), so measured tails reflect the
   scheduler's I/O allocation, not compute cliffs the scheduler cannot
   see (``benchmarks/latency_tail.py`` quantifies the difference).
+* ``fleet.FleetSystem`` — an ``LSMFleet`` of key-partitioned shards:
+  the same client loop, but batches scatter across N engines and the
+  background budget is split fleet-wide by the ``GlobalBudgetArbiter``
+  (``benchmarks/fleet_scaling.py`` runs the harness at shard counts
+  1..8).
 
 Both backends share the client abstractions in ``sim.py``
 (``ClosedClient``/``OpenClient``/``ArrivalProcess``): the simulator

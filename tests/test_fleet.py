@@ -1,0 +1,331 @@
+"""Sharded fleet plane (ISSUE 6): router correctness, arbiter invariants,
+and the fleet-vs-single-engine differential.
+
+* An N-shard ``LSMFleet`` replaying any put/get/scan trace returns
+  BIT-IDENTICAL results to a single ``LSMEngine`` fed the same trace —
+  across the three merge policies (shards hold disjoint key sets, so the
+  scan gather is a pure merge-sort and point lookups resolve on exactly
+  one shard).
+* ``GlobalBudgetArbiter``: ``sum(shard grants) <= global budget`` every
+  epoch, no grant beyond a shard's debt, fair proportionality, greedy's
+  fewest-remaining-first order, single's FIFO stickiness.
+* ``apportion_largest_remainder`` (the helper extracted from
+  ``LSMEngine.pump``): full-budget spend, ceiling-share bound, sub-1
+  shares topped up.
+* ``FleetSystem`` runs the two-phase harness unchanged; fleet-wide stats
+  roll up per-shard counters.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.engine import LSMEngine
+from repro.core.fleet import (FleetSystem, GlobalBudgetArbiter, LSMFleet)
+from repro.core.metrics import rollup_stats
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 TieringPolicy)
+from repro.core.scheduler import (FairScheduler,
+                                  apportion_largest_remainder)
+from repro.core.twophase import run_two_phase
+
+UNIQUE = 1 << 14
+
+
+def _factory(policy: str):
+    def mk(_shard: int = 0) -> LSMEngine:
+        pol = {
+            "tiering": lambda: TieringPolicy(3, 256, UNIQUE),
+            "leveling": lambda: LevelingPolicy(3, 256, UNIQUE),
+            "partitioned": lambda: PartitionedLevelingPolicy(
+                4, 256, UNIQUE, file_entries=128, l1_capacity=512),
+        }[policy]()
+        return LSMEngine(pol, FairScheduler(), None, memtable_entries=256,
+                         num_memtables=4, unique_keys=UNIQUE,
+                         use_kernels=False)
+    return mk
+
+
+# ------------------------------------------------------- differential
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_fleet_matches_single_engine(policy, n_shards):
+    """Replay one random put/get/scan trace against a single engine and
+    an N-shard fleet: every get_batch mask/value and every scan_range
+    array must be bit-identical, mid-trace (merges in flight on both
+    sides) and after drain."""
+    seed = {"tiering": 1, "leveling": 2, "partitioned": 3}[policy]
+    rng = np.random.default_rng(seed * 10 + n_shards)
+    mk = _factory(policy)
+    eng = mk()
+    fleet = LSMFleet(n_shards, mk, arbiter="fair")
+
+    def check_reads(ctx):
+        qs = rng.integers(0, UNIQUE, 512, dtype=np.uint32)
+        f1, v1 = eng.get_batch(qs)
+        f2, v2 = fleet.get_batch(qs)
+        np.testing.assert_array_equal(f1, f2, err_msg=f"found @ {ctx}")
+        np.testing.assert_array_equal(v1[f1], v2[f2],
+                                      err_msg=f"values @ {ctx}")
+        lo = int(rng.integers(0, UNIQUE - 1024))
+        span = int(rng.integers(64, 4096))
+        k1, x1 = eng.scan_range(lo, lo + span)
+        k2, x2 = fleet.scan_range(lo, lo + span)
+        np.testing.assert_array_equal(k1, k2, err_msg=f"scan keys @ {ctx}")
+        np.testing.assert_array_equal(x1, x2, err_msg=f"scan vals @ {ctx}")
+
+    with fleet:
+        for step in range(8):
+            keys = rng.integers(0, UNIQUE, 1500, dtype=np.uint32)
+            vals = rng.integers(0, 1 << 30, 1500, dtype=np.int32)
+            done = 0
+            while done < len(keys):
+                chunk = len(keys[done:done + 256])
+                n = eng.put_batch(keys[done:done + 256],
+                                  vals[done:done + 256])
+                m = fleet.put_batch(keys[done:done + 256],
+                                    vals[done:done + 256])
+                # no constraints + per-iteration pump >= chunk: neither
+                # side stalls, so the traces stay aligned entry-for-entry
+                assert n == chunk and m == chunk, \
+                    "fleet admitted differently than the engine"
+                done += n
+                eng.pump(512)
+                fleet.pump(512)     # same GLOBAL budget, arbiter-split
+            check_reads(f"mid step {step}")
+        eng.drain()
+        fleet.drain()
+        check_reads("after drain")
+        # full-space scan: the complete stores are identical
+        k1, x1 = eng.scan_range(0, UNIQUE)
+        k2, x2 = fleet.scan_range(0, UNIQUE)
+        np.testing.assert_array_equal(k1, k2)
+        np.testing.assert_array_equal(x1, x2)
+
+
+def test_router_scatter_is_stable_and_total():
+    """Bucketing covers every key exactly once and preserves issue order
+    within a shard (per-key ordering: duplicate keys land on one shard in
+    batch order — last write wins)."""
+    fleet = LSMFleet(4, _factory("tiering"), parallel=False)
+    keys = np.array([7, 9, 7, 7, 12345, 9], np.uint32)
+    order, bounds = fleet._scatter(keys)
+    assert sorted(order.tolist()) == list(range(len(keys)))
+    assert bounds[0] == 0 and bounds[-1] == len(keys)
+    sid = fleet.shard_ids(keys)
+    for s in range(4):
+        idx = order[bounds[s]:bounds[s + 1]]
+        assert (sid[idx] == s).all()
+        # stability: original positions ascend within the shard bucket
+        assert (np.diff(idx) > 0).all() or len(idx) <= 1
+    # duplicate keys share a shard
+    assert sid[0] == sid[2] == sid[3] and sid[1] == sid[5]
+
+
+def test_fleet_put_batch_sentinel_atomic():
+    fleet = LSMFleet(2, _factory("tiering"), parallel=False)
+    keys = np.array([1, 0xFFFFFFFF, 2], np.uint32)
+    vals = np.zeros(3, np.int32)
+    with pytest.raises(ValueError):
+        fleet.put_batch(keys, vals)
+    assert fleet.stats["puts"] == 0, "sentinel batch admitted entries"
+
+
+def test_put_batch_admitted_mask_under_partial_admission():
+    """When a shard stalls, the fleet's admitted set is per-shard
+    scattered PREFIXES, not a prefix of the caller's batch — the mask
+    identifies exactly which keys landed (count-based ``keys[n:]`` retry
+    would drop rejected keys and re-send admitted ones)."""
+    def tiny(_s: int = 0) -> LSMEngine:
+        return LSMEngine(TieringPolicy(3, 256, UNIQUE), FairScheduler(),
+                         None, memtable_entries=256, num_memtables=2,
+                         unique_keys=UNIQUE, use_kernels=False)
+
+    fleet = LSMFleet(4, tiny, parallel=False)
+    rng = np.random.default_rng(5)
+    keys = rng.choice(UNIQUE, 4096, replace=False).astype(np.uint32)
+    vals = keys.astype(np.int32)
+    mask = fleet.put_batch_admitted(keys, vals)   # no pump: shards stall
+    assert 0 < mask.sum() < len(keys), "expected a partial admission"
+    # per shard, admitted positions form a prefix of that shard's
+    # sub-batch in issue order
+    sid = fleet.shard_ids(keys)
+    for s in range(4):
+        m = mask[sid == s]
+        assert m[: m.sum()].all() and not m[m.sum():].any(), \
+            f"shard {s} admitted a non-prefix"
+    fleet.drain()
+    found, got = fleet.get_batch(keys)
+    np.testing.assert_array_equal(found, mask)
+    assert (got[mask] == vals[mask]).all()
+    # mask-based retry lands every rejected key, none lost
+    rest = ~mask
+    while rest.any():
+        sel = np.flatnonzero(rest)
+        m2 = fleet.put_batch_admitted(keys[sel], vals[sel])
+        rest[sel[m2]] = False
+        fleet.pump(1024)
+    fleet.drain()
+    found, got = fleet.get_batch(keys)
+    assert found.all()
+    np.testing.assert_array_equal(got, vals)
+
+
+# ------------------------------------------------------- apportionment
+@pytest.mark.parametrize("n,budget", [(3, 2), (3, 10), (4, 1), (7, 5),
+                                      (2, 101)])
+def test_apportion_largest_remainder_exact(n, budget):
+    shares = [(i, 1.0 / n) for i in range(n)]
+    quanta = apportion_largest_remainder(shares, budget)
+    assert sum(quanta) == budget            # nothing silently vanishes
+    assert max(quanta) <= -(-budget // n)   # ceiling share
+    assert min(quanta) >= budget // n
+
+
+def test_apportion_partial_shares_capped_by_budget():
+    # fractions summing below 1 spend only their rounded total
+    quanta = apportion_largest_remainder([(0, 0.25), (1, 0.25)], 10)
+    assert sum(quanta) == 5
+    assert apportion_largest_remainder([], 10) == []
+    assert apportion_largest_remainder([(0, 1.0)], 0) == [0]
+
+
+# ------------------------------------------------------- arbiter
+@pytest.mark.parametrize("policy", GlobalBudgetArbiter.POLICIES)
+def test_arbiter_budget_and_debt_invariants(policy):
+    """Pinned invariant: every epoch, ``sum(shard budgets) <= global
+    budget`` and no shard is granted beyond its pending debt — across
+    policies, budgets, and debt shapes (including zero debt)."""
+    rng = np.random.default_rng(17)
+    arb = GlobalBudgetArbiter(policy)
+    for _ in range(200):
+        n = int(rng.integers(1, 9))
+        debts = rng.integers(0, 5000, n).tolist()
+        budget = int(rng.integers(0, 8000))
+        grants = arb.allocate(debts, budget)
+        assert sum(grants) <= budget
+        assert all(g <= d for g, d in zip(grants, debts))
+        assert all(g >= 0 for g in grants)
+        # when debt can absorb the budget, nothing is stranded (except
+        # under "single", which strands leftover past the sticky shard)
+        if policy in ("fair", "greedy") and sum(debts) >= budget:
+            assert sum(grants) == budget
+
+
+def test_arbiter_fair_is_proportional():
+    grants = GlobalBudgetArbiter("fair").allocate([100, 300, 600], 100)
+    assert grants == [10, 30, 60]
+    # sub-1 shares still make progress (largest remainder, not floor)
+    grants = GlobalBudgetArbiter("fair").allocate([1, 1, 1000], 3)
+    assert sum(grants) == 3 and grants[2] >= 1
+
+
+def test_arbiter_greedy_finishes_smallest_first():
+    grants = GlobalBudgetArbiter("greedy").allocate([500, 20, 80], 100)
+    assert grants == [0, 20, 80]
+    grants = GlobalBudgetArbiter("greedy").allocate([500, 20, 80], 60)
+    assert grants == [0, 20, 40]
+
+
+def test_arbiter_single_is_sticky_fifo():
+    arb = GlobalBudgetArbiter("single")
+    assert arb.allocate([50, 500], 30) == [30, 0]
+    # shard 0 still in debt: stays active even though shard 1 is larger
+    assert arb.allocate([20, 500], 30) == [20, 0]
+    # shard 0 drained: move to the next shard; leftover strands
+    assert arb.allocate([0, 500], 30) == [0, 30]
+
+
+def test_fleet_pump_respects_global_budget():
+    """An engine-level pin of the arbiter invariant: one fleet pump epoch
+    never spends more than the global budget, whatever the per-shard
+    debt imbalance."""
+    fleet = LSMFleet(3, _factory("tiering"), arbiter="fair",
+                     parallel=False)
+    rng = np.random.default_rng(5)
+    with fleet:
+        for _ in range(6):
+            keys = rng.integers(0, UNIQUE, 1024, dtype=np.uint32)
+            vals = rng.integers(0, 1 << 30, 1024, dtype=np.int32)
+            fleet.put_batch(keys, vals)
+            spent = fleet.pump(100)
+            assert spent <= 100, "fleet epoch overspent the global budget"
+        # drains to completion under epoch-limited budget
+        for _ in range(3000):
+            if sum(fleet.pending_debts()) == 0:
+                break
+            fleet.pump(64)
+        assert sum(fleet.pending_debts()) == 0
+
+
+# ------------------------------------------------------- stats rollup
+def test_rollup_stats_sums_counters():
+    assert rollup_stats([{"a": 1, "b": 2}, {"a": 3, "c": 4}]) == \
+        {"a": 4, "b": 2, "c": 4}
+    assert rollup_stats([]) == {}
+
+
+def test_fleet_stats_rollup_matches_shards():
+    fleet = LSMFleet(4, _factory("tiering"), parallel=False)
+    rng = np.random.default_rng(11)
+    with fleet:
+        keys = rng.integers(0, UNIQUE, 4096, dtype=np.uint32)
+        vals = rng.integers(0, 1 << 30, 4096, dtype=np.int32)
+        done = 0
+        while done < len(keys):     # retry across per-shard stalls
+            done += fleet.put_batch(keys[done:], vals[done:])
+            fleet.pump(1024)
+        fleet.drain()
+        fleet.get_batch(keys[:256])
+        shard = fleet.per_shard_stats()
+        total = fleet.stats
+        for key in ("puts", "stall_events", "merge_touched", "flushes",
+                    "merges", "lookups"):
+            assert total[key] == sum(s[key] for s in shard), key
+        assert total["puts"] == 4096
+        assert total["lookups"] == 256
+
+
+def test_fleet_write_recorder_fleet_wide_and_per_shard():
+    """The fleet recorder sees ONE aggregated (admitted, offered) event
+    per batch; per-shard recorders attached to the engines see their
+    shard's sub-batch — and the shard counters roll up to the fleet's."""
+    from repro.core.metrics import Trace, WriteTraceRecorder
+    fleet = LSMFleet(2, _factory("tiering"), parallel=False)
+    clock = lambda: 0.5  # noqa: E731
+    fleet_rec = WriteTraceRecorder(Trace(duration=1.0), clock, 1000.0)
+    shard_recs = [WriteTraceRecorder(Trace(duration=1.0), clock, 1000.0)
+                  for _ in fleet.engines]
+    fleet.attach_write_recorder(fleet_rec)
+    for e, r in zip(fleet.engines, shard_recs):
+        e.attach_write_recorder(r)
+    with fleet:
+        keys = np.arange(512, dtype=np.uint32)
+        vals = np.ones(512, np.int32)
+        n = fleet.put_batch(keys, vals)
+    assert n == 512
+    assert fleet_rec.admitted == 512 and fleet_rec.offered == 512
+    roll = rollup_stats([r.counters() for r in shard_recs])
+    assert roll["admitted"] == 512 and roll["offered"] == 512
+    assert all(r.admitted > 0 for r in shard_recs), \
+        "a shard saw no traffic — routing is degenerate"
+
+
+# ------------------------------------------------------- two-phase harness
+def test_fleet_system_runs_two_phase():
+    """The fleet conforms to TwoPhaseSystem: the paper's two-phase
+    harness runs unchanged (deterministic virtual clock, tiny sizes) and
+    produces a finite verdict."""
+    def fleet_factory():
+        return LSMFleet(2, _factory("tiering"), arbiter="fair",
+                        parallel=False)
+
+    sys_factory = lambda: FleetSystem(  # noqa: E731
+        fleet_factory=fleet_factory, bandwidth_bytes_per_s=400 * 1024,
+        mem_write_rate=2000.0, tick_s=0.05, key_space=UNIQUE)
+    res = run_two_phase(sys_factory, testing_duration=8.0,
+                        running_duration=8.0, warmup=2.0)
+    assert res.max_throughput > 0
+    assert np.isfinite(res.write_latencies[99])
+    assert res.testing.total_written > 0
+    assert res.running.total_written > 0
