@@ -1,0 +1,195 @@
+"""Durability-plane benchmark: recovery time vs WAL size, budget
+starvation during replay, the group-commit trade-off, and tombstone
+space reclamation.
+
+Recovery "time" is virtual: ``RecoverySession.run`` epochs at a fixed
+per-epoch I/O budget, the same unit the background scheduler meters.
+The key cells pin the PR-7 claims:
+
+- replaying a longer WAL takes proportionally more epochs (recovery
+  time scales with un-checkpointed log, so snapshot+truncate matters);
+- WAL replay is charged against the scheduler budget: starving the
+  budget slows recovery, it does not silently overrun;
+- larger group-commit windows buy fewer fsync epochs (throughput) at
+  the price of a wider loss window after a torn-tail crash (latency of
+  durability), the classic trade-off;
+- deleting everything and fully compacting returns physical space to
+  ~0 — tombstones are dropped at the bottom level, not retained.
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint import EngineSnapshotStore
+from repro.core import (LSMEngine, RecoverySession, WriteAheadLog,
+                        apply_torn_tail)
+from repro.core.constraints import GlobalConstraint
+from repro.core.policies import LevelingPolicy
+from repro.core.scheduler import GreedyScheduler
+
+from .common import save
+
+
+def _engine(tmp: Path, unique: int, memtable: int, tag: str,
+            wal: bool = True, **kw) -> LSMEngine:
+    w = WriteAheadLog(tmp / f"wal-{tag}") if wal else None
+    return LSMEngine(LevelingPolicy(3, memtable, unique), GreedyScheduler(),
+                     GlobalConstraint(200), memtable_entries=memtable,
+                     unique_keys=unique, use_kernels=False,
+                     scan_use_kernels=False, wal=w, **kw)
+
+
+def _feed(eng: LSMEngine, keys, vals, pump: int = 1 << 12) -> None:
+    done = 0
+    while done < len(keys):
+        done += eng.put_batch(keys[done:], vals[done:])
+        if done < len(keys):
+            eng.pump(pump)
+
+
+def _load(eng: LSMEngine, n: int, unique: int, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    for off in range(0, n, 512):
+        m = min(512, n - off)
+        _feed(eng, rng.integers(0, unique, m, dtype=np.uint32),
+              rng.integers(0, 1 << 30, m, dtype=np.int32))
+        eng.pump(256)
+
+
+def _recovery_epochs(tmp: Path, tag: str, unique: int, memtable: int,
+                     budget: int) -> int:
+    eng = _engine(tmp, unique, memtable, tag)
+    n = RecoverySession(eng).run(budget)
+    eng.close()
+    return n
+
+
+def run(quick: bool = False) -> dict:
+    unique = 2048 if quick else 8192
+    memtable = 128 if quick else 256
+    sizes = [1024, 2048, 4096] if quick else [4096, 8192, 16384, 32768]
+    budgets = [1 << 12, 1 << 10, 1 << 8]
+    groups = [16, 64, 256, 1024]
+    result: dict = {"quick": quick, "unique_keys": unique,
+                    "memtable_entries": memtable}
+
+    with tempfile.TemporaryDirectory() as td:
+        tmp = Path(td)
+
+        # -- recovery time vs WAL size (no snapshot: replay everything) -----
+        by_size = {}
+        for n in sizes:
+            eng = _engine(tmp, unique, memtable, f"size{n}")
+            _load(eng, n, unique)
+            eng.close()                       # clean fsync: WAL holds all n
+            by_size[n] = {
+                "wal_entries": n,
+                "recovery_epochs": _recovery_epochs(
+                    tmp, f"size{n}", unique, memtable, budget=1 << 10),
+            }
+        result["recovery_vs_wal_size"] = by_size
+        epochs = [by_size[n]["recovery_epochs"] for n in sizes]
+
+        # -- budget starvation: same WAL, shrinking per-epoch budget --------
+        big = sizes[-1]
+        by_budget = {b: _recovery_epochs(tmp, f"size{big}", unique,
+                                         memtable, budget=b)
+                     for b in budgets}
+        result["recovery_vs_budget"] = {
+            "wal_entries": big,
+            "epochs_by_budget": {str(b): e for b, e in by_budget.items()},
+        }
+
+        # -- snapshot + truncate shortens replay ----------------------------
+        eng = _engine(tmp, unique, memtable, "snap")
+        _load(eng, big, unique)
+        store = EngineSnapshotStore(tmp / "snapdir")
+        eng.snapshot(store)
+        _load(eng, sizes[0], unique, seed=1)  # small post-snapshot delta
+        eng.close()
+        e2 = _engine(tmp, unique, memtable, "snap")
+        snap_epochs = RecoverySession(e2, store).run(1 << 10)
+        result["recovery_with_snapshot"] = {
+            "pre_snapshot_entries": big, "post_snapshot_entries": sizes[0],
+            "recovery_epochs": snap_epochs,
+        }
+        e2.close()
+
+        # -- group-commit trade-off -----------------------------------------
+        by_group = {}
+        for g in groups:
+            eng = _engine(tmp, unique, memtable, f"g{g}",
+                          group_commit_entries=g)
+            rng = np.random.default_rng(2)
+            loss_windows = []
+            for _ in range(big // 512):
+                _feed(eng, rng.integers(0, unique, 512, dtype=np.uint32),
+                      rng.integers(0, 1 << 30, 512, dtype=np.int32),
+                      pump=1 << 30)
+                loss_windows.append(eng.wal.unsynced_entries)
+            s = eng.stats
+            by_group[g] = {
+                "wal_syncs": s["wal_syncs"],
+                "sync_budget_entries": s["wal_syncs"] * eng.wal_sync_cost
+                + s["wal_entries"],
+                "mean_loss_window_entries":
+                    float(np.mean(loss_windows)) if loss_windows else 0.0,
+                "max_loss_window_entries":
+                    int(max(loss_windows)) if loss_windows else 0,
+            }
+            # actually lose the window: torn tail eats the unsynced suffix
+            apply_torn_tail(eng.wal, 0.0)
+            by_group[g]["lost_after_crash"] = \
+                s["wal_entries"] - WriteAheadLog(tmp / f"wal-g{g}").end_lsn
+        result["group_commit"] = {str(g): c for g, c in by_group.items()}
+
+        # -- tombstone space reclamation ------------------------------------
+        eng = _engine(tmp, unique, memtable, "reclaim", wal=False)
+        keys = np.arange(min(unique, 4096), dtype=np.uint32)
+        _feed(eng, keys, np.ones(len(keys), np.int32))
+        before = eng.amplification()
+        done = 0
+        while done < len(keys):
+            done += eng.delete_batch(keys[done:])
+            eng.pump(1 << 12)
+        eng.drain()
+        eng.compact_all()
+        after = eng.amplification()
+        result["reclamation"] = {
+            "entries": len(keys),
+            "physical_before_delete": before["physical_entries"],
+            "physical_after_compact": after["physical_entries"],
+            "live_after_compact": after["live_entries"],
+            "tombstones_dropped": eng.stats["tombstones_dropped"],
+            "write_amp": after["write_amp"],
+        }
+
+    syncs = [by_group[g]["wal_syncs"] for g in groups]
+    losses = [by_group[g]["max_loss_window_entries"] for g in groups]
+    result["claims"] = {
+        "recovery_epochs_monotone_in_wal_size":
+            all(a <= b for a, b in zip(epochs, epochs[1:]))
+            and epochs[-1] > epochs[0],
+        "starved_budget_slows_recovery":
+            by_budget[budgets[0]] < by_budget[budgets[1]]
+            < by_budget[budgets[2]],
+        "snapshot_shortens_replay":
+            snap_epochs < by_size[big]["recovery_epochs"],
+        "group_commit_reduces_syncs":
+            all(a >= b for a, b in zip(syncs, syncs[1:]))
+            and syncs[0] > syncs[-1],
+        "group_commit_widens_loss_window":
+            losses[-1] > losses[0],
+        "delete_all_compact_reclaims_space":
+            after["physical_entries"] == 0 and after["live_entries"] == 0,
+    }
+    save("recovery", result)
+    return result
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(quick=True)["claims"], indent=1))

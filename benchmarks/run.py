@@ -38,6 +38,7 @@ MODULES = [
     "serving_twophase",
     "fleet_scaling",
     "roofline",
+    "recovery",
 ]
 
 

@@ -1,7 +1,8 @@
-from .store import (CheckpointManifest, LSMCheckpointStore, ShardKey,
-                    flatten_state, unflatten_state)
+from .store import (CheckpointManifest, EngineSnapshotStore,
+                    LSMCheckpointStore, ShardKey, flatten_state,
+                    unflatten_state)
 from .restore import reshard_restore, restore_state
 
-__all__ = ["CheckpointManifest", "LSMCheckpointStore", "ShardKey",
-           "flatten_state", "unflatten_state", "reshard_restore",
-           "restore_state"]
+__all__ = ["CheckpointManifest", "EngineSnapshotStore",
+           "LSMCheckpointStore", "ShardKey", "flatten_state",
+           "unflatten_state", "reshard_restore", "restore_state"]

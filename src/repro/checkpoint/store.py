@@ -257,3 +257,76 @@ class LSMCheckpointStore:
 
     def num_components(self) -> int:
         return self.tree.num_components()
+
+
+class EngineSnapshotStore:
+    """Durable snapshot of a live ``LSMEngine``'s SSTable state — the
+    checkpoint half of crash recovery (``core/wal.py`` replays the WAL
+    suffix on top).
+
+    Layout: one ``table-<stamp>-<cid>.npz`` per live SSTable (keys +
+    vals + level/stamp/created_at metadata) and a ``SNAPSHOT.json``
+    manifest committed LAST via the same write-new + rename idiom as
+    ``LSMCheckpointStore`` — a crash anywhere mid-save (the
+    ``mid-snapshot`` fault point fires between table files) leaves the
+    PREVIOUS manifest intact, so recovery always sees a consistent
+    (manifest, files) pair.  The manifest records ``flushed_lsn``: the
+    WAL replay origin that makes snapshot + suffix == full history.
+    Stale table files from aborted or superseded saves are swept on the
+    next successful ``save``."""
+
+    MANIFEST = "SNAPSHOT.json"
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def _manifest_path(self) -> Path:
+        return self.root / self.MANIFEST
+
+    def save(self, engine) -> dict:
+        """Write every live SSTable plus a manifest; atomic at the
+        manifest commit.  Call under ``engine.lock()`` (``
+        LSMEngine.snapshot`` does) with no half-open state you care
+        about — running merges are NOT captured (their inputs are, so
+        recovery simply redoes that compaction work)."""
+        tables = []
+        for t in engine._order:
+            keys, vals = t._host()
+            if len(keys) == 0:
+                continue
+            fname = f"table-{t.data_stamp:08d}-{t.component.cid}.npz"
+            np.savez(self.root / fname, keys=keys, vals=vals)
+            tables.append({"file": fname, "level": int(t.component.level),
+                           "stamp": int(t.data_stamp),
+                           "created_at": float(t.component.created_at),
+                           "entries": int(len(keys))})
+            if engine.faults is not None:
+                engine.faults.hit("mid-snapshot")
+        manifest = {"tables": tables,
+                    "flushed_lsn": int(engine.flushed_lsn),
+                    "now": float(engine.now),
+                    "stamp": int(engine._stamp)}
+        tmp = self._manifest_path().with_suffix(".tmp")
+        tmp.write_text(json.dumps(manifest, indent=1))
+        os.replace(tmp, self._manifest_path())   # atomic on POSIX
+        keep = {e["file"] for e in tables} | {self.MANIFEST}
+        for p in self.root.iterdir():            # sweep stale table files
+            if p.name not in keep and p.name.startswith("table-"):
+                p.unlink()
+        return manifest
+
+    def load(self) -> Optional[dict]:
+        """The last committed manifest, or None (no snapshot yet)."""
+        p = self._manifest_path()
+        if not p.exists():
+            return None
+        return json.loads(p.read_text())
+
+    def load_tables(self, manifest: dict):
+        """Yield ``(keys, vals, meta)`` per saved table, newest-last —
+        the iterable ``LSMEngine.restore_tables`` rebinds."""
+        for meta in manifest["tables"]:
+            with np.load(self.root / meta["file"]) as z:
+                yield (z["keys"].astype(np.uint32),
+                       z["vals"].astype(np.int32), meta)

@@ -4,7 +4,8 @@ the JAX-backed storage engine)."""
 from .component import Component, FlushOp, LSMTree, MergeOp, MergeState, fresh_id
 from .constraints import (ComponentConstraint, GlobalConstraint, L0Constraint,
                           LocalConstraint, NoConstraint)
-from .metrics import LatencyRecorder, Trace, WriteTraceRecorder, rollup_stats
+from .metrics import (LatencyRecorder, Trace, WriteTraceRecorder,
+                      amplification_stats, rollup_stats)
 from .policies import (LevelingPolicy, MergePolicy, PartitionedLevelingPolicy,
                        POLICIES, SizeTieredPolicy, TieringPolicy)
 from .scheduler import (FairScheduler, GreedyScheduler, MergeScheduler,
@@ -18,14 +19,19 @@ from .twophase import (EngineSystem, TwoPhaseResult, TwoPhaseSystem,
 from .engine import BackgroundDriver, LSMEngine, merge_kway_host
 from .fleet import (FleetBackgroundDriver, FleetSystem, GlobalBudgetArbiter,
                     LSMFleet)
-from .memtable import MemTable
+from .memtable import MemTable, TOMBSTONE, drop_tombstones
 from .sstable import SSTable
+from .wal import RecoverySession, WriteAheadLog, recover_engine
+from .faults import (CRASH_POINTS, FaultInjector, SimulatedCrash,
+                     WorkloadLog, apply_entries, apply_torn_tail,
+                     assert_reads_equal)
 
 __all__ = [
     "Component", "FlushOp", "LSMTree", "MergeOp", "MergeState", "fresh_id",
     "ComponentConstraint", "GlobalConstraint", "L0Constraint",
     "LocalConstraint", "NoConstraint", "LatencyRecorder", "Trace",
-    "WriteTraceRecorder", "rollup_stats", "apportion_largest_remainder",
+    "WriteTraceRecorder", "rollup_stats", "amplification_stats",
+    "apportion_largest_remainder",
     "LevelingPolicy", "MergePolicy", "PartitionedLevelingPolicy", "POLICIES",
     "SizeTieredPolicy", "TieringPolicy",
     "FairScheduler", "GreedyScheduler", "MergeScheduler", "SCHEDULERS",
@@ -37,4 +43,8 @@ __all__ = [
     "BackgroundDriver", "LSMEngine", "MemTable", "SSTable",
     "merge_kway_host", "LSMFleet", "GlobalBudgetArbiter",
     "FleetBackgroundDriver", "FleetSystem",
+    "TOMBSTONE", "drop_tombstones", "WriteAheadLog", "RecoverySession",
+    "recover_engine", "CRASH_POINTS", "FaultInjector", "SimulatedCrash",
+    "WorkloadLog", "apply_entries", "apply_torn_tail",
+    "assert_reads_equal",
 ]

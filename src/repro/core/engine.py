@@ -98,6 +98,39 @@ callers needing compound atomicity (e.g. read-modify-write sequences, or
 the harnesses' multi-call invariant checks); holding it around a call
 that also locks internally costs one reentrant acquire.  Uncontended
 acquisition is ~100 ns — noise against any engine call's numpy work.
+
+Durability contract (the WAL plane; ``core/wal.py``):
+
+* **With no WAL attached** (``wal=None``, the default) the engine is a
+  volatile store: a crash loses every memtable entry and every SSTable
+  not captured by an explicit snapshot — exactly the seed's behavior.
+* **With a WAL**, every admitted entry (put OR delete) is appended to
+  the log BEFORE the memtable admits it, so the admitted-write history
+  and the log agree entry-for-entry (LSN == admission index).  An
+  acknowledged write is in the OS file buffer immediately and durable
+  after the next fsync; fsyncs happen when ``group_commit_entries``
+  accumulate (group commit) and unconditionally at every ``pump`` epoch.
+  Synced WAL traffic is charged to ``_flush_debt`` — the same budget
+  flushes and merges draw from — so durability I/O competes with
+  compaction for the configured bandwidth (the paper's single-disk
+  write-budget model).
+* **Crash loss model**: everything fsynced survives; of the
+  appended-but-unsynced tail an arbitrary byte prefix survives (page
+  cache).  Recovery (``wal.RecoverySession``) restores the last
+  snapshot's SSTables (``checkpoint.EngineSnapshotStore``) and replays
+  the WAL suffix from the snapshot's ``flushed_lsn``; the recovered
+  read view answers every get/get_batch/scan_range bit-identically to
+  an uncrashed engine fed the same durable prefix (the differential
+  ``tests/test_durability.py`` pins, across policies and crash points).
+* **Tombstone lifecycle**: ``delete``/``delete_batch`` admit the
+  reserved ``TOMBSTONE`` value (int32 min, rejected on the user put
+  path) through the ordinary write path — WAL, memtable, flush, merge
+  all carry it as data, so newest-wins dedup resolves put-vs-delete
+  races for free.  The READ plane hides it: a tombstone hit reports
+  "not found" / is filtered from scans (both backends).  A merge whose
+  output nothing older overlaps (decided at open against ``_order``)
+  DROPS tombstones — reclaiming the deleted keys' space — so a full
+  compaction returns space-amp to ~1 (``compact_all``).
 """
 from __future__ import annotations
 
@@ -111,7 +144,8 @@ import numpy as np
 
 from .component import Component, LSMTree, MergeOp
 from .constraints import ComponentConstraint, NoConstraint
-from .memtable import MemTable
+from .memtable import (MemTable, SENTINEL_KEY, TOMBSTONE,
+                       drop_tombstones)
 from .policies import MergePolicy
 from .scheduler import MergeScheduler, apportion_largest_remainder
 from .sstable import SSTable
@@ -285,6 +319,7 @@ class _FilterStack:
 class _RunningMerge:
     op: MergeOp
     inputs: list[SSTable]
+    drop: bool = False         # reclaim tombstones (bottom-level merge)
     # -- streaming cursor state (opened lazily by ``_open_merge``) -----
     tables: Optional[list] = None          # inputs sorted newest-first
     run_keys: Optional[list] = None        # per-run host key mirrors
@@ -310,10 +345,19 @@ class LSMEngine:
                  unique_keys: float = 1e6, use_kernels: bool = True,
                  merge_block: int = 256, interpret: bool = True,
                  scan_use_kernels: Optional[bool] = None,
-                 streaming_merge: bool = True):
+                 streaming_merge: bool = True,
+                 wal=None, group_commit_entries: int = 512,
+                 wal_sync_cost: int = 32, faults=None):
         self.policy = policy
         self.scheduler = scheduler
         self.constraint = constraint or NoConstraint()
+        # -- durability plane (see module docstring) -------------------
+        self.wal = wal                           # WriteAheadLog | None
+        self.group_commit_entries = int(group_commit_entries)
+        self.wal_sync_cost = int(wal_sync_cost)  # fixed fsync charge
+                                                 # (entries of budget)
+        self.faults = faults                     # FaultInjector | None
+        self._lsn = wal.end_lsn if wal is not None else 0
         self.tree = LSMTree(unique_keys=unique_keys)
         self.memtable_entries = int(memtable_entries)
         self.num_memtables = int(num_memtables)
@@ -345,7 +389,17 @@ class LSMEngine:
         self._recorder = None            # optional WriteTraceRecorder
         self.stats = {"puts": 0, "stall_events": 0, "flushes": 0,
                       "merges": 0, "merge_bytes": 0, "merge_touched": 0,
-                      "lookups": 0, "bloom_skips": 0}
+                      "lookups": 0, "bloom_skips": 0,
+                      # durability / amplification counters (PR 7)
+                      "deletes": 0, "replayed": 0, "tombstones_dropped": 0,
+                      "wal_entries": 0, "wal_bytes": 0, "wal_syncs": 0,
+                      "flush_bytes": 0, "logical_bytes": 0}
+
+    # -------------------------------------------------------- fault hooks
+    def _fault(self, point: str) -> None:
+        """Hit a named crash point (no-op without an injector)."""
+        if self.faults is not None:
+            self.faults.hit(point)
 
     def attach_write_recorder(self, recorder) -> None:
         """Attach a ``metrics.WriteTraceRecorder`` (or None to detach).
@@ -361,10 +415,14 @@ class LSMEngine:
     def put(self, key: int, value: int) -> bool:
         """Returns False when the write must stall (component constraint or
         no free memtable slot) — the caller decides to retry/queue."""
+        if np.int32(value) == TOMBSTONE:
+            raise ValueError("value -2**31 is reserved (delete tombstone)")
         with self._rlock:
             return self._put_locked(key, value)
 
     def _put_locked(self, key: int, value: int) -> bool:
+        if np.uint32(key) == SENTINEL_KEY:
+            raise ValueError("key 2**32-1 is reserved")
         self._refresh_stall()
         ok = True
         if self.stalled:
@@ -379,9 +437,12 @@ class LSMEngine:
             ok = False
         else:
             if self.active.full:
-                self._seal_active()
+                self.seal_active()
+            self._wal_log(np.array([key], np.uint32),
+                          np.array([value], np.int32))
             self.active.put(key, value)
             self.stats["puts"] += 1
+            self.stats["logical_bytes"] += ENTRY_BYTES
         if self._recorder is not None:
             self._recorder.on_puts(int(ok), 1)
         return ok
@@ -398,11 +459,32 @@ class LSMEngine:
         first."""
         keys = np.asarray(keys, np.uint32)
         values = np.asarray(values, np.int32)
+        if (values == TOMBSTONE).any():
+            raise ValueError("value -2**31 is reserved (delete tombstone)")
         with self._rlock:
             return self._put_batch_locked(keys, values)
 
-    def _put_batch_locked(self, keys, values) -> int:
+    def delete(self, key: int) -> bool:
+        """Blind delete: admit a TOMBSTONE for ``key`` through the
+        ordinary write path (WAL-logged, stall-checked).  Returns False
+        when the write must stall — True says the delete was ADMITTED,
+        not that the key existed (LSM deletes never look)."""
+        return self.delete_batch(np.array([key], np.uint32)) == 1
+
+    def delete_batch(self, keys) -> int:
+        """Bulk blind deletes: ``put_batch`` semantics (admit until the
+        first stall, returns the admitted count), writing TOMBSTONE
+        values.  The markers flow through flush/merge as data and are
+        reclaimed by bottom-level merges (see module docstring)."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.full(len(keys), TOMBSTONE, np.int32)
+        with self._rlock:
+            return self._put_batch_locked(keys, vals, deletes=True)
+
+    def _put_batch_locked(self, keys, values, deletes: bool = False) -> int:
         n = len(keys)
+        if (keys == SENTINEL_KEY).any():
+            raise ValueError("key 2**32-1 is reserved")
         n_ok = 0
         while n_ok < n:
             self._refresh_stall()
@@ -416,17 +498,62 @@ class LSMEngine:
                 if len(self.sealed) >= self.num_memtables - 1:
                     self.stats["stall_events"] += 1
                     break
-                self._seal_active()
-            took = self.active.put_batch(keys[n_ok:], values[n_ok:])
+                self.seal_active()
+            # chunk size is known up front (memtable room), so the WAL
+            # frame and the memtable admission carry identical entries —
+            # the LSN == admission-index invariant recovery relies on
+            take = min(n - n_ok, self.active.capacity - len(self.active))
+            chunk_k = keys[n_ok:n_ok + take]
+            chunk_v = values[n_ok:n_ok + take]
+            self._wal_log(chunk_k, chunk_v)
+            took = self.active.put_batch(chunk_k, chunk_v)
+            assert took == take, "memtable admitted less than its room"
             n_ok += took
-            self.stats["puts"] += took
+            self.stats["deletes" if deletes else "puts"] += took
+        self.stats["logical_bytes"] += n_ok * ENTRY_BYTES
         if self._recorder is not None and n > 0:
             self._recorder.on_puts(n_ok, n)
         return n_ok
 
-    def _seal_active(self):
+    # ------------------------------------------------------------- WAL
+    def _wal_log(self, keys, vals) -> None:
+        """Append one admitted chunk as one WAL frame (the group-commit
+        unit) BEFORE memtable admission, hit the ack-unknown crash
+        point, and group-commit when enough entries accumulated."""
+        if self.wal is None:
+            self._lsn += len(keys)
+            return
+        self.wal.append(keys, vals)
+        self._lsn = self.wal.end_lsn
+        self.stats["wal_entries"] += len(keys)
+        self._fault("post-wal-pre-memtable")
+        if self.wal.unsynced_entries >= self.group_commit_entries:
+            self._wal_sync()
+
+    def _wal_sync(self) -> None:
+        """fsync the WAL and charge the synced traffic (entries plus the
+        fixed ``wal_sync_cost`` seek charge) to ``_flush_debt`` — repaid
+        from pump budget before flushes/merges, so durability I/O
+        competes with compaction for the configured bandwidth."""
+        if self.wal is None:
+            return
+        n = self.wal.unsynced_entries
+        if n <= 0:
+            return
+        self.wal.sync()
+        self._flush_debt += n + self.wal_sync_cost
+        self.stats["wal_bytes"] += n * ENTRY_BYTES
+        self.stats["wal_syncs"] += 1
+
+    def seal_active(self) -> None:
+        """Seal the active memtable (it becomes a flush candidate) and
+        open a fresh one whose ``start_lsn`` is the current WAL position
+        — the bookkeeping behind ``flushed_lsn``."""
         self.sealed.append(self.active)
         self.active = MemTable(self.memtable_entries)
+        self.active.start_lsn = self._lsn
+
+    _seal_active = seal_active        # compat alias (pre-PR7 name)
 
     def _refresh_stall(self):
         self.stalled = self.constraint.violated(self.tree)
@@ -490,45 +617,49 @@ class LSMEngine:
             return self._get_batch_locked(keys)
 
     def _get_batch_locked(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        # ``resolved`` tracks keys whose NEWEST version is known — a
+        # tombstone hit resolves the key (stop searching older runs) but
+        # must still report "not found"; the final mask strips them.
         q = len(keys)
         self.stats["lookups"] += q
-        found = np.zeros(q, bool)
+        resolved = np.zeros(q, bool)
         vals = np.zeros(q, np.int32)
         for mt in (self.active, *reversed(self.sealed)):
-            if found.all():
-                return found, vals
-            f, v = mt.get_batch(keys)
-            new = f & ~found
-            vals[new] = v[new]
-            found |= new
-        if found.all():
-            return found, vals
-        view = self._read_view()
-        if not view.tables:
-            return found, vals
-        filts, meta = self._view_filters(view)
-        if filts is not None:
-            # probe the full stack (capacity rows, <= 2x live tables);
-            # each table's row is its own stack_slot — no gather
-            probed = np.asarray(bloom_probe_multi(
-                filts, meta, keys, interpret=self.interpret))
-        else:  # pragma: no cover - kernels unavailable
-            probed = None
-        for table in view.tables:
-            pend = ~found
-            if not pend.any():
+            if resolved.all():
                 break
-            maybe_t = probed[table.stack_slot] if probed is not None \
-                else np.ones(q, bool)
-            cand = pend & maybe_t
-            self.stats["bloom_skips"] += int((pend & ~maybe_t).sum())
-            if not cand.any():
-                continue
-            idx = np.flatnonzero(cand)
-            f, v = table.search(keys[idx])
-            hit = idx[f]
-            vals[hit] = v[f]
-            found[hit] = True
+            f, v = mt.get_batch(keys)
+            new = f & ~resolved
+            vals[new] = v[new]
+            resolved |= new
+        if not resolved.all():
+            view = self._read_view()
+            if view.tables:
+                filts, meta = self._view_filters(view)
+                if filts is not None:
+                    # probe the full stack (capacity rows, <= 2x live
+                    # tables); each table's row is its own stack_slot —
+                    # no gather
+                    probed = np.asarray(bloom_probe_multi(
+                        filts, meta, keys, interpret=self.interpret))
+                else:  # pragma: no cover - kernels unavailable
+                    probed = None
+                for table in view.tables:
+                    pend = ~resolved
+                    if not pend.any():
+                        break
+                    maybe_t = probed[table.stack_slot] \
+                        if probed is not None else np.ones(q, bool)
+                    cand = pend & maybe_t
+                    self.stats["bloom_skips"] += int((pend & ~maybe_t).sum())
+                    if not cand.any():
+                        continue
+                    idx = np.flatnonzero(cand)
+                    f, v = table.search(keys[idx])
+                    hit = idx[f]
+                    vals[hit] = v[f]
+                    resolved[hit] = True
+        found = resolved & (vals != TOMBSTONE)
+        vals = np.where(found, vals, 0).astype(np.int32)
         return found, vals
 
     def _scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
@@ -567,13 +698,18 @@ class LSMEngine:
             return np.empty(0, np.uint32), np.empty(0, np.int32)
         if len(runs) == 1:
             # copy: the windows are views into live run storage (sealed
-            # caches / host mirrors), which callers must not alias
-            return runs[0][0].copy(), runs[0][1].copy()
+            # caches / host mirrors), which callers must not alias.
+            # Tombstones are filtered like any other scan result.
+            ks, vs = drop_tombstones(runs[0][0], runs[0][1])
+            return ks.copy(), vs.copy()
         if self.scan_use_kernels:
+            # the kernel fuses tombstone filtering into its compaction
+            # mask (only the newest version of a key can win)
             mk, mv = merge_dedup_kway(runs, block=self.merge_block,
-                                      interpret=self.interpret)
+                                      interpret=self.interpret,
+                                      drop_value=int(TOMBSTONE))
             return np.asarray(mk), np.asarray(mv)
-        return self._merge_kway_host(runs)
+        return drop_tombstones(*self._merge_kway_host(runs))
 
     def scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
                                                         np.ndarray]]:
@@ -614,12 +750,17 @@ class LSMEngine:
     def _pump_locked(self, budget_entries: int) -> int:
         spent = 0
         self.now += 1.0
+        # every pump is an fsync-epoch boundary: sync the WAL first so
+        # its traffic lands in _flush_debt and is repaid below, ahead of
+        # flushes/merges — durability shares the bandwidth budget
+        self._wal_sync()
         # 0. repay flush overshoot from previous quanta
         repay = min(self._flush_debt, budget_entries)
         self._flush_debt -= repay
         spent += repay
         # 1. flushes
         while self.sealed and spent < budget_entries:
+            self._fault("pre-flush")
             mt = self.sealed.pop(0)
             keys, vals = mt.seal()
             table = SSTable.build(keys, vals,
@@ -628,6 +769,7 @@ class LSMEngine:
                                   interpret=self.interpret)
             self._bind_table(table)
             self.stats["flushes"] += 1
+            self.stats["flush_bytes"] += len(keys) * ENTRY_BYTES
             cost = len(keys)
             avail = budget_entries - spent
             if cost > avail:
@@ -697,11 +839,33 @@ class LSMEngine:
         per-run cursors.  No merged output is computed here: each quantum
         merges only its own window."""
         rm.tables = sorted(rm.inputs, key=self._order_key)
+        rm.drop = self._tombstone_drop_safe(rm)
         hosts = [t._host() for t in rm.tables]
         rm.run_keys = [h[0] for h in hosts]
         rm.run_vals = [h[1] for h in hosts]
         rm.lens = np.array([len(k) for k in rm.run_keys], np.int64)
         rm.cursors = np.zeros(len(rm.tables), np.int64)
+
+    def _tombstone_drop_safe(self, rm: _RunningMerge) -> bool:
+        """May this merge reclaim tombstones?  Safe iff NO live table
+        OLDER than the merge's output overlaps its key range — then a
+        tombstone winner shadows nothing, so dropping it (and the data
+        versions it already shadowed via dedup) changes no read.  Checked
+        once at merge open against the authoritative ``_order``; tables
+        born later are NEWER than the output, so the decision cannot be
+        invalidated mid-merge."""
+        in_cids = {t.component.cid for t in rm.inputs}
+        out_key = (-max(t.data_stamp for t in rm.inputs),
+                   rm.op.output_level)
+        lo = min(t.component.key_lo for t in rm.inputs)
+        hi = max(t.component.key_hi for t in rm.inputs)
+        for t in self._order:
+            if t.component.cid in in_cids:
+                continue
+            if self._order_key(t) > out_key and \
+                    t.component.key_lo < hi and lo < t.component.key_hi:
+                return False
+        return True
 
     def _merge_cut(self, rm: _RunningMerge,
                    target: int) -> tuple[np.ndarray, int]:
@@ -762,6 +926,7 @@ class LSMEngine:
         (post-dedup) are what the budget is charged for, matching the
         paper's written-bytes accounting; heavy dedup therefore spends
         less than the allocated quantum rather than overshooting it."""
+        self._fault("mid-merge-quantum")
         if not self.streaming_merge:
             return self._advance_merge_oneshot(rm, quantum)
         if rm.tables is None:
@@ -771,11 +936,13 @@ class LSMEngine:
             return 0
         starts = rm.cursors
         stops, consumed = self._merge_cut(rm, quantum)
+        drop = int(TOMBSTONE) if rm.drop else None
         if self.use_kernels:
             mk, mv = merge_dedup_kway_window(
                 [(t.keys, t.vals) for t in rm.tables],
                 starts.tolist(), stops.tolist(),
-                block=self.merge_block, interpret=self.interpret)
+                block=self.merge_block, interpret=self.interpret,
+                drop_value=drop)
             wk, wv = np.asarray(mk), np.asarray(mv)
         else:
             runs = [(rm.run_keys[i][starts[i]:stops[i]],
@@ -786,6 +953,8 @@ class LSMEngine:
                 wk, wv = runs[0]
             else:
                 wk, wv = self._merge_kway_host(runs)
+            if rm.drop:
+                wk, wv = drop_tombstones(wk, wv)
         take = len(wk)
         assert take <= max(quantum, 1), "window emitted beyond its quantum"
         rm.cursors = stops
@@ -807,15 +976,21 @@ class LSMEngine:
         which is exactly the cliff the streaming cursor removes."""
         self.stats["merge_touched"] += sum(len(t) for t in rm.inputs)
         tables = sorted(rm.inputs, key=self._order_key)
+        rm.drop = self._tombstone_drop_safe(rm)
+        drop = int(TOMBSTONE) if rm.drop else None
         if self.use_kernels:
             mk, mv = merge_dedup_kway(
                 [(jnp.asarray(t.keys, jnp.uint32),
                   jnp.asarray(t.vals, jnp.int32)) for t in tables],
-                block=self.merge_block, interpret=self.interpret)
+                block=self.merge_block, interpret=self.interpret,
+                drop_value=drop)
             rm.merged_keys, rm.merged_vals = np.asarray(mk), np.asarray(mv)
             return
         runs = [(np.asarray(t.keys), np.asarray(t.vals)) for t in tables]
-        rm.merged_keys, rm.merged_vals = self._merge_kway_host(runs)
+        mk, mv = self._merge_kway_host(runs)
+        if rm.drop:
+            mk, mv = drop_tombstones(mk, mv)
+        rm.merged_keys, rm.merged_vals = mk, mv
 
     def _advance_merge_oneshot(self, rm: _RunningMerge, quantum: int) -> int:
         if rm.merged_keys is None:
@@ -838,6 +1013,11 @@ class LSMEngine:
         vals = np.concatenate(rm.out_vals) if rm.out_vals else \
             np.empty(0, np.int32)
         stamp = max(t.data_stamp for t in rm.inputs)
+        if rm.drop:
+            # every input tombstone died here: winners to the drop mask,
+            # shadowed ones to dedup — count the reclaimed markers
+            self.stats["tombstones_dropped"] += sum(
+                int((t._host()[1] == TOMBSTONE).sum()) for t in rm.inputs)
         # keep the policy's metadata model in sync with the real output size
         rm.op.output_size = float(len(keys))
         rm.op.written = float(len(keys))
@@ -928,6 +1108,134 @@ class LSMEngine:
                     pending += sum(len(t) for t in rm.inputs)
             return pending
 
+    # ----------------------------------------------- durability lifecycle
+    @property
+    def flushed_lsn(self) -> int:
+        """First LSN NOT yet captured in on-disk SSTables — the WAL
+        replay origin a snapshot records.  Memtables are flushed FIFO and
+        filled in LSN order, so everything below the oldest unflushed
+        memtable's ``start_lsn`` lives in SSTables."""
+        return self.sealed[0].start_lsn if self.sealed \
+            else self.active.start_lsn
+
+    def snapshot(self, store) -> dict:
+        """Persist the durable view: fsync the WAL, save every live
+        SSTable plus metadata atomically through ``store``
+        (``checkpoint.EngineSnapshotStore``), then drop WAL frames whose
+        entries are all captured by the saved tables.  Returns the
+        manifest dict."""
+        with self._rlock:
+            self._wal_sync()
+            manifest = store.save(self)
+            if self.wal is not None:
+                self.wal.truncate_upto(self.flushed_lsn)
+            return manifest
+
+    def restore_tables(self, tables, snap: dict) -> int:
+        """Rebuild the read view from a snapshot (the recovery path):
+        re-bind each saved run at its recorded (stamp, level) rank —
+        ``_order`` re-sorts once, the filter stack rebuilds lazily on the
+        first probe — and restore the clocks.  Returns the snapshot's
+        ``flushed_lsn`` (the WAL replay origin)."""
+        with self._rlock:
+            for keys, vals, meta in tables:
+                t = SSTable.build(keys, vals, level=int(meta["level"]),
+                                  created_at=float(meta["created_at"]),
+                                  interpret=self.interpret)
+                t.data_stamp = int(meta["stamp"])
+                t.component.stamp = float(meta["stamp"])
+                self.tree.add(t.component)
+                self.tables[t.component.cid] = t
+                self._order.append(t)
+            self._order.sort(key=self._order_key)
+            self._stamp = max(self._stamp, int(snap.get("stamp", 0)),
+                              max((t.data_stamp for t in self._order),
+                                  default=0))
+            self.now = max(self.now, float(snap.get("now", 0.0)))
+            self._invalidate_view()
+            return int(snap.get("flushed_lsn", 0))
+
+    def begin_replay(self, lsn: int) -> None:
+        """Position the engine at WAL offset ``lsn`` before replay: the
+        next admitted entry (via ``replay_admit``) is entry ``lsn`` of
+        the admitted-write history."""
+        with self._rlock:
+            self._lsn = int(lsn)
+            self.active.start_lsn = self._lsn
+
+    def replay_admit(self, keys, vals) -> int:
+        """Recovery-only admission: entries already durable in the WAL
+        re-enter the memtable plane WITHOUT re-logging and WITHOUT
+        constraint stalls (recovery must not deadlock on a shape
+        constraint mid-rebuild).  Callers size chunks to the active
+        memtable's room (``RecoverySession`` does)."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.asarray(vals, np.int32)
+        with self._rlock:
+            if self.active.full:
+                self.seal_active()
+            took = self.active.put_batch(keys, vals)
+            assert took == len(keys), "replay chunk exceeded memtable room"
+            self._lsn += took
+            self.stats["replayed"] += took
+            return took
+
+    def compact_all(self, budget_per_pump: int = 1 << 30) -> None:
+        """Force-merge the whole store into one bottom run: flush every
+        memtable, drain policy merges, then merge ALL live tables to the
+        deepest level in one op — no older run can overlap it, so every
+        tombstone is reclaimed.  This is the space-amp floor the
+        durability tests pin (delete-all then compact_all -> ~0 live
+        entries)."""
+        with self._rlock:
+            if len(self.active):
+                self.seal_active()
+            self.drain(budget_per_pump)
+            live = list(self._order)
+            if not live:
+                return
+            if len(live) == 1 and \
+                    int((live[0]._host()[1] == TOMBSTONE).sum()) == 0:
+                return            # already one run with nothing to drop
+            comps = [t.component for t in live]
+            op = MergeOp(inputs=comps,
+                         output_level=max(self.tree.max_level(),
+                                          max(c.level for c in comps)),
+                         output_size=float(sum(len(t) for t in live)))
+            self.running[op.op_id] = _RunningMerge(op=op, inputs=live)
+            self.drain(budget_per_pump)
+
+    def live_entries(self) -> int:
+        """Distinct keys whose newest version is NOT a tombstone — the
+        logical data size behind ``space_amp`` (an O(n) full-range
+        scan)."""
+        return int(len(self.scan_range(0, 0xFFFFFFFF)[0]))
+
+    def amplification(self) -> dict:
+        """Write/space amplification snapshot (see
+        ``metrics.amplification_stats``): bytes written by flush + merge
+        + WAL over logical bytes ingested, and physical entries stored
+        over live entries."""
+        from .metrics import amplification_stats
+        with self._rlock:
+            return amplification_stats(self.stats,
+                                       physical_entries=self.total_entries(),
+                                       live_entries=self.live_entries())
+
+    def close(self) -> None:
+        """Graceful shutdown: fsync and release the WAL (no-op without
+        one).  The engine object stays readable afterwards; only the
+        durability plane is closed."""
+        with self._rlock:
+            if self.wal is not None:
+                self.wal.close()
+
+    def __enter__(self) -> "LSMEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
 
 class BackgroundDriver:
     """Wall-clock driver: pumps an engine at ``bandwidth_bytes_per_s`` on a
@@ -984,3 +1292,19 @@ class BackgroundDriver:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+            self._thread = None
+
+    def close(self) -> None:
+        """Graceful shutdown: stop the pump thread (any in-flight quantum
+        completes under the engine lock before ``stop`` returns), then
+        close the engine's durability plane (WAL fsync).  Idempotent."""
+        self.stop()
+        self.engine.close()
+
+    def __enter__(self) -> "BackgroundDriver":
+        if self._thread is None:
+            self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

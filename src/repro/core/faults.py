@@ -1,0 +1,199 @@
+"""Fault injection for the durability plane: named crash points, torn-tail
+WAL truncation, and the crash/recover differential harness.
+
+A ``FaultInjector`` is shared by an engine (or every shard of a fleet)
+and armed at one of the ``CRASH_POINTS``; the instrumented site raises
+``SimulatedCrash`` on the armed hit.  A "crash" in this model is the
+loss of ALL in-memory state — the harness abandons the engine object
+mid-operation (whatever half-updated state it holds is garbage, exactly
+like a killed process) and keeps only what the durability plane put on
+disk: the snapshot directory and the WAL file.  ``apply_torn_tail``
+then models the page cache: everything fsynced survives; of the
+appended-but-unsynced tail, an arbitrary byte prefix survives (possibly
+cutting a frame in half — the WAL's CRC framing absorbs the cut).
+
+Crash points::
+
+    pre-flush             pump is about to build an SSTable from a
+                          sealed memtable (memtable contents are only
+                          in the WAL)
+    mid-merge-quantum     a streaming merge quantum is about to run
+                          (merge progress exists only in memory)
+    post-wal-pre-memtable a write batch is logged but not yet admitted
+                          (the classic ack-unknown window: the entry is
+                          durable though the caller never saw True)
+    mid-snapshot          between two table files of a snapshot save
+                          (the manifest is not yet committed, so
+                          recovery must use the previous snapshot)
+
+The differential contract (``tests/test_durability.py`` pins it across
+every crash point x {tiering, leveling, partitioned} x {single engine,
+2-shard fleet}): entries are logged to the WAL in admission order, so
+LSNs enumerate the admitted-write history.  After a crash at ANY point
+plus a torn tail, recovery restores a PREFIX of that history — at least
+everything synced, at most everything appended — and a reference engine
+fed exactly that prefix must answer every get/get_batch/scan_range
+identically.  ``WorkloadLog`` records the admitted history as it
+happens; ``apply_entries`` feeds a prefix to a reference store;
+``assert_reads_equal`` compares the read planes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from .memtable import TOMBSTONE
+
+CRASH_POINTS = ("pre-flush", "mid-merge-quantum", "post-wal-pre-memtable",
+                "mid-snapshot")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised at an armed crash point; carries the point name."""
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at {point!r}")
+        self.point = point
+
+
+class FaultInjector:
+    """Countdown-armed crash points.  ``arm(point, after=k)`` fires on
+    the k-th hit of ``point``; unarmed points are free (one dict probe).
+    One injector may be shared across engines (fleet shards) — whichever
+    shard hits the armed point first crashes the whole process, like
+    reality."""
+
+    def __init__(self):
+        self._armed: dict[str, int] = {}
+        self.fired: Optional[str] = None
+
+    def arm(self, point: str, after: int = 1) -> None:
+        if point not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {point!r}; "
+                             f"expected one of {CRASH_POINTS}")
+        if after < 1:
+            raise ValueError("after must be >= 1")
+        self._armed[point] = int(after)
+
+    def disarm(self) -> None:
+        self._armed.clear()
+
+    def hit(self, point: str) -> None:
+        count = self._armed.get(point)
+        if count is None:
+            return
+        if count <= 1:
+            del self._armed[point]
+            self.fired = point
+            raise SimulatedCrash(point)
+        self._armed[point] = count - 1
+
+
+def apply_torn_tail(wal, frac: float) -> int:
+    """Crash the WAL file: close its handle WITHOUT syncing, then keep
+    the synced prefix plus ``frac`` of the unsynced appended bytes
+    (``frac`` in [0, 1]; a mid-frame cut is expected — reopening
+    validates frame CRCs and drops the remainder).  Returns the surviving
+    byte length.  The ``wal`` object is dead afterwards; reopen the path
+    with a fresh ``WriteAheadLog`` to recover."""
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError("frac must be in [0, 1]")
+    wal.abort()
+    keep = wal.synced_bytes + int(round(
+        frac * (wal.written_bytes - wal.synced_bytes)))
+    os.truncate(wal.path, keep)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Differential-harness pieces (shared by tests, the example and the
+# recovery benchmark)
+# ---------------------------------------------------------------------------
+class WorkloadLog:
+    """The admitted-write history, recorded in admission (== LSN) order.
+
+    Append each admitted chunk as the engine acknowledges it; entry i of
+    the log is the write with LSN ``base + i``, so "the durable prefix
+    up to LSN L" is exactly ``log[:L - base]``.  Deletes are recorded as
+    ``TOMBSTONE`` values, matching the WAL's encoding."""
+
+    def __init__(self):
+        self._keys: list[np.ndarray] = []
+        self._vals: list[np.ndarray] = []
+        self.n = 0
+
+    def record(self, keys, vals) -> None:
+        keys = np.asarray(keys, np.uint32)
+        if len(keys) == 0:
+            return
+        self._keys.append(keys.copy())
+        self._vals.append(np.asarray(vals, np.int32).copy())
+        self.n += len(keys)
+
+    def record_deletes(self, keys) -> None:
+        keys = np.asarray(keys, np.uint32)
+        self.record(keys, np.full(len(keys), TOMBSTONE, np.int32))
+
+    def prefix(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """The first ``n`` admitted (key, value) entries."""
+        if not self._keys:
+            return np.empty(0, np.uint32), np.empty(0, np.int32)
+        ks = np.concatenate(self._keys)[:n]
+        vs = np.concatenate(self._vals)[:n]
+        return ks, vs
+
+
+def apply_entries(store, keys, vals, chunk: int = 512,
+                  pump_budget: int = 1 << 16) -> None:
+    """Feed a recorded entry sequence into an uncrashed reference store
+    (engine or fleet) in order, splitting each chunk into contiguous
+    put/delete runs (a ``TOMBSTONE`` value is a delete) and pumping
+    through admission stalls.  Order-preserving, so the reference's
+    newest-wins state matches the recorded history exactly."""
+    keys = np.asarray(keys, np.uint32)
+    vals = np.asarray(vals, np.int32)
+    pos = 0
+    while pos < len(keys):
+        end = min(pos + chunk, len(keys))
+        ck, cv = keys[pos:end], vals[pos:end]
+        tomb = cv == TOMBSTONE
+        # contiguous same-kind runs keep intra-chunk write order exact
+        cuts = np.flatnonzero(np.diff(tomb)) + 1
+        for rk, rv, rt in zip(np.split(ck, cuts), np.split(cv, cuts),
+                              np.split(tomb, cuts)):
+            done = 0
+            while done < len(rk):
+                if rt[0]:
+                    n_ok = store.delete_batch(rk[done:])
+                else:
+                    n_ok = store.put_batch(rk[done:], rv[done:])
+                done += n_ok
+                if done < len(rk):
+                    store.pump(pump_budget)
+        pos = end
+
+
+def assert_reads_equal(got, want, key_space: int, rng=None,
+                       n_windows: int = 4) -> None:
+    """Bit-identical read-plane comparison between two stores (engine or
+    fleet): full-universe ``get_batch``, full-range ``scan_range``, and
+    a few random sub-range scans."""
+    qs = np.arange(key_space, dtype=np.uint32)
+    gf, gv = got.get_batch(qs)
+    wf, wv = want.get_batch(qs)
+    assert np.array_equal(gf, wf), "found masks diverge"
+    assert np.array_equal(gv[gf], wv[wf]), "values diverge"
+    gk, gvv = got.scan_range(0, key_space)
+    wk, wvv = want.scan_range(0, key_space)
+    assert np.array_equal(gk, wk), "scan keys diverge"
+    assert np.array_equal(gvv, wvv), "scan values diverge"
+    rng = rng or np.random.default_rng(0)
+    for _ in range(n_windows):
+        lo = int(rng.integers(0, key_space))
+        hi = int(rng.integers(lo, key_space)) + 1
+        gk, gvv = got.scan_range(lo, hi)
+        wk, wvv = want.scan_range(lo, hi)
+        assert np.array_equal(gk, wk) and np.array_equal(gvv, wvv), \
+            f"window scan [{lo},{hi}) diverges"

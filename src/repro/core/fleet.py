@@ -69,8 +69,9 @@ from typing import Callable, Optional
 import numpy as np
 
 from .engine import ENTRY_BYTES, LSMEngine, merge_kway_host
-from .memtable import SENTINEL_KEY
-from .metrics import Trace, WriteTraceRecorder, rollup_stats
+from .memtable import SENTINEL_KEY, drop_tombstones
+from .metrics import (Trace, WriteTraceRecorder, amplification_stats,
+                      rollup_stats)
 from .scheduler import apportion_largest_remainder
 
 _MIX64 = np.uint64(0x9E3779B97F4A7C15)   # 2^64 / golden ratio
@@ -183,9 +184,13 @@ class LSMFleet:
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
+        """Graceful shutdown: retire the worker pool, then close every
+        shard engine (fsyncs per-shard WALs).  Idempotent."""
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        for e in self.engines:
+            e.close()
 
     def __enter__(self) -> "LSMFleet":
         return self
@@ -306,6 +311,37 @@ class LSMFleet:
             self._recorder.on_puts(int(mask.sum()), n)
         return mask
 
+    def delete(self, key: int) -> bool:
+        """Blind single-key delete (see ``LSMEngine.delete``)."""
+        return self.delete_batch(np.array([key], np.uint32)) == 1
+
+    def delete_batch(self, keys) -> int:
+        """Scatter blind deletes by shard — ``put_batch`` semantics with
+        TOMBSTONE values (each shard admits a prefix of its sub-batch;
+        returns total admitted).  Per-key ordering vs puts holds because
+        every version of a key routes to the same shard."""
+        keys = np.asarray(keys, np.uint32)
+        n = len(keys)
+        if (keys == SENTINEL_KEY).any():
+            raise ValueError("key 2**32-1 is reserved")
+        if self.n_shards == 1:
+            n_ok = self.engines[0].delete_batch(keys)
+        else:
+            order, bounds = self._scatter(keys)
+            jobs = []
+            for s in range(self.n_shards):
+                lo, hi = int(bounds[s]), int(bounds[s + 1])
+                if hi > lo:
+                    idx = order[lo:hi]
+                    jobs.append((s, lambda e=self.engines[s], k=keys[idx]:
+                                 e.delete_batch(k)))
+            n_ok = sum(self._map(
+                jobs, use_pool=n >= POOL_MIN_PER_SHARD * self.n_shards
+            ).values())
+        if self._recorder is not None and n > 0:
+            self._recorder.on_puts(n_ok, n)
+        return n_ok
+
     # ------------------------------------------------------------- read
     def get(self, key: int):
         found, vals = self.get_batch(np.array([key], np.uint32))
@@ -360,9 +396,12 @@ class LSMFleet:
         if not runs:
             return np.empty(0, np.uint32), np.empty(0, np.int32)
         if len(runs) == 1:
-            # copy: windows may alias live run storage
-            return runs[0][0].copy(), runs[0][1].copy()
-        return merge_kway_host(runs)
+            # copy: windows may alias live run storage.  Raw run windows
+            # still carry tombstones (the per-shard scan filter runs
+            # post-merge); filter here like the engine's scan plane.
+            ks, vs = drop_tombstones(runs[0][0], runs[0][1])
+            return ks.copy(), vs.copy()
+        return drop_tombstones(*merge_kway_host(runs))
 
     def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
         ks, vs = self.scan_range(lo, hi)
@@ -392,6 +431,47 @@ class LSMFleet:
                 for s, e in enumerate(self.engines)]
         self._map(jobs)
 
+    # ------------------------------------------------------------- durability
+    def snapshot(self, stores) -> list[dict]:
+        """Per-shard snapshots: ``stores`` is one
+        ``EngineSnapshotStore`` per shard (each shard fsyncs its WAL,
+        saves its tables, and truncates its replayed prefix).  Returns
+        the per-shard manifests."""
+        jobs = [(s, lambda e=e, st=st: e.snapshot(st))
+                for s, (e, st) in enumerate(zip(self.engines, stores))]
+        res = self._map(jobs)
+        return [res[s] for s in sorted(res)]
+
+    def recover(self, stores, budget_per_epoch: int = 1 << 30,
+                max_epochs: int = 1_000_000) -> int:
+        """Fleet crash recovery under the GLOBAL budget: one
+        ``wal.RecoverySession`` per shard; each epoch the arbiter splits
+        ``budget_per_epoch`` across shards by remaining replay debt
+        (WAL entries left plus replay-induced background work) — the
+        same arbitration normal background I/O runs under, so recovery
+        bandwidth competes fleet-wide exactly like merges do.  Returns
+        the epoch count (virtual recovery time)."""
+        from .wal import RecoverySession
+        sessions = [RecoverySession(e, st)
+                    for e, st in zip(self.engines, stores)]
+        epochs = 0
+        for _ in range(max_epochs):
+            if all(s.done for s in sessions):
+                return epochs
+            epochs += 1
+            debts = [0 if s.done
+                     else s.remaining + s.engine.pending_background_entries()
+                     for s in sessions]
+            grants = self.arbiter.allocate(debts, budget_per_epoch)
+            jobs = [(i, lambda s=sessions[i], g=g: s.advance(g))
+                    for i, g in enumerate(grants)
+                    if g > 0 and not sessions[i].done]
+            progressed = sum(self._map(jobs).values()) if jobs else 0
+            if progressed <= 0:
+                raise RuntimeError("fleet recovery stalled: budget too "
+                                   "small to make progress")
+        raise RuntimeError("fleet recovery exceeded max_epochs")
+
     # ------------------------------------------------------------- info
     @property
     def stats(self) -> dict:
@@ -408,6 +488,19 @@ class LSMFleet:
 
     def total_entries(self) -> int:
         return sum(e.total_entries() for e in self.engines)
+
+    def live_entries(self) -> int:
+        """Fleet-wide live entries: shards hold disjoint keys, so the
+        per-shard counts sum exactly."""
+        return sum(e.live_entries() for e in self.engines)
+
+    def amplification(self) -> dict:
+        """Fleet-wide write/space amplification
+        (``metrics.amplification_stats`` over the rolled-up counters —
+        the fleet surface of the satellite accounting fix)."""
+        return amplification_stats(self.stats,
+                                   physical_entries=self.total_entries(),
+                                   live_entries=self.live_entries())
 
 
 class FleetBackgroundDriver:
@@ -446,6 +539,22 @@ class FleetBackgroundDriver:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+            self._thread = None
+
+    def close(self) -> None:
+        """Graceful shutdown: stop the pacing thread (in-flight epoch
+        completes), then close the fleet (pool + per-shard WAL fsync).
+        Idempotent."""
+        self.stop()
+        self.fleet.close()
+
+    def __enter__(self) -> "FleetBackgroundDriver":
+        if self._thread is None:
+            self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 # --------------------------------------------------------------------------

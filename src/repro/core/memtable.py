@@ -5,12 +5,33 @@ amortized role here); sealing sorts once and deduplicates newest-wins,
 producing the sorted run a flush turns into an SSTable.  Keys are uint32
 (key == 2**32-1 is reserved as the merge kernel's sentinel), values are
 int32 payload handles.
+
+Deletes are TOMBSTONES: an entry whose value is the reserved
+``TOMBSTONE`` sentinel (int32 min, rejected on the user put path) is a
+delete marker.  It flows through seal/flush/merge as ordinary data —
+newest-wins dedup resolves put-vs-delete races for free — and only the
+READ plane (engine get/scan) and the bottom-level merge drop it.  The
+memtable itself is tombstone-agnostic: ``get``/``get_batch``/
+``scan_range`` return tombstoned entries like any other so the engine's
+newest-first resolution can distinguish "deleted here" (stop searching
+older runs) from "not present" (keep searching).
 """
 from __future__ import annotations
 
 import numpy as np
 
 SENTINEL_KEY = np.uint32(0xFFFFFFFF)
+TOMBSTONE = np.int32(-2**31)       # reserved value: a delete marker
+
+
+def drop_tombstones(keys: np.ndarray,
+                    vals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Filter delete markers out of a merged run — the read plane's last
+    step (scans) and the bottom-level merge's reclamation step share it."""
+    live = vals != TOMBSTONE
+    if live.all():
+        return keys, vals
+    return keys[live], vals[live]
 
 
 def sorted_lookup(sk: np.ndarray, sv: np.ndarray,
@@ -42,6 +63,10 @@ class MemTable:
         self._keys = np.empty(self.capacity, np.uint32)
         self._vals = np.empty(self.capacity, np.int32)
         self._n = 0
+        self.start_lsn = 0             # WAL LSN of this memtable's first
+                                       # entry (set by the engine; the
+                                       # oldest unflushed memtable's
+                                       # start_lsn is the replay origin)
         # sorted newest-wins view, cached between writes (sealed
         # memtables are immutable, so theirs is computed exactly once)
         self._sealed: tuple[np.ndarray, np.ndarray] | None = None

@@ -32,6 +32,35 @@ def rollup_stats(per_shard: "list[dict] | tuple[dict, ...]") -> dict:
     return out
 
 
+def amplification_stats(stats: dict, physical_entries: int | None = None,
+                        live_entries: int | None = None) -> dict:
+    """Write/space amplification from an engine (or rolled-up fleet)
+    ``stats`` dict — the LSM survey's two cost axes, computable now that
+    entries can die (PR 7).
+
+    ``write_amp`` = bytes physically written (flush + merge + WAL) per
+    logical byte ingested (puts AND deletes — a tombstone is a write).
+    ``space_amp`` = physical entries stored (every version, every run)
+    per LIVE entry (distinct keys whose newest version is not a
+    tombstone); pass ``physical_entries``/``live_entries`` from the
+    store (``LSMEngine.amplification`` / ``LSMFleet.amplification`` do)
+    — with them omitted only ``write_amp`` is reported.  A fully
+    deleted, fully compacted store has ``physical_entries ~ 0``, which
+    the durability tests pin."""
+    logical = float(stats.get("logical_bytes", 0))
+    written = float(stats.get("flush_bytes", 0)
+                    + stats.get("merge_bytes", 0)
+                    + stats.get("wal_bytes", 0))
+    out = {"logical_bytes": logical, "bytes_written": written,
+           "write_amp": written / logical if logical > 0 else 0.0}
+    if physical_entries is not None:
+        live = int(live_entries or 0)
+        out["physical_entries"] = int(physical_entries)
+        out["live_entries"] = live
+        out["space_amp"] = float(physical_entries) / max(live, 1)
+    return out
+
+
 def _invert(pts_t: np.ndarray, pts_v: np.ndarray, values: np.ndarray) -> np.ndarray:
     """Given monotone piecewise-linear (t, v) breakpoints, find t(v)."""
     idx = np.searchsorted(pts_v, values, side="left")

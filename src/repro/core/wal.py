@@ -1,0 +1,309 @@
+"""Write-ahead log + crash recovery for the real engine (the durability
+plane).
+
+The WAL is a single append-only file of CRC-framed record batches.  One
+``append`` call writes one frame — the group-commit unit: the engine
+appends each admitted ``put_batch`` chunk as one frame BEFORE the
+memtable admits it, so every acknowledged write is in the OS file
+buffer, and is durable once ``sync`` (fsync) runs.  Group commit is the
+engine's knob (``group_commit_entries``): syncs happen when enough
+entries accumulate, and unconditionally at every ``pump`` epoch — the
+fsync-epoch boundary — with the synced bytes charged against the
+scheduler's I/O budget, so WAL traffic competes with flushes and merges
+for the same bandwidth (the paper's single-SSD write-budget model;
+commit-path batching trades durability latency against that budget,
+exactly the interaction Luo & Carey's ingestion study measures).
+
+Frame layout (little-endian)::
+
+    u32 magic | u32 n_entries | u64 base_lsn | u32 crc32(payload)
+    payload: n_entries * (u32 key, i32 val)
+
+LSNs number logical entries from the log's creation, monotonically,
+across truncations.  Tombstones need no flag: a record whose value is
+the reserved ``TOMBSTONE`` sentinel IS the delete (the same encoding
+the memtable/SSTable/merge planes carry).
+
+Crash semantics: on open, the file is scanned frame-by-frame; the first
+frame with a bad magic, an impossible length, a CRC mismatch, or a
+non-contiguous ``base_lsn`` ends the valid prefix, and the file is
+truncated there — a torn tail (a crash mid-write, or the fault
+harness's deliberate mid-frame cut) silently costs the entries past the
+last complete frame, never correctness.  Everything fsynced before the
+crash is always inside the valid prefix; unsynced-but-buffered frames
+may or may not survive (page-cache reality, modeled by
+``faults.apply_torn_tail``).
+
+Recovery (``RecoverySession``) restores the snapshot's SSTables (see
+``checkpoint.store.EngineSnapshotStore``), then replays the WAL suffix
+from the snapshot's ``flushed_lsn`` into fresh memtables in LSN order —
+admission without re-logging and without constraint stalls.  Replay is
+BUDGETED: each replayed entry charges one entry of read I/O and
+replay-induced flushes/merges run through ``engine.pump`` on the same
+budget, so a starved bandwidth budget slows recovery measurably
+(``benchmarks/recovery.py`` pins this).  The recovered engine's read
+view is bit-identical to the pre-crash durable state: ``_order`` is
+rebuilt at its ``(-data_stamp, level)`` ranks and the Bloom filter
+stack rebuilds lazily on the first probe.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from .memtable import TOMBSTONE  # noqa: F401  (re-export: the WAL's delete encoding)
+
+WAL_MAGIC = 0x57414C31            # "WAL1"
+_HEADER = struct.Struct("<IIQI")  # magic, n_entries, base_lsn, crc32
+REC_DTYPE = np.dtype([("key", "<u4"), ("val", "<i4")])
+
+
+class WriteAheadLog:
+    """Append-only CRC-framed record log with an explicit durability
+    boundary.
+
+    ``append`` writes one frame into the OS file (flushed, not fsynced);
+    ``sync`` fsyncs and advances the durable boundary
+    (``synced_bytes``/``synced_lsn``).  Opening an existing path scans
+    and validates the frames, truncates any torn tail, and positions
+    appends after the last valid frame; everything on disk at open is
+    treated as durable (it survived the crash by definition)."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = Path(path)
+        self._frames: list[tuple[int, np.ndarray]] = []  # (base_lsn, recs)
+        self.start_lsn = 0            # first LSN still present in the file
+        self.end_lsn = 0              # next LSN to be appended
+        valid = 0
+        if self.path.exists():
+            valid = self._scan()
+            if self.path.stat().st_size > valid:
+                os.truncate(self.path, valid)       # drop the torn tail
+        self._f = open(self.path, "ab")
+        self.written_bytes = valid    # bytes in the OS file
+        self.synced_bytes = valid     # bytes known durable (fsynced)
+        self.synced_lsn = self.end_lsn
+        self.syncs = 0
+
+    # ------------------------------------------------------------- scanning
+    def _scan(self) -> int:
+        """Validate frames from the start; populate ``_frames`` and the
+        LSN bounds.  Returns the byte length of the valid prefix."""
+        data = self.path.read_bytes()
+        off = 0
+        first = True
+        while off + _HEADER.size <= len(data):
+            magic, n, base, crc = _HEADER.unpack_from(data, off)
+            end = off + _HEADER.size + n * REC_DTYPE.itemsize
+            if magic != WAL_MAGIC or n == 0 or end > len(data):
+                break
+            payload = data[off + _HEADER.size:end]
+            if zlib.crc32(payload) != crc:
+                break
+            if first:
+                self.start_lsn = base
+                self.end_lsn = base
+                first = False
+            elif base != self.end_lsn:
+                break                                  # non-contiguous
+            recs = np.frombuffer(payload, REC_DTYPE)
+            self._frames.append((base, recs))
+            self.end_lsn = base + n
+            off = end
+        if first:
+            self.start_lsn = self.end_lsn = 0
+        return off
+
+    # ------------------------------------------------------------- writing
+    def append(self, keys, vals) -> int:
+        """Write one frame (the group-commit unit) into the OS file
+        buffer; returns the frame's base LSN.  NOT yet durable — durable
+        after the next ``sync``."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.asarray(vals, np.int32)
+        n = len(keys)
+        if n == 0:
+            return self.end_lsn
+        recs = np.empty(n, REC_DTYPE)
+        recs["key"] = keys
+        recs["val"] = vals
+        payload = recs.tobytes()
+        base = self.end_lsn
+        self._f.write(_HEADER.pack(WAL_MAGIC, n, base, zlib.crc32(payload)))
+        self._f.write(payload)
+        self._f.flush()                       # to the OS, not to disk
+        self._frames.append((base, recs))
+        self.end_lsn = base + n
+        self.written_bytes += _HEADER.size + len(payload)
+        return base
+
+    def sync(self) -> int:
+        """fsync: advance the durability boundary over everything
+        appended so far.  Returns the bytes made durable by this call
+        (0 when already clean)."""
+        delta = self.written_bytes - self.synced_bytes
+        if delta > 0:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self.synced_bytes = self.written_bytes
+            self.synced_lsn = self.end_lsn
+            self.syncs += 1
+        return delta
+
+    @property
+    def unsynced_entries(self) -> int:
+        return self.end_lsn - self.synced_lsn
+
+    @property
+    def entries(self) -> int:
+        """Logical entries currently in the log (post-truncation)."""
+        return self.end_lsn - self.start_lsn
+
+    # ------------------------------------------------------------- reading
+    def entries_since(self, lsn: int) -> tuple[np.ndarray, np.ndarray]:
+        """All (keys, vals) with LSN >= ``lsn``, concatenated in LSN
+        order — the replay suffix recovery feeds back through the
+        memtable plane."""
+        ks, vs = [], []
+        for base, recs in self._frames:
+            if base + len(recs) <= lsn:
+                continue
+            sl = recs[max(0, lsn - base):]
+            ks.append(sl["key"])
+            vs.append(sl["val"])
+        if not ks:
+            return np.empty(0, np.uint32), np.empty(0, np.int32)
+        return (np.concatenate(ks).astype(np.uint32),
+                np.concatenate(vs).astype(np.int32))
+
+    # ---------------------------------------------------------- truncation
+    def truncate_upto(self, lsn: int) -> None:
+        """Drop whole frames whose entries all precede ``lsn`` (snapshot
+        compaction: those entries are captured in durable SSTables).
+        Frame-granular: a frame straddling ``lsn`` is kept whole and
+        replay skips its already-flushed prefix.  Atomic: the survivors
+        are rewritten to a temp file that replaces the log."""
+        keep = [(b, r) for b, r in self._frames if b + len(r) > lsn]
+        if len(keep) == len(self._frames):
+            return
+        tmp = self.path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            for base, recs in keep:
+                payload = recs.tobytes()
+                f.write(_HEADER.pack(WAL_MAGIC, len(recs), base,
+                                     zlib.crc32(payload)))
+                f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)
+        self._f = open(self.path, "ab")
+        self._frames = keep
+        self.start_lsn = keep[0][0] if keep else self.end_lsn
+        self.written_bytes = self.path.stat().st_size
+        self.synced_bytes = self.written_bytes
+        self.synced_lsn = self.end_lsn
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        """Durable close: sync, then release the handle."""
+        if not self._f.closed:
+            self.sync()
+            self._f.close()
+
+    def abort(self) -> None:
+        """Crash-style close: release the handle WITHOUT syncing (the
+        fault harness uses this before applying a torn tail)."""
+        if not self._f.closed:
+            self._f.close()
+
+
+class RecoverySession:
+    """Budgeted crash recovery: snapshot restore + WAL replay.
+
+    Construct with a FRESH engine (same configuration as the crashed
+    one, its reopened ``WriteAheadLog`` attached).  Construction
+    restores the snapshot's SSTables into the read view and stages the
+    WAL suffix from the snapshot's ``flushed_lsn``; ``advance(budget)``
+    then replays up to ``budget`` entries of I/O — each replayed entry
+    charges one entry (the WAL read), and replay-induced flushes/merges
+    run through ``engine.pump`` against the same budget, so recovery
+    speed is bandwidth-bound end to end.  ``run(budget)`` loops to
+    completion and returns the epoch count (the virtual recovery time
+    at that bandwidth)."""
+
+    def __init__(self, engine, store=None):
+        self.engine = engine
+        base = 0
+        with engine.lock():
+            snap = store.load() if store is not None else None
+            if snap is not None:
+                base = engine.restore_tables(store.load_tables(snap), snap)
+            if engine.wal is not None:
+                base = max(base, engine.wal.start_lsn)
+                self.keys, self.vals = engine.wal.entries_since(base)
+            else:
+                self.keys = np.empty(0, np.uint32)
+                self.vals = np.empty(0, np.int32)
+            engine.begin_replay(base)
+        self.pos = 0
+        self.epochs = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.keys) - self.pos
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.keys)
+
+    def advance(self, budget_entries: int) -> int:
+        """One recovery epoch: replay/pump up to ``budget_entries`` of
+        I/O.  Returns entries of budget actually spent."""
+        eng = self.engine
+        spent = 0
+        self.epochs += 1
+        with eng.lock():
+            while spent < int(budget_entries) and self.pos < len(self.keys):
+                if eng.active.full and \
+                        len(eng.sealed) >= eng.num_memtables - 1:
+                    done = eng.pump(int(budget_entries) - spent)
+                    spent += done
+                    if done <= 0:       # budget too small to flush: stop
+                        break
+                    continue
+                if eng.active.full:
+                    eng.seal_active()
+                room = eng.active.capacity - len(eng.active)
+                take = min(room, int(budget_entries) - spent,
+                           len(self.keys) - self.pos)
+                if take <= 0:
+                    break
+                eng.replay_admit(self.keys[self.pos:self.pos + take],
+                                 self.vals[self.pos:self.pos + take])
+                self.pos += take
+                spent += take
+        return spent
+
+    def run(self, budget_per_epoch: int, max_epochs: int = 1_000_000) -> int:
+        """Replay to completion at a fixed per-epoch budget; returns the
+        number of epochs taken (recovery time in budget quanta)."""
+        for _ in range(max_epochs):
+            if self.done:
+                return self.epochs
+            if self.advance(budget_per_epoch) <= 0 and not self.done:
+                raise RuntimeError("recovery stalled: budget too small "
+                                   "to make progress")
+        raise RuntimeError("recovery exceeded max_epochs")
+
+
+def recover_engine(engine, store=None,
+                   budget_per_epoch: int = 1 << 30) -> int:
+    """One-call recovery: replay the engine's WAL (plus ``store``'s
+    snapshot, when given) to completion.  Returns the epoch count."""
+    return RecoverySession(engine, store).run(budget_per_epoch)

@@ -119,7 +119,8 @@ def merge_sorted_age(keys_a, vals_a, age_a, keys_b, vals_b, age_b,
 
 
 def merge_dedup_kway_window(runs, starts, stops, block: int = 256,
-                            interpret: bool = True):
+                            interpret: bool = True,
+                            drop_value: int | None = None):
     """Streaming-quantum (block-stepped) variant of ``merge_dedup_kway``:
     merge only the ``[starts[i], stops[i])`` window of each run.
 
@@ -136,10 +137,12 @@ def merge_dedup_kway_window(runs, starts, stops, block: int = 256,
     """
     windows = [(k[s:e], v[s:e])
                for (k, v), s, e in zip(runs, starts, stops)]
-    return merge_dedup_kway(windows, block=block, interpret=interpret)
+    return merge_dedup_kway(windows, block=block, interpret=interpret,
+                            drop_value=drop_value)
 
 
-def merge_dedup_kway(runs, block: int = 256, interpret: bool = True):
+def merge_dedup_kway(runs, block: int = 256, interpret: bool = True,
+                     drop_value: int | None = None):
     """K-way newest-wins merge of sorted unique runs (NEWEST run first).
 
     A balanced tournament reduction over the age-carrying pairwise
@@ -150,6 +153,13 @@ def merge_dedup_kway(runs, block: int = 256, interpret: bool = True):
     until ONE final compaction pass masks every non-first element of each
     equal-key group.  O(n log k) merged entries vs O(n*k) for the
     sequential pairwise fold.
+
+    ``drop_value`` fuses tombstone reclamation into the compaction mask:
+    an equal-key group whose NEWEST (winning) version carries this value
+    is dropped entirely — the read plane passes the engine's tombstone
+    sentinel here for scans, and bottom-level merges pass it to reclaim
+    deleted keys (older shadowed versions fall to the dedup mask
+    regardless, so only the winner's value needs testing).
 
     Returns compacted (keys, vals) jnp arrays, sorted ascending.
     """
@@ -179,4 +189,6 @@ def merge_dedup_kway(runs, block: int = 256, interpret: bool = True):
     # single compaction pass: runs are (key, age)-sorted, so the first
     # element of each equal-key group is the newest version
     first = jnp.ones(valid, bool).at[1:].set(keys[1:] != keys[:-1])
+    if drop_value is not None:
+        first = first & (vals != jnp.int32(drop_value))
     return keys[first], vals[first]
