@@ -1,5 +1,13 @@
 """Per-kernel microbenchmarks (interpret mode on CPU — wall numbers are
-for regression tracking, not TPU projections) + oracle agreement."""
+for regression tracking, not TPU projections) + oracle agreement + the
+execution-backend calibration sweep.
+
+The sweep times every AVAILABLE execution mode (host numpy / interpret
+Pallas / compiled Pallas when the XLA backend can lower it) for each
+backend op at a grid of sizes, checks the modes agree bit-for-bit, and
+persists the fastest-mode-per-(op, size) crossover table to
+``artifacts/bench/backend_calibration.json`` — the table
+``core.backend.ExecBackend`` loads at engine construction."""
 from __future__ import annotations
 
 import time
@@ -19,6 +27,132 @@ def _time(fn, *args, reps=3):
         r = fn(*args)
     jax.block_until_ready(r)
     return (time.perf_counter() - t0) / reps * 1e3   # ms
+
+
+# ------------------------------------------------- backend calibration
+def _sweep_runs(rng, total: int, k: int):
+    """k sorted-unique runs totaling ~``total`` entries (newest first)."""
+    per = max(total // k, 1)
+    runs = []
+    for _ in range(k):
+        keys = np.unique(rng.integers(0, 4 * per * k, per,
+                                      dtype=np.uint32))
+        vals = rng.integers(0, 1 << 30, len(keys)).astype(np.int32)
+        runs.append((keys, vals))
+    return runs
+
+
+def calibration_sweep(quick: bool = False) -> dict:
+    """Time host/interpret/compiled for every backend op at a size grid;
+    returns ``{"table": <crossover table>, "agree": bool, "path": str}``
+    after persisting the table to the calibration artifact."""
+    from repro.core.backend import (compiled_supported, merge_kway_host,
+                                    write_calibration)
+    from repro.kernels.bloom.ops import (bloom_build, bloom_probe_multi,
+                                         bloom_probe_multi_host,
+                                         filter_params, stack_filters)
+    from repro.kernels.merge.ops import merge_dedup_kway
+
+    rng = np.random.default_rng(7)
+    sizes = [512, 2048] if quick else [512, 4096, 16384]
+    has_compiled = compiled_supported()
+    modes = ["host", "interpret"] + (["compiled"] if has_compiled else [])
+    table: dict = {"ops": {}}
+    agree = True
+
+    def record(op: str, timers: dict, checks: dict) -> None:
+        nonlocal agree
+        ms = {m: [] for m in modes}
+        best = []
+        for s in sizes:
+            outs = {}
+            for m in modes:
+                ms[m].append(timers[m](s))
+                outs[m] = checks[m](s)
+            ref = outs["host"]
+            for m in modes[1:]:
+                same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                           for a, b in zip(ref, outs[m]))
+                agree = agree and same
+            best.append(min(modes, key=lambda m: ms[m][-1]))
+        table["ops"][op] = {"sizes": sizes, "best": best, "ms": ms}
+
+    # -- merges (merge_kway; merge_kway_window aliases to it) ----------
+    run_cache: dict = {}
+
+    def merge_runs(s, k):
+        # operands are generated ONCE per (size, k) and reused by every
+        # timed mode, so the sweep compares merge cost, not data gen
+        if (s, k) not in run_cache:
+            runs = _sweep_runs(np.random.default_rng(s), s, k)
+            run_cache[(s, k)] = (runs,
+                                 [(jnp.asarray(a), jnp.asarray(b))
+                                  for a, b in runs])
+        return run_cache[(s, k)]
+
+    def m_host(s, k):
+        return merge_kway_host(merge_runs(s, k)[0])
+
+    def m_kern(s, interpret, k):
+        mk, mv = merge_dedup_kway(merge_runs(s, k)[1], block=256,
+                                  interpret=interpret)
+        return np.asarray(mk), np.asarray(mv)
+
+    for op, k in (("merge_kway", 4), ("scan_merge", 8)):
+        record(op,
+               timers={"host": lambda s, k=k: _time(m_host, s, k, reps=1),
+                       "interpret": lambda s, k=k: _time(
+                           m_kern, s, True, k, reps=1),
+                       "compiled": lambda s, k=k: _time(
+                           m_kern, s, False, k, reps=1)},
+               checks={"host": lambda s, k=k: m_host(s, k),
+                       "interpret": lambda s, k=k: m_kern(s, True, k),
+                       "compiled": lambda s, k=k: m_kern(s, False, k)})
+
+    # -- fused probe (size = tables * keys, 8 tables) ------------------
+    def probe_operands(s, t=8):
+        r = np.random.default_rng(s)
+        filts, nb, kh = [], [], []
+        for _ in range(t):
+            keys = r.integers(0, 1 << 24, 512, dtype=np.uint32)
+            n_bits, k_hashes = filter_params(len(keys), 0.01)
+            filts.append(np.asarray(bloom_build(jnp.asarray(keys),
+                                                n_bits, k_hashes)))
+            nb.append(n_bits)
+            kh.append(k_hashes)
+        stk, meta = stack_filters(filts, nb, kh)
+        q = r.integers(0, 1 << 24, max(s // t, 1), dtype=np.uint32)
+        return stk, jnp.asarray(stk), meta, q
+
+    def p_host(ops):
+        return (bloom_probe_multi_host(ops[0], ops[2], ops[3]),)
+
+    def p_kern(ops, interpret):
+        return (np.asarray(bloom_probe_multi(ops[1], ops[2], ops[3],
+                                             interpret=interpret)),)
+
+    cache: dict = {}
+
+    def probe_ops(s):
+        if s not in cache:
+            cache[s] = probe_operands(s)
+        return cache[s]
+
+    record("probe_multi",
+           timers={"host": lambda s: _time(
+                       lambda: p_host(probe_ops(s)), reps=1),
+                   "interpret": lambda s: _time(
+                       lambda: p_kern(probe_ops(s), True), reps=1),
+                   "compiled": lambda s: _time(
+                       lambda: p_kern(probe_ops(s), False), reps=1)},
+           checks={"host": lambda s: p_host(probe_ops(s)),
+                   "interpret": lambda s: p_kern(probe_ops(s), True),
+                   "compiled": lambda s: p_kern(probe_ops(s), False)})
+
+    table["compiled_supported"] = has_compiled
+    table["quick"] = bool(quick)
+    path = write_calibration(table)
+    return {"table": table, "agree": bool(agree), "path": str(path)}
 
 
 def run(quick: bool = False) -> dict:
@@ -124,6 +258,19 @@ def run(quick: bool = False) -> dict:
         "ms": _time(lambda: paged_attention_kernel(q, kp, vp, tables,
                                                    lens))}
     out["claims"]["paged_attention_matches_oracle"] = err < 2e-4
+
+    # backend calibration sweep: time every available execution mode per
+    # op per size, pin cross-mode agreement, persist the crossover table
+    from pathlib import Path
+    cal = calibration_sweep(quick=quick)
+    out["backend_calibration"] = {
+        "path": cal["path"],
+        "compiled_supported": cal["table"]["compiled_supported"],
+        "best": {op: t["best"] for op, t in cal["table"]["ops"].items()},
+    }
+    out["claims"]["backend_modes_agree"] = cal["agree"]
+    out["claims"]["calibration_artifact_written"] = \
+        Path(cal["path"]).exists()
 
     save("kernels_bench", out)
     return out

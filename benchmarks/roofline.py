@@ -1,15 +1,101 @@
 """Roofline table generator: reads artifacts/dryrun/*.json (produced by
 ``python -m repro.launch.dryrun --all``) and emits the per-(arch x shape
 x mesh) three-term roofline, dominant bottleneck, and useful-flops ratio
-— the source of EXPERIMENTS.md §Roofline."""
+— the source of EXPERIMENTS.md §Roofline.
+
+Also emits LSM-kernel rows: the engine's merge and fused-probe ops are
+pure data movement (no flops to speak of), so their ceiling is the
+MEASURED memory bandwidth times bytes moved.  Each row reports measured
+time, the bytes-moved ceiling, and time-as-fraction-of-roofline — the
+denominator ``kernels_bench`` speedups should be read against."""
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
+
+import numpy as np
 
 from .common import save
 
 DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+# ----------------------------------------------------- LSM kernel rows
+def _memcpy_gbps(nbytes: int = 1 << 26, reps: int = 3) -> float:
+    """Measured host memory bandwidth (GB/s) via a large ``np.copyto``
+    (counts read+write traffic, the same convention as the rows)."""
+    src = np.ones(nbytes // 8, np.float64)
+    dst = np.empty_like(src)
+    np.copyto(dst, src)                     # page in
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        np.copyto(dst, src)
+    dt = (time.perf_counter() - t0) / reps
+    return 2 * nbytes / dt / 1e9
+
+
+def lsm_rows(quick: bool = False) -> list[dict]:
+    """Bytes-moved roofline rows for the engine's merge / probe ops (the
+    execution backend's host fast path — on CPU XLA that is also the
+    dispatch winner, so these rows bound the serving data plane)."""
+    from repro.core.backend import merge_kway_host
+    from repro.kernels.bloom.ops import (bloom_build, bloom_probe_multi_host,
+                                         filter_params, stack_filters)
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(3)
+    bw = _memcpy_gbps(1 << 24 if quick else 1 << 26)
+    rows = []
+
+    # k-way merge: read k runs (8 B/entry), write the merged run
+    n = 1 << 14 if quick else 1 << 17
+    k = 4
+    runs = []
+    for _ in range(k):
+        keys = np.unique(rng.integers(0, 8 * n, n, dtype=np.uint32))
+        vals = rng.integers(0, 1 << 30, len(keys)).astype(np.int32)
+        runs.append((keys, vals))
+    n_in = sum(len(r[0]) for r in runs)
+    merge_kway_host(runs)                   # warm
+    t0 = time.perf_counter()
+    mk, mv = merge_kway_host(runs)
+    merge_ms = (time.perf_counter() - t0) * 1e3
+    bytes_moved = 8 * (n_in + len(mk))      # 4 B key + 4 B val, in + out
+    ceil_ms = bytes_moved / (bw * 1e9) * 1e3
+    rows.append({"arch": "lsm_merge_kway", "shape": f"k{k}_n{n_in}",
+                 "status": "ok", "mode": "host", "ms": merge_ms,
+                 "bytes_moved": bytes_moved, "memcpy_gbps": bw,
+                 "ceiling_ms": ceil_ms,
+                 "frac_of_roofline": ceil_ms / merge_ms if merge_ms else 0.0})
+
+    # fused multi-table probe: read q keys + k_hashes words per (table,
+    # key) pair + the touched filter words, write the (t, q) mask
+    t, q = 16, (1 << 12 if quick else 1 << 15)
+    filts, nbl, khl = [], [], []
+    for _ in range(t):
+        keys = rng.integers(0, 1 << 24, 2048, dtype=np.uint32)
+        n_bits, k_hashes = filter_params(len(keys), 0.01)
+        filts.append(np.asarray(bloom_build(jnp.asarray(keys), n_bits,
+                                            k_hashes)))
+        nbl.append(n_bits)
+        khl.append(k_hashes)
+    stk, meta = stack_filters(filts, nbl, khl)
+    qk = rng.integers(0, 1 << 24, q, dtype=np.uint32)
+    bloom_probe_multi_host(stk, meta, qk)   # warm
+    t0 = time.perf_counter()
+    out = bloom_probe_multi_host(stk, meta, qk)
+    probe_ms = (time.perf_counter() - t0) * 1e3
+    k_avg = float(meta[:, 1].mean())
+    bytes_moved = int(4 * q + 4 * k_avg * t * q + out.size)
+    ceil_ms = bytes_moved / (bw * 1e9) * 1e3
+    rows.append({"arch": "lsm_probe_multi", "shape": f"t{t}_q{q}",
+                 "status": "ok", "mode": "host", "ms": probe_ms,
+                 "bytes_moved": bytes_moved, "memcpy_gbps": bw,
+                 "ceiling_ms": ceil_ms,
+                 "frac_of_roofline": ceil_ms / probe_ms if probe_ms
+                 else 0.0})
+    return rows
 
 
 def load_cells(mesh: str | None = None) -> list[dict]:
@@ -61,13 +147,20 @@ def fmt_row(r: dict) -> str:
 def run(quick: bool = False) -> dict:
     rows = table("single")
     ok = [r for r in rows if r["status"] == "ok"]
+    lsm = lsm_rows(quick)
     out = {
         "n_cells": len(rows),
         "n_ok": len(ok),
         "rows": rows,
+        "lsm_rows": lsm,
         "claims": {
             "all_baselines_present": len(rows) >= 30,
             "no_errors": all(r["status"] != "error" for r in rows),
+            "lsm_rows_present": len(lsm) >= 2,
+            # a bytes-moved ceiling bounds from BELOW: measured time can
+            # only be slower (frac <= ~1; small slack for timer noise)
+            "lsm_under_roofline": all(
+                0.0 < r["frac_of_roofline"] <= 1.2 for r in lsm),
         },
     }
     print("| arch | shape | compute_s | memory_s | collective_s | "
@@ -75,5 +168,10 @@ def run(quick: bool = False) -> dict:
     print("|---|---|---|---|---|---|---|---|")
     for r in rows:
         print(fmt_row(r))
+    print("| lsm op | shape | measured | ceiling | frac of roofline |")
+    for r in lsm:
+        print(f"| {r['arch']} | {r['shape']} | {r['ms']:.3g} ms "
+              f"| {r['ceiling_ms']:.3g} ms "
+              f"| {r['frac_of_roofline']:.2f} |")
     save("roofline", out)
     return out

@@ -16,7 +16,9 @@ from .sim import (ArrivalProcess, BurstyArrival, ClosedClient, ConstantArrival,
 from .blsm import BLSMSimulator
 from .twophase import (EngineSystem, TwoPhaseResult, TwoPhaseSystem,
                        run_two_phase)
-from .engine import BackgroundDriver, LSMEngine, merge_kway_host
+from .backend import (ExecBackend, compiled_supported, load_calibration,
+                      merge_kway_host, write_calibration)
+from .engine import BackgroundDriver, LSMEngine
 from .fleet import (FleetBackgroundDriver, FleetSystem, GlobalBudgetArbiter,
                     LSMFleet)
 from .memtable import MemTable, TOMBSTONE, drop_tombstones
@@ -41,6 +43,8 @@ __all__ = [
     "BLSMSimulator", "EngineSystem", "TwoPhaseResult", "TwoPhaseSystem",
     "run_two_phase",
     "BackgroundDriver", "LSMEngine", "MemTable", "SSTable",
+    "ExecBackend", "compiled_supported", "load_calibration",
+    "write_calibration",
     "merge_kway_host", "LSMFleet", "GlobalBudgetArbiter",
     "FleetBackgroundDriver", "FleetSystem",
     "TOMBSTONE", "drop_tombstones", "WriteAheadLog", "RecoverySession",

@@ -1,0 +1,377 @@
+"""Unified execution-backend layer: every kernel-vs-host decision in one
+place, measured instead of guessed.
+
+The engine's data plane has three ways to run each launch:
+
+* ``host``      — vectorized numpy (the packed-sort k-way merge, the
+  bit-twiddling Bloom probe over the host filter-stack mirror).  The CPU
+  fast path: no dispatch overhead, no interpreter.
+* ``interpret`` — the Pallas kernels on the Pallas interpreter.  A
+  correctness harness (bit-identical to compiled lowering by
+  construction), never a fast path.
+* ``compiled``  — the Pallas kernels compiled for the local XLA backend.
+  Unavailable on CPU XLA builds that only support interpret mode;
+  ``compiled_supported()`` probes once per process.
+
+Historically the choice was a "CPU-means-host" guess spread across three
+engine booleans (``use_kernels``, ``interpret``, ``scan_use_kernels``)
+re-interpreted at every call site.  ``ExecBackend`` owns the decision:
+it exposes the four data-plane entry points (``probe_multi``,
+``merge_kway``, ``merge_kway_window``, ``scan_merge``), carries the
+interpret/compiled mode, and — in ``auto`` mode — picks host vs kernel
+*per op per size class* from a MEASURED crossover table: the
+``benchmarks/kernels_bench.py`` sweep times every available mode at a
+grid of sizes and persists the fastest per (op, size) to
+``artifacts/bench/backend_calibration.json``, which engines load at
+construction.  With no calibration artifact the built-in default applies
+(compiled when supported, else host — the interpreter never wins a
+performance decision).
+
+The three legacy engine booleans survive as thin deprecated overrides:
+``ExecBackend.from_legacy`` maps them to FORCED per-op modes that
+reproduce the historical dispatch bit-for-bit, so every existing
+construction site behaves unchanged.
+
+All three modes are pinned bit-identical on merge/probe/scan results by
+``tests/test_backend.py`` (compiled skipped where unsupported).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from bisect import bisect_right
+from pathlib import Path
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+try:  # jax is present everywhere the engine runs; guard for doc tooling
+    import jax.numpy as jnp
+    from repro.kernels.bloom.ops import (bloom_probe_multi,
+                                         bloom_probe_multi_host)
+    from repro.kernels.merge.ops import (merge_dedup_kway,
+                                         merge_dedup_kway_window)
+    _KERNELS = True
+except Exception:  # pragma: no cover - kernels unavailable
+    jnp = None
+    bloom_probe_multi = bloom_probe_multi_host = None
+    merge_dedup_kway = merge_dedup_kway_window = None
+    _KERNELS = False
+
+from .memtable import drop_tombstones
+
+HOST, INTERPRET, COMPILED = "host", "interpret", "compiled"
+MODES = (HOST, INTERPRET, COMPILED)
+#: ops the backend dispatches; ``merge_kway_window`` shares
+#: ``merge_kway``'s calibration entry when it has none of its own.
+OPS = ("probe_multi", "merge_kway", "merge_kway_window", "scan_merge")
+_OP_ALIAS = {"merge_kway_window": "merge_kway"}
+
+#: default calibration artifact (written by ``benchmarks/kernels_bench``)
+CALIBRATION_PATH = Path(__file__).resolve().parents[3] / "artifacts" / \
+    "bench" / "backend_calibration.json"
+
+
+@functools.lru_cache(maxsize=1)
+def compiled_supported() -> bool:
+    """Can this process lower a Pallas kernel for real (interpret=False)?
+
+    Probed ONCE with a trivial kernel: CPU XLA builds of jax that only
+    support the interpreter raise, TPU/GPU (and future CPU lowering)
+    succeed.  ``REPRO_FORCE_COMPILED=0`` force-disables (CI determinism);
+    there is deliberately no force-ENABLE — claiming compiled support the
+    backend cannot deliver would turn every kernel launch into an error.
+    """
+    if os.environ.get("REPRO_FORCE_COMPILED") == "0":
+        return False
+    if not _KERNELS:
+        return False
+    try:
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _copy(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        x = jnp.zeros((8,), jnp.uint32)
+        out = pl.pallas_call(
+            _copy, out_shape=jax.ShapeDtypeStruct((8,), jnp.uint32),
+            interpret=False)(x)
+        return bool(np.asarray(out).shape == (8,))
+    except Exception:
+        return False
+
+
+def merge_kway_host(runs) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized host k-way newest-wins merge: pack each entry as
+    ``key << 32 | global_index`` (runs concatenated newest-first, so a
+    lower index means a newer version), one uint64 sort, then keep the
+    first entry of each equal-key group and gather only the surviving
+    values.  No per-entry Python — this is the CPU fast path the
+    interpret-mode Pallas tournament cannot be."""
+    ks = np.concatenate([np.asarray(r[0]) for r in runs])
+    n = len(ks)
+    comp = (ks.astype(np.uint64) << np.uint64(32)) \
+        | np.arange(n, dtype=np.uint64)
+    comp.sort()
+    sk = (comp >> np.uint64(32)).astype(np.uint32)
+    first = np.ones(n, bool)
+    first[1:] = sk[1:] != sk[:-1]
+    idx = (comp[first] & np.uint64(0xFFFFFFFF)).astype(np.int64)
+    vs = np.concatenate([np.asarray(r[1]) for r in runs])
+    return sk[first], vs[idx]
+
+
+# ----------------------------------------------------------- calibration
+def write_calibration(table: dict, path: Path | str | None = None) -> Path:
+    """Persist a crossover table (the ``kernels_bench`` sweep's output).
+
+    ``table`` must carry ``{"ops": {op: {"sizes": [...], "best": [...],
+    "ms": {mode: [...]}}}}``; metadata keys ride along verbatim."""
+    path = Path(path) if path is not None else CALIBRATION_PATH
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = dict(table)
+    payload.setdefault("version", 1)
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True))
+    return path
+
+
+def load_calibration(path: Path | str | None = None) -> Optional[dict]:
+    """Load the crossover table; None when absent or unreadable (the
+    backend then falls back to its built-in default — a missing artifact
+    must never fail engine construction)."""
+    path = Path(path) if path is not None else CALIBRATION_PATH
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    if not isinstance(data, dict) or "ops" not in data:
+        return None
+    return data
+
+
+class ExecBackend:
+    """One object owning every kernel-vs-host decision the engine makes.
+
+    ``mode`` selects the dispatch discipline:
+
+    * ``"auto"``      — per op per size class from the measured crossover
+      table (``calibration``; loaded from the committed artifact when not
+      given), with a sane built-in default when no table exists.
+    * ``"host"`` / ``"interpret"`` / ``"compiled"`` — force every op to
+      one mode (differential tests and the calibration sweep use this).
+
+    ``from_legacy`` maps the engine's three historical booleans
+    (``use_kernels``, ``interpret``, ``scan_use_kernels``) to forced
+    per-op modes reproducing the old dispatch exactly — the deprecated
+    compatibility surface.
+
+    Entry points return host numpy arrays plus, for kernel modes, the
+    device-resident result pair — the engine's streaming merge
+    accumulates those into its preallocated device output buffer so the
+    finished table needs no re-upload.
+    """
+
+    def __init__(self, mode: str = "auto",
+                 calibration: dict | Path | str | None = None,
+                 merge_block: int = 256, interpret: bool = True,
+                 forced: Optional[dict] = None):
+        if mode not in ("auto",) + MODES:
+            raise ValueError(f"unknown backend mode {mode!r}")
+        if mode == COMPILED and not compiled_supported():
+            raise ValueError("compiled Pallas is not supported by this "
+                             "XLA backend (compiled_supported() is False)")
+        self.mode = mode
+        self.merge_block = int(merge_block)
+        #: Pallas execution mode hint for per-table probes
+        #: (``SSTable.interpret``): kernels interpret unless compiled.
+        self.interpret = bool(interpret) and mode != COMPILED
+        self._forced: dict[str, str] = dict(forced or {})
+        if mode in MODES:
+            for op in OPS:
+                self._forced.setdefault(op, mode)
+        if isinstance(calibration, (str, Path)):
+            calibration = load_calibration(calibration)
+        elif calibration is None and mode == "auto" and not self._forced:
+            calibration = load_calibration()
+        self.calibration = calibration
+        # legacy-compat reporting flags (engine properties read these)
+        self.legacy_use_kernels: Optional[bool] = None
+        self.legacy_scan_use_kernels: Optional[bool] = None
+
+    # ------------------------------------------------------------- legacy
+    @classmethod
+    def from_legacy(cls, use_kernels: bool = True, interpret: bool = True,
+                    scan_use_kernels: Optional[bool] = None,
+                    merge_block: int = 256) -> "ExecBackend":
+        """DEPRECATED mapping of the three historical engine booleans to
+        forced per-op modes, bit-for-bit equal to the old dispatch:
+
+        * merges: kernel iff ``use_kernels`` (interpret per flag);
+        * probe: always the fused kernel, interpret per flag;
+        * scans: ``scan_use_kernels`` — None (auto) means kernel only
+          when compiled (``use_kernels and not interpret``), True/False
+          force a side.
+        """
+        use_kernels = bool(use_kernels) and merge_dedup_kway is not None
+        kmode = INTERPRET if interpret else COMPILED
+        if scan_use_kernels is None:
+            scan_kernel = use_kernels and not interpret
+        else:
+            scan_kernel = bool(scan_use_kernels) and \
+                merge_dedup_kway is not None
+        forced = {
+            "probe_multi": kmode,
+            "merge_kway": kmode if use_kernels else HOST,
+            "merge_kway_window": kmode if use_kernels else HOST,
+            "scan_merge": kmode if scan_kernel else HOST,
+        }
+        be = cls(mode="auto", merge_block=merge_block, interpret=interpret,
+                 forced=forced)
+        be.legacy_use_kernels = use_kernels
+        be.legacy_scan_use_kernels = scan_kernel
+        return be
+
+    # ------------------------------------------------------------ decision
+    def _default_mode(self) -> str:
+        return COMPILED if compiled_supported() else HOST
+
+    def decide(self, op: str, size: int) -> str:
+        """The dispatch decision for one launch: which mode runs ``op``
+        over ``size`` elements.  Forced modes (legacy booleans, forced
+        backend) win; otherwise the measured crossover table's best mode
+        for the nearest size class at or below ``size``; otherwise the
+        built-in default.  A ``compiled`` verdict degrades to the next
+        measured-best (or the default) when this process cannot lower
+        compiled Pallas."""
+        mode = self._forced.get(op)
+        if mode is None:
+            mode = self._lookup(op, size)
+        if mode == COMPILED and not compiled_supported():
+            mode = self._lookup(op, size, exclude=COMPILED) \
+                if self._forced.get(op) is None else INTERPRET
+        return mode
+
+    def _lookup(self, op: str, size: int,
+                exclude: Optional[str] = None) -> str:
+        cal = self.calibration
+        tab = None
+        if cal is not None:
+            ops = cal.get("ops", {})
+            tab = ops.get(op) or ops.get(_OP_ALIAS.get(op, op))
+        if not tab:
+            return HOST if exclude == COMPILED else self._default_mode()
+        sizes = tab.get("sizes") or []
+        best = tab.get("best") or []
+        if not sizes or len(best) != len(sizes):
+            return HOST if exclude == COMPILED else self._default_mode()
+        i = max(0, min(bisect_right(sizes, int(size)) - 1, len(sizes) - 1))
+        mode = best[i]
+        if mode == exclude or (mode == COMPILED
+                               and not compiled_supported()):
+            ms = tab.get("ms", {})
+            live = [(ms[m][i], m) for m in (HOST, INTERPRET)
+                    if m in ms and ms[m] is not None
+                    and ms[m][i] is not None]
+            mode = min(live)[1] if live else HOST
+        return mode if mode in MODES else HOST
+
+    def _interp(self, mode: str) -> bool:
+        return mode != COMPILED
+
+    # -------------------------------------------------------- entry points
+    def probe_multi(self, filts, meta, keys,
+                    filts_host: Optional[np.ndarray] = None) -> np.ndarray:
+        """Fused multi-table Bloom probe: (tables, keys) maybe-present
+        matrix.  Host mode runs the vectorized numpy probe over
+        ``filts_host`` (the filter stack's host mirror); kernel modes
+        launch the Pallas probe over the device stack."""
+        n_rows = int(filts.shape[0]) if filts is not None \
+            else int(filts_host.shape[0])
+        mode = self.decide("probe_multi", n_rows * len(keys))
+        if mode == HOST and filts_host is not None:
+            return bloom_probe_multi_host(filts_host, np.asarray(meta),
+                                          np.asarray(keys, np.uint32))
+        return np.asarray(bloom_probe_multi(
+            filts, meta, keys, interpret=self._interp(mode)))
+
+    def merge_kway(self, runs, drop_value: Optional[int] = None,
+                   runs_dev=None):
+        """One-shot k-way newest-wins merge (newest run first).  Returns
+        ``(keys_np, vals_np, dev)`` — ``dev`` is the device-resident
+        ``(keys, vals)`` pair when a kernel produced it, else None."""
+        size = sum(len(k) for k, _ in runs)
+        mode = self.decide("merge_kway", size)
+        if mode == HOST:
+            mk, mv = merge_kway_host(runs)
+            if drop_value is not None:
+                mk, mv = drop_tombstones(mk, mv)
+            return mk, mv, None
+        dev_runs = runs_dev() if callable(runs_dev) else (runs_dev or runs)
+        dk, dv = merge_dedup_kway(dev_runs, block=self.merge_block,
+                                  interpret=self._interp(mode),
+                                  drop_value=drop_value)
+        return np.asarray(dk), np.asarray(dv), (dk, dv)
+
+    def merge_kway_window(self, runs, starts, stops,
+                          drop_value: Optional[int] = None, runs_dev=None):
+        """Streaming-quantum window merge: merge only the
+        ``[starts[i], stops[i])`` slice of each run (the engine cuts at a
+        global key boundary, so windows compose bit-identically).
+        ``runs`` are host mirrors; ``runs_dev`` (list or thunk) supplies
+        the device-resident arrays for kernel modes.  Returns
+        ``(keys_np, vals_np, dev)`` like ``merge_kway``."""
+        size = int(sum(e - s for s, e in zip(starts, stops)))
+        mode = self.decide("merge_kway_window", size)
+        if mode == HOST:
+            windows = [(k[s:e], v[s:e])
+                       for (k, v), s, e in zip(runs, starts, stops)
+                       if e > s]
+            if not windows:
+                return (np.empty(0, np.uint32), np.empty(0, np.int32),
+                        None)
+            if len(windows) == 1:
+                wk, wv = windows[0]
+            else:
+                wk, wv = merge_kway_host(windows)
+            if drop_value is not None:
+                wk, wv = drop_tombstones(wk, wv)
+            return np.ascontiguousarray(wk), np.ascontiguousarray(wv), None
+        dev_runs = runs_dev() if callable(runs_dev) else (runs_dev or runs)
+        dk, dv = merge_dedup_kway_window(
+            dev_runs, list(starts), list(stops), block=self.merge_block,
+            interpret=self._interp(mode), drop_value=drop_value)
+        return np.asarray(dk), np.asarray(dv), (dk, dv)
+
+    def scan_merge(self, runs,
+                   drop_value: Optional[int] = None) -> tuple[np.ndarray,
+                                                              np.ndarray]:
+        """The read plane's k-way merge (range scans / fleet gathers):
+        newest-wins merge with tombstone filtering fused, host results."""
+        size = sum(len(k) for k, _ in runs)
+        mode = self.decide("scan_merge", size)
+        if mode == HOST:
+            mk, mv = merge_kway_host(runs)
+            if drop_value is not None:
+                mk, mv = drop_tombstones(mk, mv)
+            return mk, mv
+        dk, dv = merge_dedup_kway(runs, block=self.merge_block,
+                                  interpret=self._interp(mode),
+                                  drop_value=drop_value)
+        return np.asarray(dk), np.asarray(dv)
+
+    # ------------------------------------------------------------- info
+    def describe(self) -> dict:
+        """Introspection for tests/benchmarks: forced modes, calibration
+        presence, compiled availability."""
+        return {
+            "mode": self.mode,
+            "forced": dict(self._forced),
+            "calibrated": self.calibration is not None,
+            "compiled_supported": compiled_supported(),
+            "merge_block": self.merge_block,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"ExecBackend({self.describe()!r})"

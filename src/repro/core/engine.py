@@ -78,14 +78,39 @@ time ``BackgroundDriver`` holds the engine lock per pump, which is what
 makes writer/reader tail latency track the configured quantum instead of
 the largest in-flight merge (see ``benchmarks/latency_tail.py``).
 
-``interpret`` selects the Pallas execution mode for every kernel the
-engine launches (bloom probes and the merge path): True keeps CPU tests
-on the interpreter, False compiles for the accelerator in benchmarks.
-``scan_use_kernels`` picks the scan plane's merge backend: None (auto)
-uses the Pallas tournament only when it is compiled (``use_kernels and
-not interpret``) and the packed-sort host merge otherwise — the
-interpreter is a correctness harness, not a fast path; True/False force
-a backend (differential tests force True to drive the kernel).
+Backend / dispatch contract (``core/backend.py``): every launch the
+engine makes — the fused Bloom probe, the k-way compaction merge, the
+streaming window merge, the scan plane's merge — routes through ONE
+``ExecBackend``, which owns the kernel-vs-host decision.  The backend
+carries the interpret/compiled Pallas mode and, in ``auto`` mode, picks
+host vs kernel *per op per size class* from a MEASURED crossover table
+(``artifacts/bench/backend_calibration.json``, produced by the
+``kernels_bench`` sweep and loaded at engine construction; a built-in
+default applies when the artifact is absent: compiled when the XLA
+backend supports it, else host — the interpreter is a correctness
+harness, never a performance choice).  Construct the engine with
+``backend=ExecBackend(...)`` (or a mode string: ``"auto"``, ``"host"``,
+``"interpret"``, ``"compiled"``) to choose the discipline explicitly.
+
+The three historical booleans survive as thin DEPRECATED overrides,
+mapped by ``ExecBackend.from_legacy`` to forced per-op modes that
+reproduce the old dispatch bit-for-bit: ``interpret`` selects the
+Pallas execution mode for every kernel launch; ``use_kernels`` picks
+kernel-vs-host for merges; ``scan_use_kernels`` forces the scan plane
+(None = auto: kernel only when compiled).  They are ignored when an
+explicit ``backend`` is passed.  The engine's ``use_kernels`` /
+``interpret`` / ``scan_use_kernels`` attributes are read-only views of
+the backend's configuration.
+
+Device residency: the merge→flush→probe plane avoids host↔device
+round-trips end-to-end.  ``SSTable.build`` never uploads (device arrays
+materialize lazily, or are ADOPTED when the output already lives on
+device); the streaming merge accumulates window outputs into
+preallocated output buffers — host mirrors seeded incrementally per
+window, and on kernel paths a device buffer updated in place via
+donation — so ``_finish_merge`` binds the finished table as O(1) views
+into those buffers with NO O(merge-size) host concatenate+rebuild
+(pinned in ``tests/test_backend.py``).
 
 Thread safety: every foreground entry point (``put``/``put_batch``,
 ``get``/``get_batch``, ``scan_range``) and the background plane
@@ -135,6 +160,7 @@ Durability contract (the WAL plane; ``core/wal.py``):
 from __future__ import annotations
 
 import bisect
+import functools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -142,6 +168,9 @@ from typing import Optional
 
 import numpy as np
 
+from .backend import ExecBackend, merge_kway_host  # noqa: F401 (re-export:
+                                                   # the fleet's scan gather
+                                                   # shares the host merge)
 from .component import Component, LSMTree, MergeOp
 from .constraints import ComponentConstraint, NoConstraint
 from .memtable import (MemTable, SENTINEL_KEY, TOMBSTONE,
@@ -150,39 +179,34 @@ from .policies import MergePolicy
 from .scheduler import MergeScheduler, apportion_largest_remainder
 from .sstable import SSTable
 
-try:  # the merge kernel needs jax; engine tests always have it
-    from repro.kernels.bloom.ops import bloom_probe_multi, set_stack_row
-    from repro.kernels.merge.ops import (merge_dedup, merge_dedup_kway,
-                                         merge_dedup_kway_window)
+try:  # the kernels need jax; engine tests always have it
+    from repro.kernels.bloom.ops import set_stack_row
+    import jax
     import jax.numpy as jnp
 except Exception:  # pragma: no cover
-    merge_dedup = merge_dedup_kway = merge_dedup_kway_window = None
-    bloom_probe_multi = set_stack_row = None
+    set_stack_row = None
+    jax = jnp = None
 
 
 ENTRY_BYTES = 1024  # paper's 1 KB records: 1 entry == 1 KB of I/O budget
 
 
-def merge_kway_host(runs) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorized host k-way newest-wins merge: pack each entry as
-    ``key << 32 | global_index`` (runs concatenated newest-first, so a
-    lower index means a newer version), one uint64 sort, then keep the
-    first entry of each equal-key group and gather only the surviving
-    values.  No per-entry Python — this is the CPU fast path the
-    interpret-mode Pallas tournament cannot be.  Module-level so the
-    fleet router's scan gather shares it (shards hold disjoint keys, so
-    for the fleet the dedup is a no-op and this is a pure merge-sort)."""
-    ks = np.concatenate([np.asarray(r[0]) for r in runs])
-    n = len(ks)
-    comp = (ks.astype(np.uint64) << np.uint64(32)) \
-        | np.arange(n, dtype=np.uint64)
-    comp.sort()
-    sk = (comp >> np.uint64(32)).astype(np.uint32)
-    first = np.ones(n, bool)
-    first[1:] = sk[1:] != sk[:-1]
-    idx = (comp[first] & np.uint64(0xFFFFFFFF)).astype(np.int64)
-    vs = np.concatenate([np.asarray(r[1]) for r in runs])
-    return sk[first], vs[idx]
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+if jax is not None:
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _write_window(buf, win, start):
+        """Fold one merge window into the device accumulation buffer.
+        The buffer is DONATED so backends with input-output aliasing
+        update it in place (O(window), no O(buffer) copy); windows are
+        pow2-padded by the caller so the jit cache holds O(log cap)
+        shapes per merge instead of one entry per distinct window."""
+        return jax.lax.dynamic_update_slice(buf, win, (start,))
+else:  # pragma: no cover - kernels unavailable
+    _write_window = None
 
 
 @dataclass
@@ -232,6 +256,9 @@ class _FilterStack:
 
     def __init__(self):
         self.filts: Optional["jnp.ndarray"] = None   # (cap, width) uint32
+        self.filts_np: Optional[np.ndarray] = None   # host mirror of the
+                                                     # stack — the backend's
+                                                     # HOST probe operand
         self.meta = np.zeros((0, 2), np.uint32)      # host (cap, 2)
         self.slots: dict[int, int] = {}              # component cid -> row
         self.free: list[int] = []
@@ -271,7 +298,10 @@ class _FilterStack:
             self.slots[t.component.cid] = i
             t.stack_slot = i
         self.free = list(range(len(tables), cap))
-        self.filts = jnp.asarray(stk)
+        self.filts_np = stk
+        self.filts = jnp.array(stk)      # independent device copy: row
+                                         # writes donate the device buffer
+                                         # and must never alias the mirror
         self._add.clear()
         self._remove.clear()
 
@@ -306,6 +336,9 @@ class _FilterStack:
                     padded[:words.shape[0]] = words
                     words = padded
                 self.filts = set_stack_row(self.filts, words, row)
+                self.filts_np[row] = words        # keep the host mirror
+                                                  # (HOST probe operand)
+                                                  # in lockstep
                 self.meta[row] = (t.n_bits, t.k_hashes)
                 self.slots[t.component.cid] = row
                 t.stack_slot = row
@@ -326,10 +359,23 @@ class _RunningMerge:
     run_vals: Optional[list] = None
     cursors: Optional[np.ndarray] = None   # per-run consumed prefix
     lens: Optional[np.ndarray] = None
-    # merged-but-unreleased output accumulated across quanta
-    out_keys: list[np.ndarray] = field(default_factory=list)
-    out_vals: list[np.ndarray] = field(default_factory=list)
+    # merged-but-unreleased output: windows are written incrementally
+    # into PREALLOCATED host buffers (capacity = sum of input lens,
+    # allocated once at ``_open_merge``) so ``_finish_merge`` binds the
+    # finished table as O(1) views — no O(merge-size) concatenate
+    buf_keys: Optional[np.ndarray] = None
+    buf_vals: Optional[np.ndarray] = None
+    # device accumulation (kernel windows only): the window outputs are
+    # folded into a donated device buffer so the finished table adopts
+    # device-resident arrays without a re-upload.  ``dev_ok`` drops to
+    # False permanently once any window ran on the host path.
+    dev_keys: Optional["jnp.ndarray"] = field(default=None, repr=False)
+    dev_vals: Optional["jnp.ndarray"] = field(default=None, repr=False)
+    dev_ok: bool = True
     emitted: int = 0           # post-dedup entries emitted so far
+    tombs_in: int = 0          # input tombstones seen in consumed windows
+                               # (counted per quantum: O(consumed), so the
+                               # finish step never scans the inputs)
     # -- legacy one-shot state (``streaming_merge=False`` baseline) ----
     cursor: int = 0            # entries of the merged stream already emitted
     merged_keys: Optional[np.ndarray] = None
@@ -347,7 +393,8 @@ class LSMEngine:
                  scan_use_kernels: Optional[bool] = None,
                  streaming_merge: bool = True,
                  wal=None, group_commit_entries: int = 512,
-                 wal_sync_cost: int = 32, faults=None):
+                 wal_sync_cost: int = 32, faults=None,
+                 backend: "ExecBackend | str | None" = None):
         self.policy = policy
         self.scheduler = scheduler
         self.constraint = constraint or NoConstraint()
@@ -361,13 +408,19 @@ class LSMEngine:
         self.tree = LSMTree(unique_keys=unique_keys)
         self.memtable_entries = int(memtable_entries)
         self.num_memtables = int(num_memtables)
-        self.use_kernels = bool(use_kernels) and merge_dedup is not None
-        self.merge_block = int(merge_block)
-        self.interpret = bool(interpret)
-        if scan_use_kernels is None:      # auto: kernel only when compiled
-            scan_use_kernels = self.use_kernels and not self.interpret
-        self.scan_use_kernels = bool(scan_use_kernels) and \
-            merge_dedup_kway is not None
+        # -- execution backend (see module docstring): every kernel-vs-
+        # host decision lives here.  The three legacy booleans map to a
+        # forced-dispatch backend reproducing the old behavior exactly.
+        if backend is None:
+            backend = ExecBackend.from_legacy(
+                use_kernels=use_kernels, interpret=interpret,
+                scan_use_kernels=scan_use_kernels,
+                merge_block=merge_block)
+        elif isinstance(backend, str):
+            backend = ExecBackend(mode=backend, merge_block=merge_block,
+                                  interpret=interpret)
+        self.backend = backend
+        self.merge_block = int(backend.merge_block)
         self.streaming_merge = bool(streaming_merge)
         self._rlock = threading.RLock()
 
@@ -394,6 +447,40 @@ class LSMEngine:
                       "deletes": 0, "replayed": 0, "tombstones_dropped": 0,
                       "wal_entries": 0, "wal_bytes": 0, "wal_syncs": 0,
                       "flush_bytes": 0, "logical_bytes": 0}
+
+    # ----------------------------------------------------------- backend
+    def set_backend(self, backend: "ExecBackend | str") -> None:
+        """Swap the execution backend (the fleet plumbs ONE shared
+        backend to every shard through here).  Takes an ``ExecBackend``
+        or a mode string (``"auto"``/``"host"``/``"interpret"``/
+        ``"compiled"``)."""
+        if isinstance(backend, str):
+            backend = ExecBackend(mode=backend,
+                                  merge_block=self.merge_block)
+        with self._rlock:
+            self.backend = backend
+            self.merge_block = int(backend.merge_block)
+
+    # Legacy dispatch flags, now READ-ONLY views of the backend's
+    # configuration (no engine code branches on them anymore; they are
+    # kept for callers/tests that introspect the dispatch discipline).
+    @property
+    def use_kernels(self) -> bool:
+        lk = self.backend.legacy_use_kernels
+        if lk is not None:
+            return lk
+        return self.backend.decide("merge_kway", 1 << 20) != "host"
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend.interpret
+
+    @property
+    def scan_use_kernels(self) -> bool:
+        lk = self.backend.legacy_scan_use_kernels
+        if lk is not None:
+            return lk
+        return self.backend.decide("scan_merge", 1 << 20) != "host"
 
     # -------------------------------------------------------- fault hooks
     def _fault(self, point: str) -> None:
@@ -638,9 +725,11 @@ class LSMEngine:
                 if filts is not None:
                     # probe the full stack (capacity rows, <= 2x live
                     # tables); each table's row is its own stack_slot —
-                    # no gather
-                    probed = np.asarray(bloom_probe_multi(
-                        filts, meta, keys, interpret=self.interpret))
+                    # no gather.  The backend picks host vs kernel; the
+                    # host path probes the stack's host mirror.
+                    probed = self.backend.probe_multi(
+                        filts, meta, keys,
+                        filts_host=self._fstack.filts_np)
                 else:  # pragma: no cover - kernels unavailable
                     probed = None
                 for table in view.tables:
@@ -702,14 +791,9 @@ class LSMEngine:
             # Tombstones are filtered like any other scan result.
             ks, vs = drop_tombstones(runs[0][0], runs[0][1])
             return ks.copy(), vs.copy()
-        if self.scan_use_kernels:
-            # the kernel fuses tombstone filtering into its compaction
-            # mask (only the newest version of a key can win)
-            mk, mv = merge_dedup_kway(runs, block=self.merge_block,
-                                      interpret=self.interpret,
-                                      drop_value=int(TOMBSTONE))
-            return np.asarray(mk), np.asarray(mv)
-        return drop_tombstones(*self._merge_kway_host(runs))
+        # the backend fuses tombstone filtering into its merge (kernel:
+        # the compaction mask; host: drop_tombstones on the merged run)
+        return self.backend.scan_merge(runs, drop_value=int(TOMBSTONE))
 
     def scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
                                                         np.ndarray]]:
@@ -845,6 +929,13 @@ class LSMEngine:
         rm.run_vals = [h[1] for h in hosts]
         rm.lens = np.array([len(k) for k in rm.run_keys], np.int64)
         rm.cursors = np.zeros(len(rm.tables), np.int64)
+        # preallocate the output ONCE (dedup can only shrink it): each
+        # quantum writes its window into the next buffer slice, and
+        # ``_finish_merge`` binds ``buf[:emitted]`` views — the finish
+        # step never concatenates or copies the merged output
+        cap = int(rm.lens.sum())
+        rm.buf_keys = np.empty(cap, np.uint32)
+        rm.buf_vals = np.empty(cap, np.int32)
 
     def _tombstone_drop_safe(self, rm: _RunningMerge) -> bool:
         """May this merge reclaim tombstones?  Safe iff NO live table
@@ -937,29 +1028,23 @@ class LSMEngine:
         starts = rm.cursors
         stops, consumed = self._merge_cut(rm, quantum)
         drop = int(TOMBSTONE) if rm.drop else None
-        if self.use_kernels:
-            mk, mv = merge_dedup_kway_window(
-                [(t.keys, t.vals) for t in rm.tables],
-                starts.tolist(), stops.tolist(),
-                block=self.merge_block, interpret=self.interpret,
-                drop_value=drop)
-            wk, wv = np.asarray(mk), np.asarray(mv)
-        else:
-            runs = [(rm.run_keys[i][starts[i]:stops[i]],
-                     rm.run_vals[i][starts[i]:stops[i]])
-                    for i in range(len(rm.tables))
-                    if stops[i] > starts[i]]
-            if len(runs) == 1:
-                wk, wv = runs[0]
-            else:
-                wk, wv = self._merge_kway_host(runs)
-            if rm.drop:
-                wk, wv = drop_tombstones(wk, wv)
+        if rm.drop:
+            # count reclaimed markers window-by-window (O(consumed)) so
+            # ``_finish_merge`` never re-scans the full inputs
+            rm.tombs_in += sum(
+                int((rm.run_vals[i][starts[i]:stops[i]]
+                     == TOMBSTONE).sum())
+                for i in range(len(rm.tables)))
+        wk, wv, dev = self.backend.merge_kway_window(
+            list(zip(rm.run_keys, rm.run_vals)),
+            starts.tolist(), stops.tolist(), drop_value=drop,
+            runs_dev=lambda: [(t.keys, t.vals) for t in rm.tables])
         take = len(wk)
         assert take <= max(quantum, 1), "window emitted beyond its quantum"
         rm.cursors = stops
-        rm.out_keys.append(wk)
-        rm.out_vals.append(wv)
+        rm.buf_keys[rm.emitted:rm.emitted + take] = wk
+        rm.buf_vals[rm.emitted:rm.emitted + take] = wv
+        self._accumulate_device(rm, dev, take)
         rm.emitted += take
         rm.op.written += take
         self.stats["merge_bytes"] += take * ENTRY_BYTES
@@ -967,6 +1052,34 @@ class LSMEngine:
         if int((rm.lens - rm.cursors).sum()) == 0:
             self._finish_merge(rm)
         return take
+
+    def _accumulate_device(self, rm: _RunningMerge, dev, take: int) -> None:
+        """Fold a kernel window's device-resident output into the merge's
+        device accumulation buffer (allocated lazily at 2x output
+        capacity so a pow2-padded window never clamps over earlier data;
+        the pad tail is overwritten by the next window or sliced off at
+        finish).  One host-mode window drops the buffer for good — the
+        finished table then falls back to lazy upload on first kernel
+        use, which is exactly what a host-merged table wants anyway."""
+        if not rm.dev_ok:
+            return
+        if dev is None or _write_window is None:
+            rm.dev_keys = rm.dev_vals = None
+            rm.dev_ok = False
+            return
+        if take == 0:
+            return
+        if rm.dev_keys is None:
+            cap = 2 * max(int(rm.lens.sum()), 1)
+            rm.dev_keys = jnp.zeros(cap, jnp.uint32)
+            rm.dev_vals = jnp.zeros(cap, jnp.int32)
+        dk, dv = dev
+        pad = _next_pow2(take) - take
+        if pad:
+            dk = jnp.pad(dk, (0, pad))
+            dv = jnp.pad(dv, (0, pad))
+        rm.dev_keys = _write_window(rm.dev_keys, dk, rm.emitted)
+        rm.dev_vals = _write_window(rm.dev_vals, dv, rm.emitted)
 
     def _materialize_merge(self, rm: _RunningMerge):
         """LEGACY one-shot path (``streaming_merge=False``; kept as the
@@ -978,18 +1091,12 @@ class LSMEngine:
         tables = sorted(rm.inputs, key=self._order_key)
         rm.drop = self._tombstone_drop_safe(rm)
         drop = int(TOMBSTONE) if rm.drop else None
-        if self.use_kernels:
-            mk, mv = merge_dedup_kway(
-                [(jnp.asarray(t.keys, jnp.uint32),
-                  jnp.asarray(t.vals, jnp.int32)) for t in tables],
-                block=self.merge_block, interpret=self.interpret,
-                drop_value=drop)
-            rm.merged_keys, rm.merged_vals = np.asarray(mk), np.asarray(mv)
-            return
-        runs = [(np.asarray(t.keys), np.asarray(t.vals)) for t in tables]
-        mk, mv = self._merge_kway_host(runs)
         if rm.drop:
-            mk, mv = drop_tombstones(mk, mv)
+            rm.tombs_in = sum(int((t._host()[1] == TOMBSTONE).sum())
+                              for t in rm.inputs)
+        mk, mv, _ = self.backend.merge_kway(
+            [t._host() for t in tables], drop_value=drop,
+            runs_dev=lambda: [(t.keys, t.vals) for t in tables])
         rm.merged_keys, rm.merged_vals = mk, mv
 
     def _advance_merge_oneshot(self, rm: _RunningMerge, quantum: int) -> int:
@@ -998,8 +1105,8 @@ class LSMEngine:
         total = len(rm.merged_keys)
         take = min(quantum, total - rm.cursor)
         if take > 0:
-            rm.out_keys.append(rm.merged_keys[rm.cursor:rm.cursor + take])
-            rm.out_vals.append(rm.merged_vals[rm.cursor:rm.cursor + take])
+            # the merged run is already materialized whole; the cursor
+            # only paces budget charging — finish binds it directly
             rm.cursor += take
             rm.op.written += take
             self.stats["merge_bytes"] += take * ENTRY_BYTES
@@ -1008,16 +1115,31 @@ class LSMEngine:
         return max(take, 0)
 
     def _finish_merge(self, rm: _RunningMerge):
-        keys = np.concatenate(rm.out_keys) if rm.out_keys else \
-            np.empty(0, np.uint32)
-        vals = np.concatenate(rm.out_vals) if rm.out_vals else \
-            np.empty(0, np.int32)
+        # O(1) output binding: the streaming path binds VIEWS into the
+        # preallocated buffers (no concatenate, no copy — pinned in
+        # tests/test_backend.py); the one-shot baseline binds its
+        # materialized arrays directly.
+        if rm.buf_keys is not None:
+            keys = rm.buf_keys[:rm.emitted]
+            vals = rm.buf_vals[:rm.emitted]
+        elif rm.merged_keys is not None:
+            keys, vals = rm.merged_keys, rm.merged_vals
+        else:  # finished before any quantum ran (all-empty inputs)
+            keys = np.empty(0, np.uint32)
+            vals = np.empty(0, np.int32)
+        dev_pair = None
+        if rm.dev_ok and rm.dev_keys is not None:
+            # ONE device slice binds the accumulated kernel output — the
+            # finished table adopts it, so the merge→flush→probe plane
+            # never re-uploads what a kernel already produced on device
+            dev_pair = (rm.dev_keys[:rm.emitted],
+                        rm.dev_vals[:rm.emitted])
         stamp = max(t.data_stamp for t in rm.inputs)
         if rm.drop:
             # every input tombstone died here: winners to the drop mask,
-            # shadowed ones to dedup — count the reclaimed markers
-            self.stats["tombstones_dropped"] += sum(
-                int((t._host()[1] == TOMBSTONE).sum()) for t in rm.inputs)
+            # shadowed ones to dedup — the count was accumulated window-
+            # by-window (O(consumed) per quantum, never an input re-scan)
+            self.stats["tombstones_dropped"] += rm.tombs_in
         # keep the policy's metadata model in sync with the real output size
         rm.op.output_size = float(len(keys))
         rm.op.written = float(len(keys))
@@ -1029,10 +1151,10 @@ class LSMEngine:
                        if t.component.cid not in in_cids]
         outs = self.policy.complete_merge(self.tree, rm.op, self.now)
         # partitioned policies may split the output into several files
-        def _bind(comp, ks, vs):
+        def _bind(comp, ks, vs, dev=None):
             table = SSTable.build(ks, vs, level=comp.level,
                                   created_at=self.now,
-                                  interpret=self.interpret)
+                                  interpret=self.interpret, dev=dev)
             table.component = comp
             table.data_stamp = stamp
             comp.stamp = float(stamp)
@@ -1050,12 +1172,20 @@ class LSMEngine:
             self.tables[comp.cid] = table
 
         if len(outs) == 1:
-            _bind(outs[0], keys, vals)
+            _bind(outs[0], keys, vals, dev_pair)
         else:
+            # contiguous slice VIEWS at np.array_split's boundaries (the
+            # historical split), not index-gather copies; the device
+            # accumulation (when live) splits at the same boundaries
             n = max(len(outs), 1)
-            splits = np.array_split(np.arange(len(keys)), n)
-            for comp, idx in zip(outs, splits):
-                _bind(comp, keys[idx], vals[idx])
+            sizes = np.full(n, len(keys) // n, np.int64)
+            sizes[:len(keys) % n] += 1
+            bounds = np.concatenate([[0], np.cumsum(sizes)])
+            for j, comp in enumerate(outs):
+                lo, hi = int(bounds[j]), int(bounds[j + 1])
+                dv = (dev_pair[0][lo:hi], dev_pair[1][lo:hi]) \
+                    if dev_pair is not None else None
+                _bind(comp, keys[lo:hi], vals[lo:hi], dv)
         # bisect-insert the outputs at their (-stamp, level) rank: all
         # outputs of one merge share the rank (same stamp, same level)
         # and hold disjoint key ranges, so inserting them adjacently

@@ -68,8 +68,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .engine import ENTRY_BYTES, LSMEngine, merge_kway_host
-from .memtable import SENTINEL_KEY, drop_tombstones
+from .backend import ExecBackend
+from .engine import ENTRY_BYTES, LSMEngine
+from .memtable import SENTINEL_KEY, TOMBSTONE, drop_tombstones
 from .metrics import (Trace, WriteTraceRecorder, amplification_stats,
                       rollup_stats)
 from .scheduler import apportion_largest_remainder
@@ -169,11 +170,25 @@ class LSMFleet:
     def __init__(self, n_shards: int,
                  engine_factory: Callable[[int], LSMEngine],
                  arbiter: GlobalBudgetArbiter | str = "fair",
-                 parallel: bool = True):
+                 parallel: bool = True,
+                 backend: "ExecBackend | str | None" = None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.n_shards = int(n_shards)
         self.engines = [engine_factory(i) for i in range(self.n_shards)]
+        # ONE execution backend for the whole fleet: when given (an
+        # ExecBackend or a mode string), every shard routes its launches
+        # through the same dispatch table — calibration is loaded once,
+        # and a forced mode is fleet-wide (tests pin that a forced
+        # backend actually reaches the shards).  None keeps whatever
+        # backend each factory-built engine already carries.
+        self.backend = None
+        if backend is not None:
+            if isinstance(backend, str):
+                backend = ExecBackend(mode=backend)
+            self.backend = backend
+            for e in self.engines:
+                e.set_backend(backend)
         self.arbiter = (GlobalBudgetArbiter(arbiter)
                         if isinstance(arbiter, str) else arbiter)
         self._pool: Optional[ThreadPoolExecutor] = None
@@ -401,7 +416,10 @@ class LSMFleet:
             # post-merge); filter here like the engine's scan plane.
             ks, vs = drop_tombstones(runs[0][0], runs[0][1])
             return ks.copy(), vs.copy()
-        return drop_tombstones(*merge_kway_host(runs))
+        # the gather merge routes through the fleet backend when one was
+        # plumbed, else shard 0's (all shards share dispatch semantics)
+        be = self.backend or self.engines[0].backend
+        return be.scan_merge(runs, drop_value=int(TOMBSTONE))
 
     def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
         ks, vs = self.scan_range(lo, hi)

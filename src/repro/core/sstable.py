@@ -2,19 +2,27 @@
 
 The data plane is JAX: Bloom filters are built/probed by the Pallas bloom
 kernel pair, point lookups are vectorized sorted searches, and merges
-(in engine.py) run through the Pallas merge-path kernel.  One SSTable
-corresponds to one scheduling-plane ``Component`` so the paper's
-policies/schedulers drive real bytes.
+(in engine.py) run through the execution backend (``core/backend.py``).
+One SSTable corresponds to one scheduling-plane ``Component`` so the
+paper's policies/schedulers drive real bytes.
+
+Residency contract: the HOST mirrors (``keys_np``/``vals_np``) are the
+authoritative storage — the read plane ``np.searchsorted``s them without
+a device sync per lookup, and ``build`` never copies them.  The DEVICE
+arrays (``keys``/``vals`` properties) materialize LAZILY on first kernel
+use, or are adopted directly when the caller already holds
+device-resident output (the engine's streaming merge passes its
+accumulated device buffer via ``dev=``), so a table built from a
+device-side merge is never re-uploaded and a table only ever touched by
+host-path ops never pays for a device copy at all.
 
 ``interpret`` selects the Pallas execution mode for this table's probe
-kernel (interpret=True for CPU tests, False for compiled TPU runs); the
-engine plumbs it down from its own constructor flag.  ``keys_np``/
-``vals_np`` are host-side mirrors of the run so the batched read plane
-can ``np.searchsorted`` without a device sync per lookup.
+kernel (interpret=True for CPU tests, False for compiled runs); the
+engine plumbs it down from its backend.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax.numpy as jnp
@@ -27,8 +35,8 @@ from .memtable import scan_window, sorted_lookup
 
 @dataclass
 class SSTable:
-    keys: jnp.ndarray                  # (n,) uint32, sorted ascending, unique
-    vals: jnp.ndarray                  # (n,) int32
+    keys_np: np.ndarray                # (n,) uint32, sorted asc, unique —
+    vals_np: np.ndarray                # authoritative host mirrors
     bloom: jnp.ndarray = None          # uint32 words, built LAZILY on the
                                        # first probe/stack sync — never on
                                        # the background (flush/merge) path,
@@ -41,25 +49,24 @@ class SSTable:
     stack_slot: int = -1               # row in the engine's persistent
                                        # filter stack (set by its sync)
     interpret: bool = True             # Pallas mode for probe kernels
-    keys_np: Optional[np.ndarray] = None   # host mirrors: seeded by
-                                           # ``build``; lazy fallback for
-                                           # hand-constructed tables
-    vals_np: Optional[np.ndarray] = None
     bloom_np: Optional[np.ndarray] = None
+    _keys_dev: Optional[jnp.ndarray] = field(default=None, repr=False)
+    _vals_dev: Optional[jnp.ndarray] = field(default=None, repr=False)
 
     @classmethod
     def build(cls, keys, vals, level: int = 0, created_at: float = 0.0,
-              fpr: float = 0.01, interpret: bool = True) -> "SSTable":
+              fpr: float = 0.01, interpret: bool = True,
+              dev: Optional[tuple] = None) -> "SSTable":
         # Host-first: the flush/merge call sites already hold numpy
-        # arrays (``MemTable.seal`` output / merge-output concatenation),
-        # so component bounds come from the host copy and the read
-        # plane's ``keys_np``/``vals_np`` mirrors are seeded for free —
-        # the seed's ``float(keys[0])``/``float(keys[-1])`` round-tripped
-        # the device once per flush just to compute bounds.
+        # arrays (``MemTable.seal`` output / the streaming merge's
+        # preallocated output buffer), so component bounds come from the
+        # host copy and the read plane's mirrors are adopted for free.
+        # No device upload happens here AT ALL: device arrays either
+        # arrive via ``dev`` (output already living on device — the
+        # engine's device-resident merge plane) or materialize lazily on
+        # the first kernel launch that needs them.
         keys_np = np.asarray(keys, np.uint32)
         vals_np = np.asarray(vals, np.int32)
-        keys = jnp.asarray(keys_np)
-        vals = jnp.asarray(vals_np)
         n = int(keys_np.shape[0])
         n_bits, k_hashes = filter_params(n, fpr)
         # the Bloom filter itself is NOT built here: flush/merge
@@ -71,18 +78,36 @@ class SSTable:
         hi = (float(keys_np[-1]) + 1) / 2**32 if n else 1.0
         comp = Component(size=float(n), level=level, key_lo=lo, key_hi=hi,
                          created_at=created_at)
-        return cls(keys=keys, vals=vals, n_bits=n_bits,
+        dk, dv = dev if dev is not None else (None, None)
+        return cls(keys_np=keys_np, vals_np=vals_np, n_bits=n_bits,
                    k_hashes=k_hashes, component=comp, interpret=interpret,
-                   keys_np=keys_np, vals_np=vals_np)
+                   _keys_dev=dk, _vals_dev=dv)
 
     def __len__(self) -> int:
-        return int(self.keys.shape[0])
+        return int(self.keys_np.shape[0])
+
+    # -- residency ------------------------------------------------------------
+    @property
+    def keys(self) -> jnp.ndarray:
+        """Device-resident keys, materialized lazily from the host mirror
+        (or adopted from a device-side merge output at build)."""
+        if self._keys_dev is None:
+            self._keys_dev = jnp.asarray(self.keys_np)
+        return self._keys_dev
+
+    @property
+    def vals(self) -> jnp.ndarray:
+        if self._vals_dev is None:
+            self._vals_dev = jnp.asarray(self.vals_np)
+        return self._vals_dev
+
+    @property
+    def device_resident(self) -> bool:
+        """True when the device arrays already exist (no upload pending)."""
+        return self._keys_dev is not None and self._vals_dev is not None
 
     def _host(self) -> tuple[np.ndarray, np.ndarray]:
-        """Host-side (keys, vals) mirrors, materialized once."""
-        if self.keys_np is None:
-            self.keys_np = np.asarray(self.keys)
-            self.vals_np = np.asarray(self.vals)
+        """Host-side (keys, vals) mirrors — the authoritative storage."""
         return self.keys_np, self.vals_np
 
     def _ensure_bloom(self) -> jnp.ndarray:

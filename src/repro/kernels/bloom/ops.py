@@ -88,6 +88,38 @@ def set_stack_row(filts, row_words, slot):
     return _set_row_donated(filts, row_words, int(slot))
 
 
+def bloom_probe_multi_host(filts_np: np.ndarray, meta: np.ndarray,
+                           keys: np.ndarray) -> np.ndarray:
+    """Host twin of ``bloom_probe_multi``: the same double-hashing probe
+    over the HOST mirror of the stacked filter words, pure numpy — the
+    execution backend's CPU fast path for the fused probe (bit-identical
+    to the kernel by construction: same hash family, same per-row
+    geometry semantics, unused hash lanes pass).
+
+    ``filts_np`` is (tables, words) uint32, ``meta`` (tables, 2) uint32
+    rows of (n_bits, k_hashes).  Returns a (tables, keys) bool matrix.
+    Rows iterate in Python (tables are tens, keys are the batch — the
+    inner work is vectorized numpy over (k, q))."""
+    from .ref import _hash_np
+    keys = np.asarray(keys, np.uint32)
+    t, q = int(filts_np.shape[0]), len(keys)
+    out = np.zeros((t, q), bool)
+    if t == 0 or q == 0:
+        return out
+    h1 = _hash_np(keys, 0x9E3779B9)
+    h2 = _hash_np(keys, 0x85EBCA6B) | np.uint32(1)
+    i_max = np.arange(int(meta[:, 1].max()), dtype=np.uint32)[:, None]
+    for r in range(t):
+        n_bits = np.uint32(meta[r, 0])
+        k = int(meta[r, 1])
+        pos = ((h1[None, :] + i_max[:k] * h2[None, :]) % n_bits) \
+            .astype(np.int64)                           # (k, q)
+        words = filts_np[r, pos >> 5]
+        bits = (words >> (pos & 31).astype(np.uint32)) & np.uint32(1)
+        out[r] = bits.min(axis=0).astype(bool)
+    return out
+
+
 def bloom_probe_multi(filts, meta, keys, block: int = 1024,
                       interpret: bool = True):
     """Probe one key batch against a stack of padded filters (see

@@ -76,9 +76,9 @@ def test_streaming_merge_bit_identical_under_policies(policy, use_kernels):
     checked = []
 
     def checking_finish(rm):
-        got_k = np.concatenate(rm.out_keys) if rm.out_keys else \
+        got_k = rm.buf_keys[:rm.emitted] if rm.buf_keys is not None else \
             np.empty(0, np.uint32)
-        got_v = np.concatenate(rm.out_vals) if rm.out_vals else \
+        got_v = rm.buf_vals[:rm.emitted] if rm.buf_vals is not None else \
             np.empty(0, np.int32)
         want_k, want_v = _oneshot_reference(eng, rm.inputs)
         assert np.array_equal(got_k, want_k), \
@@ -123,8 +123,8 @@ def test_streaming_cursor_unit_adversarial_quanta(use_kernels):
     got = {}
 
     def fake_finish(r):
-        got["k"] = np.concatenate(r.out_keys)
-        got["v"] = np.concatenate(r.out_vals)
+        got["k"] = r.buf_keys[:r.emitted]
+        got["v"] = r.buf_vals[:r.emitted]
 
     eng._finish_merge = fake_finish
     quanta = [1, 2, 3, 257, 1, 5, 1000, 7, 1, 64]
