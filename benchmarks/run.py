@@ -32,6 +32,7 @@ MODULES = [
     "fig25_27_secondary",
     "engine_throughput",
     "twophase_engine",
+    "secondary_engine",
     "latency_tail",
     "kernels_bench",
     "ckpt_twophase",

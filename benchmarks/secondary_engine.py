@@ -1,0 +1,209 @@
+"""Figures 25-27 on the REAL engine: secondary-index maintenance
+(eager vs lazy) and the component-count write controller, measured on a
+multi-tree ``StorageGroup`` instead of the fluid simulator — the
+ROADMAP's last simulator-only evaluation stood up on the data plane.
+
+Three experiments:
+
+* Ingestion (fig 25): two-phase testing measures max write throughput
+  for a plain engine, a lazy-indexed group and an eager-indexed group
+  (one secondary tree each, sharing the pump budget).  Lazy appends one
+  index entry per put; eager reads the old value through the fused
+  probe and writes delete+insert — more index traffic per put, so its
+  background-bound maximum is lower.
+* Index reads (fig 26's other half): after identical loads compacted
+  to one run per tree, batched ``index_lookup``/``index_scan``
+  wall-clock — the eager index answers from its own tree (covering);
+  lazy validates every candidate against the primary, paying a second
+  probe.
+* Write controller (fig 27): the eager system re-runs its running phase
+  under ``cap(t) = C / (1 + b*n_components + c*[merging])`` through
+  ``EngineSystem.write_controller``; utilization sweep shows bounded
+  tails at ~80% and degradation toward 95%.
+
+Sim agreement (the PR-4 validation idiom): the same qualitative
+orderings are recomputed on the fluid simulator (``fig25_27_secondary``
+machinery) and must match the engine's.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core.constraints import GlobalConstraint
+from repro.core.engine import IndexSpec, LSMEngine
+from repro.core.policies import TieringPolicy
+from repro.core.scheduler import FairScheduler, make_scheduler
+from repro.core.sim import ClosedClient
+from repro.core.twophase import EngineSystem, run_two_phase
+
+from .common import save
+from .fig25_27_secondary import _eager_controller, _sim
+
+MEMTABLE = 256
+UNIQUE = 1 << 14
+BANDWIDTH = 4096 * 1024        # 4096 entries/s of background I/O
+MEM_RATE = 8000.0
+ATTR_SPACE = 1 << 20
+
+
+def _factory(mode: str | None, scheduler: str = "fair"):
+    def factory() -> LSMEngine:
+        pol = TieringPolicy(3, MEMTABLE, UNIQUE)
+        cons = GlobalConstraint(2 * pol.expected_components())
+        idx = () if mode is None else (IndexSpec("ix", mode=mode),)
+        return LSMEngine(pol, make_scheduler(scheduler), cons,
+                         memtable_entries=MEMTABLE, unique_keys=UNIQUE,
+                         merge_block=64, indexes=idx)
+    return factory
+
+
+def _system(mode, scheduler="fair", controller=None,
+            tick_s=0.02) -> EngineSystem:
+    return EngineSystem(_factory(mode, scheduler),
+                        bandwidth_bytes_per_s=BANDWIDTH,
+                        mem_write_rate=MEM_RATE, tick_s=tick_s,
+                        key_space=UNIQUE, write_controller=controller)
+
+
+def _engine_controller(base_rate: float):
+    """The fig-27 law on the real engine: lookup-bound eager ingestion
+    slows with live component count (across ALL trees of the group) and
+    with ongoing merge activity."""
+    def ctrl(t, eng):
+        n = eng.num_components()
+        merging = any(tr.running for tr in eng.trees)
+        return base_rate / (1.0 + 0.06 * n + 0.5 * merging)
+    return ctrl
+
+
+def _load_group(mode: str, n: int, seed: int = 0) -> LSMEngine:
+    eng = _factory(mode)()
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation(n).astype(np.uint32)
+    vals = rng.integers(0, ATTR_SPACE, n, dtype=np.int32)
+    done = 0
+    while done < n:
+        done += eng.put_batch(keys[done:], vals[done:])
+        eng.pump(1 << 12)
+    eng.drain()
+    # compact to one run per tree: fig 26 compares the steady-state read
+    # cost of validation, not transient component-count differences
+    # (eager's delete+insert traffic leaves more runs after the load)
+    eng.compact_all()
+    return eng, vals
+
+
+def _time_reads(eng, attrs, reps: int) -> dict:
+    qs = [attrs[i::reps].astype(np.uint32) for i in range(reps)]
+    for q in qs:                  # warm caches AND the per-shape JIT —
+        eng.index_lookup("ix", q)  # qs carries two distinct batch sizes
+    eng.index_scan("ix", 0, ATTR_SPACE)
+    lookup_s = scan_s = float("inf")
+    for _ in range(3):            # best-of-3: shared-box noise
+        t0 = time.perf_counter()
+        for q in qs:
+            eng.index_lookup("ix", q)
+        lookup_s = min(lookup_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _ in range(max(reps // 4, 1)):
+            eng.index_scan("ix", 0, ATTR_SPACE)
+        scan_s = min(scan_s, time.perf_counter() - t0)
+    return {"lookup_s": lookup_s, "scan_s": scan_s}
+
+
+def run(quick: bool = False) -> dict:
+    t_test, t_run, warm = (6.0, 8.0, 1.0) if quick else (12.0, 20.0, 2.0)
+    out: dict = {"claims": {}}
+
+    # -- fig 25: ingestion, two-phase testing per maintenance mode ------
+    maxes: dict[str, float] = {}
+    p99s: dict[str, float] = {}
+    for mode in (None, "lazy", "eager"):
+        name = mode or "plain"
+        res = run_two_phase(testing_system=lambda: _system(mode),
+                            running_system=lambda: _system(mode, "greedy"),
+                            testing_duration=t_test,
+                            running_duration=t_run, warmup=warm)
+        maxes[name] = res.max_throughput
+        p99s[name] = res.write_latencies.get(99)
+    out["max_throughput"] = maxes
+    out["running_p99"] = p99s
+
+    # -- fig 26: index-read latency, identical loads --------------------
+    n_load = 2048 if quick else 8192
+    reps = 8 if quick else 32
+    reads = {}
+    for mode in ("eager", "lazy"):
+        eng, vals = _load_group(mode, n_load)
+        attrs = np.unique(vals.astype(np.uint32))
+        reads[mode] = _time_reads(eng, attrs, reps)
+        reads[mode]["index_entries"] = eng.trees[1].total_entries()
+    out["index_reads"] = reads
+
+    # -- fig 27: utilization sweep under the write controller -----------
+    ctrl_base = maxes["lazy"] * 1.3
+    res_c = run_two_phase(
+        testing_system=lambda: _system(
+            "eager", controller=_engine_controller(ctrl_base)),
+        running_system=lambda: _system(
+            "eager", "greedy", controller=_engine_controller(ctrl_base)),
+        testing_duration=t_test, running_duration=t_run, warmup=warm)
+    eager_ctrl_max = res_c.max_throughput
+    out["eager_controlled_max"] = eager_ctrl_max
+    utils = [0.6, 0.8, 0.95]
+    sweep, stalls = [], []
+    for u in utils:
+        sys_u = _system("eager", "greedy",
+                        controller=_engine_controller(ctrl_base))
+        res_u = run_two_phase(
+            testing_system=lambda: _system(
+                "eager", controller=_engine_controller(ctrl_base)),
+            running_system=lambda: sys_u,
+            utilization=u, testing_duration=t_test,
+            running_duration=t_run, warmup=warm)
+        sweep.append(res_u.write_latencies.get(99))
+        stalls.append(len(res_u.running.stalls))
+    out["utilizations"] = utils
+    out["eager_p99_by_utilization"] = sweep
+    out["eager_stalls_by_utilization"] = stalls
+
+    # -- sim agreement (PR-4 idiom): same orderings on the fluid model --
+    sim_test = 1800.0 if quick else 3600.0
+    lazy_sim = _sim(FairScheduler()).run(ClosedClient(), sim_test)
+    sim_lazy_max = lazy_sim.throughput(t_from=300.0)
+    eager_sim = _sim(FairScheduler(),
+                     controller=_eager_controller(sim_lazy_max * 1.3)) \
+        .run(ClosedClient(), sim_test)
+    sim_eager_max = eager_sim.throughput(t_from=300.0)
+    out["sim"] = {"lazy_max": sim_lazy_max, "eager_max": sim_eager_max}
+
+    c = out["claims"]
+    # directional, not margin-gated: the virtual clock charges only
+    # modeled I/O, so eager's extra read-old-value probe CPU is free and
+    # the engine's gap is structurally thinner than the sim's (the
+    # delete+insert index traffic still shows).  The grid is
+    # deterministic (virtual clock), so strict < is reproducible.
+    c["lazy_ingests_faster_than_eager"] = \
+        maxes["eager"] < maxes["lazy"]
+    c["index_maintenance_costs_ingest"] = \
+        maxes["lazy"] <= maxes["plain"] * 1.05
+    c["eager_reads_faster_than_lazy"] = \
+        reads["eager"]["lookup_s"] < reads["lazy"]["lookup_s"]
+    c["covering_scan_faster_than_validated"] = \
+        reads["eager"]["scan_s"] < reads["lazy"]["scan_s"]
+    c["controller_bounds_tail_at_80"] = \
+        sweep[utils.index(0.8)] < 0.2 * sweep[-1] + 5.0
+    c["p99_finite_every_mode"] = all(
+        math.isfinite(v) for v in p99s.values())
+    c["sim_agreement_eager_slower"] = \
+        (sim_eager_max < sim_lazy_max) and \
+        (maxes["eager"] < maxes["lazy"])
+    save("secondary_engine", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run(quick=True)["claims"])

@@ -89,12 +89,17 @@ def run(quick: bool = False) -> dict:
     grid: dict[str, dict] = {}
     for pol in policies:
         for sched in schedulers:
+            rsys = _system(pol, sched, BANDWIDTH)
             res = run_two_phase(
                 testing_system=lambda: _system(pol, "fair", BANDWIDTH),
-                running_system=lambda: _system(pol, sched, BANDWIDTH),
+                running_system=lambda: rsys,
                 testing_duration=t_test, running_duration=t_run,
                 warmup=warm)
-            grid[f"{pol}/{sched}"] = _cell(res)
+            cell = _cell(res)
+            # write/space amplification of the running-phase engine
+            # (metrics.amplification_stats over the final store state)
+            cell["amplification"] = rsys.last_engine.amplification()
+            grid[f"{pol}/{sched}"] = cell
 
     starved: dict[str, dict] = {}
     for pol in policies:
@@ -115,6 +120,7 @@ def run(quick: bool = False) -> dict:
 
     finite = all(math.isfinite(c["p99_write_latency"]) and
                  c["p99_write_latency"] >= 0.0 for c in grid.values())
+    amps = [c["amplification"] for c in grid.values()]
     out = {
         "grid": grid,
         "starved": starved,
@@ -138,6 +144,12 @@ def run(quick: bool = False) -> dict:
                                          for c in starved.values()),
             "realtime_completed": math.isfinite(
                 rt.write_latencies.get(99, float("inf"))),
+            "amplification_every_cell": all(
+                "write_amp" in a and "space_amp" in a for a in amps),
+            "space_amp_at_least_one": all(
+                a["space_amp"] >= 1.0 for a in amps),
+            "write_amp_exceeds_logical": max(
+                a["write_amp"] for a in amps) > 1.0,
         },
     }
     save("twophase_engine", out)

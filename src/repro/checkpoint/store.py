@@ -260,20 +260,24 @@ class LSMCheckpointStore:
 
 
 class EngineSnapshotStore:
-    """Durable snapshot of a live ``LSMEngine``'s SSTable state — the
-    checkpoint half of crash recovery (``core/wal.py`` replays the WAL
-    suffix on top).
+    """Durable snapshot of a live ``StorageGroup``'s SSTable state — the
+    checkpoint half of crash recovery (``core/wal.py`` replays the
+    tree-tagged WAL suffix on top).
 
-    Layout: one ``table-<stamp>-<cid>.npz`` per live SSTable (keys +
-    vals + level/stamp/created_at metadata) and a ``SNAPSHOT.json``
+    Layout: one ``table-t<tree>-<stamp>-<cid>.npz`` per live SSTable of
+    every tree (primary AND index trees) and a ``SNAPSHOT.json``
     manifest committed LAST via the same write-new + rename idiom as
     ``LSMCheckpointStore`` — a crash anywhere mid-save (the
     ``mid-snapshot`` fault point fires between table files) leaves the
     PREVIOUS manifest intact, so recovery always sees a consistent
-    (manifest, files) pair.  The manifest records ``flushed_lsn``: the
-    WAL replay origin that makes snapshot + suffix == full history.
-    Stale table files from aborted or superseded saves are swept on the
-    next successful ``save``."""
+    (manifest, files) pair.  The manifest carries one section per tree
+    (``trees``: tables + per-tree ``flushed_lsn`` + stamp) plus the
+    group-level ``flushed_lsn`` (the min over trees): the global WAL
+    replay origin that makes snapshot + suffix == full history.  Legacy
+    single-tree manifests (flat ``tables``) are still readable —
+    ``RecoverySession`` maps them to a one-section group.  Stale table
+    files from aborted or superseded saves are swept on the next
+    successful ``save``."""
 
     MANIFEST = "SNAPSHOT.json"
 
@@ -284,33 +288,42 @@ class EngineSnapshotStore:
     def _manifest_path(self) -> Path:
         return self.root / self.MANIFEST
 
-    def save(self, engine) -> dict:
-        """Write every live SSTable plus a manifest; atomic at the
-        manifest commit.  Call under ``engine.lock()`` (``
-        LSMEngine.snapshot`` does) with no half-open state you care
-        about — running merges are NOT captured (their inputs are, so
-        recovery simply redoes that compaction work)."""
-        tables = []
-        for t in engine._order:
-            keys, vals = t._host()
-            if len(keys) == 0:
-                continue
-            fname = f"table-{t.data_stamp:08d}-{t.component.cid}.npz"
-            np.savez(self.root / fname, keys=keys, vals=vals)
-            tables.append({"file": fname, "level": int(t.component.level),
-                           "stamp": int(t.data_stamp),
-                           "created_at": float(t.component.created_at),
-                           "entries": int(len(keys))})
-            if engine.faults is not None:
-                engine.faults.hit("mid-snapshot")
-        manifest = {"tables": tables,
-                    "flushed_lsn": int(engine.flushed_lsn),
-                    "now": float(engine.now),
-                    "stamp": int(engine._stamp)}
+    def save(self, group) -> dict:
+        """Write every tree's live SSTables plus a manifest; atomic at
+        the manifest commit.  Call under ``group.lock()``
+        (``StorageGroup.snapshot`` does) with no half-open state you
+        care about — running merges are NOT captured (their inputs are,
+        so recovery simply redoes that compaction work)."""
+        sections = []
+        keep = {self.MANIFEST}
+        for tree in group.trees:
+            tables = []
+            for t in tree._order:
+                keys, vals = t._host()
+                if len(keys) == 0:
+                    continue
+                fname = (f"table-t{tree.tree_id}-{t.data_stamp:08d}"
+                         f"-{t.component.cid}.npz")
+                np.savez(self.root / fname, keys=keys, vals=vals)
+                keep.add(fname)
+                tables.append({"file": fname,
+                               "level": int(t.component.level),
+                               "stamp": int(t.data_stamp),
+                               "created_at": float(t.component.created_at),
+                               "entries": int(len(keys))})
+                if group.faults is not None:
+                    group.faults.hit("mid-snapshot")
+            sections.append({"tree": tree.tree_id, "name": tree.name,
+                             "tables": tables,
+                             "flushed_lsn": int(tree.flushed_lsn),
+                             "stamp": int(tree._stamp)})
+        manifest = {"trees": sections,
+                    "flushed_lsn": int(group.flushed_lsn),
+                    "now": float(group.now),
+                    "stamp": int(group._stamp)}
         tmp = self._manifest_path().with_suffix(".tmp")
         tmp.write_text(json.dumps(manifest, indent=1))
         os.replace(tmp, self._manifest_path())   # atomic on POSIX
-        keep = {e["file"] for e in tables} | {self.MANIFEST}
         for p in self.root.iterdir():            # sweep stale table files
             if p.name not in keep and p.name.startswith("table-"):
                 p.unlink()
@@ -323,10 +336,15 @@ class EngineSnapshotStore:
             return None
         return json.loads(p.read_text())
 
-    def load_tables(self, manifest: dict):
-        """Yield ``(keys, vals, meta)`` per saved table, newest-last —
-        the iterable ``LSMEngine.restore_tables`` rebinds."""
-        for meta in manifest["tables"]:
+    def load_tree_tables(self, section: dict):
+        """Yield ``(keys, vals, meta)`` per saved table of ONE tree
+        section, newest-last — the iterable ``LSMTree.restore_tables``
+        rebinds.  Also accepts a legacy flat manifest (it carries the
+        same ``tables`` key)."""
+        for meta in section["tables"]:
             with np.load(self.root / meta["file"]) as z:
                 yield (z["keys"].astype(np.uint32),
                        z["vals"].astype(np.int32), meta)
+
+    # legacy name: a flat single-tree manifest IS a tree section
+    load_tables = load_tree_tables

@@ -18,7 +18,7 @@ from .twophase import (EngineSystem, TwoPhaseResult, TwoPhaseSystem,
                        run_two_phase)
 from .backend import (ExecBackend, compiled_supported, load_calibration,
                       merge_kway_host, write_calibration)
-from .engine import BackgroundDriver, LSMEngine
+from .engine import (BackgroundDriver, IndexSpec, LSMEngine, StorageGroup)
 from .fleet import (FleetBackgroundDriver, FleetSystem, GlobalBudgetArbiter,
                     LSMFleet)
 from .memtable import MemTable, TOMBSTONE, drop_tombstones
@@ -42,7 +42,8 @@ __all__ = [
     "LSMSimulator", "OpenClient", "SimConfig",
     "BLSMSimulator", "EngineSystem", "TwoPhaseResult", "TwoPhaseSystem",
     "run_two_phase",
-    "BackgroundDriver", "LSMEngine", "MemTable", "SSTable",
+    "BackgroundDriver", "IndexSpec", "LSMEngine", "StorageGroup",
+    "MemTable", "SSTable",
     "ExecBackend", "compiled_supported", "load_calibration",
     "write_calibration",
     "merge_kway_host", "LSMFleet", "GlobalBudgetArbiter",

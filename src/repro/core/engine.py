@@ -1,161 +1,139 @@
-"""The real LSM storage engine: paper's scheduling plane + JAX data plane.
+"""The real LSM storage plane: a multi-tree ``StorageGroup`` of
+``LSMTree``s sharing one I/O plane, with ``LSMEngine`` as the 1-tree
+instantiation.
 
-Writes land in a MemTable; flushes turn sealed memtables into SSTables
-(sorted runs; Bloom filters build lazily on first probe); merges execute
-through the Pallas merge-path kernel.  The *decisions* — which components to merge
-(policy), who gets I/O bandwidth (scheduler), when writes stall
-(constraint) — are exactly the classes the fluid simulator exercises, so
-every figure-level claim in the paper can be replayed against real bytes.
+Ownership split
+===============
 
-Execution model: deterministic cooperative quanta.  ``pump(budget_bytes)``
-advances background I/O by one bandwidth quantum, split across flushes
-(strict priority, Section 3.1) and merges per the scheduler's allocation
-(pause/resume = simply which ops receive quanta).  A wall-clock driver
-(`BackgroundDriver`) turns quanta into a rate-limited background thread
-for the serving example; tests use pump() directly for determinism.
+``LSMTree`` (per tree — one primary tree, plus one sibling tree per
+secondary index) owns everything whose state is a single LSM tree:
 
-Read view contract: point lookups and scans go through a cached
-``_ReadView`` over the disk tables, NEWEST-FIRST by
-``(-data_stamp, component.level)`` (on equal stamps the LOWER level holds
-the newer version, since levels are age-ordered).  The view is maintained
-INCREMENTALLY, per-event cost proportional to the event, never to total
-engine state:
+* the memtable plane (``active``/``sealed``) and its flush queue;
+* the run levels (``tables``/``_order``) and the scheduling-plane
+  metadata (``meta``, a ``component.LSMTree``) the merge POLICY reads;
+* the cached read view + Bloom filter stack (the fused-probe operand);
+* the merge policy, per-tree merge SCHEDULER, write constraint, and the
+  streaming-merge cursor state of its running merges;
+* per-tree stats and flush-quantum debt.
 
-* ``self._order`` is the authoritative newest-first table list, updated
-  by insertion — a flush carries the globally newest stamp and prepends
-  one table; a merge completion removes its k inputs and bisect-inserts
-  its outputs at their ``(-stamp, level)`` rank (outputs of one merge
-  share that rank and hold disjoint key ranges, so their relative order
-  is free).  There is no full re-sort anywhere on the maintenance path.
-* The Bloom filter stack for the fused multi-table probe lives in a
-  persistent ``_FilterStack``: a preallocated padded DEVICE array with
-  slot reuse, maintained EVENT-DRIVEN.  Background events only journal
-  their adds/removes (O(1), no device work); the first point lookup
-  after an event applies the journal — a flush's table takes one donated
-  O(filter-width) row write, a merge frees its k input slots and writes
-  one row per output, and an add whose table was merged away before any
-  read cancels outright (with lazy Bloom construction, its filter is
-  never even built).  The stack is rebuilt from scratch only when
-  capacity or row width must grow, or occupancy drops below 1/4
-  (geometric, amortized O(1) rows per event).  ``_ReadView.filts``
-  stays ``None`` until that first point lookup (``_view_filters``), so
-  scan-only and write-only workloads never pay for filter maintenance
-  at all; each table's probe row is its own ``stack_slot``, so probing
-  needs no per-view gather.
+``StorageGroup`` owns everything cross-cutting EXACTLY ONCE:
 
-The view is invalidated (``_view = None``, epoch bump) exactly where
-``self.tables`` changes: flush binding in ``pump`` and merge completion
-in ``_finish_merge``; rebuilding it is an O(tables) tuple snapshot of
-``_order``.  The epoch guard keeps a snapshot built concurrently with an
-invalidation from becoming sticky.  Because row writes donate the
-previous device buffer, a reader NOT holding ``lock()`` against a
-concurrent pump may observe a deleted-buffer error rather than stale
-bits — the locking discipline below was already mandatory.
+* the ``ExecBackend`` (every kernel-vs-host decision, all trees);
+* the group-committed ``WriteAheadLog`` — ONE log whose frames carry a
+  tree id, with GLOBAL LSNs numbering entries in group admission order
+  (primary writes and the index maintenance they induce interleave in
+  one total order, which is what makes multi-tree recovery a prefix
+  property);
+* the I/O budget: each ``pump(budget)`` epoch first syncs/repays WAL
+  traffic, then splits the remainder ACROSS TREES by background debt
+  via ``apportion_largest_remainder`` (the same largest-remainder
+  apportionment the per-tree scheduler and the fleet arbiter use), so
+  primary compaction, index compaction and durability all draw from the
+  paper's single-disk write budget;
+* the reentrant lock, the virtual clock ``now``, snapshots
+  (``checkpoint.EngineSnapshotStore`` saves every tree's runs + a
+  per-tree ``flushed_lsn``), and recovery (``wal.RecoverySession``
+  replays the WAL suffix over N trees, routing frames by tree id).
 
-``get`` and ``get_batch`` walk the view newest-first with early exit.
-``scan_range`` is the range plane over the same view: every live run
-contributes its ``[lo, hi)`` window (sliced by ``searchsorted`` on the
-host mirrors — active memtable first, then sealed memtables newest-first,
-then ``view.tables``), and the windows are resolved newest-wins in ONE
-k-way merge (the ``merge_dedup_kway`` tournament kernel, or its
-packed-sort host equivalent) — the run list's newest-first order IS the
-age order the merge dedups by, so scans and point reads share a single
-total order.  ``scan_range`` returns sorted (keys, values) arrays;
-``scan_range_dict`` is the dict-compat wrapper.
+``LSMEngine`` subclasses ``StorageGroup`` with no secondary indexes:
+the single-tree engine every existing caller (fleet, twophase, faults,
+benchmarks) keeps using.  The group mirrors the legacy engine surface —
+``active``/``sealed``/``tables``/``stats``/``seal_active``/
+``_read_view``/… delegate to the primary tree — so 1-tree behavior is
+bit-identical to the pre-split engine.
 
-Background execution model: ALL background work is streamed so that one
-scheduler quantum costs O(quantum), never O(total state).  A merge never
-materializes its full output: ``_advance_merge`` keeps per-input-run
-cursors and, per quantum, cuts the next window at a GLOBAL key boundary
-(binary search on the key space over the host mirrors — the merge-path
-pivot), merges just that window (``merge_dedup_kway_window`` on the
-kernel path, the packed-sort host merge otherwise) and appends it to the
-pending output.  Key-boundary cuts mean no equal-key group straddles
-windows, so concatenated window outputs are bit-identical to the one-shot
-merge; ``streaming_merge=False`` keeps the legacy
-materialize-then-emit path as a benchmark baseline.  This bounds the
-time ``BackgroundDriver`` holds the engine lock per pump, which is what
-makes writer/reader tail latency track the configured quantum instead of
-the largest in-flight merge (see ``benchmarks/latency_tail.py``).
+Secondary indexes
+=================
 
-Backend / dispatch contract (``core/backend.py``): every launch the
-engine makes — the fused Bloom probe, the k-way compaction merge, the
-streaming window merge, the scan plane's merge — routes through ONE
-``ExecBackend``, which owns the kernel-vs-host decision.  The backend
-carries the interpret/compiled Pallas mode and, in ``auto`` mode, picks
-host vs kernel *per op per size class* from a MEASURED crossover table
-(``artifacts/bench/backend_calibration.json``, produced by the
-``kernels_bench`` sweep and loaded at engine construction; a built-in
-default applies when the artifact is absent: compiled when the XLA
-backend supports it, else host — the interpreter is a correctness
-harness, never a performance choice).  Construct the engine with
-``backend=ExecBackend(...)`` (or a mode string: ``"auto"``, ``"host"``,
-``"interpret"``, ``"compiled"``) to choose the discipline explicitly.
+An index (``IndexSpec``) is a sibling LSM tree mapping a uint32
+ATTRIBUTE (``extract(value)``; default = the value's low 32 bits) to
+the primary key (stored as the index tree's int32 value, so primary
+keys must stay below 2**31 in indexed groups).  Newest-wins dedup makes
+it a unique index: one primary key per attribute.  Both maintenance
+strategies from the paper (fig25-27) are real:
 
-The three historical booleans survive as thin DEPRECATED overrides,
-mapped by ``ExecBackend.from_legacy`` to forced per-op modes that
-reproduce the old dispatch bit-for-bit: ``interpret`` selects the
-Pallas execution mode for every kernel launch; ``use_kernels`` picks
-kernel-vs-host for merges; ``scan_use_kernels`` forces the scan plane
-(None = auto: kernel only when compiled).  They are ignored when an
-explicit ``backend`` is passed.  The engine's ``use_kernels`` /
-``interpret`` / ``scan_use_kernels`` attributes are read-only views of
-the backend's configuration.
+* **eager** — on every put/delete the group resolves the OLD value
+  first (real point lookups through the fused probe, batched per
+  admitted chunk with intra-chunk occurrences resolved in-memory),
+  deletes the stale index entry (tombstone) and inserts the new one.
+  The index tree is exact at all times, so ``index_scan`` is a COVERING
+  scan and ``index_lookup`` is one probe of the index tree.
+* **lazy** — puts append ``attr -> pk`` blindly (no lookup, no stale
+  deletion; deletes touch the index not at all), and every index READ
+  validates candidates against the primary: an entry counts only if the
+  primary's current value still maps to that attribute.  Ingestion is
+  cheaper; reads pay the validation probe.
 
-Device residency: the merge→flush→probe plane avoids host↔device
-round-trips end-to-end.  ``SSTable.build`` never uploads (device arrays
-materialize lazily, or are ADOPTED when the output already lives on
-device); the streaming merge accumulates window outputs into
-preallocated output buffers — host mirrors seeded incrementally per
-window, and on kernel paths a device buffer updated in place via
-donation — so ``_finish_merge`` binds the finished table as O(1) views
-into those buffers with NO O(merge-size) host concatenate+rebuild
-(pinned in ``tests/test_backend.py``).
+Index maintenance entries are WAL-framed under the index tree's id
+BEFORE admission (crash point ``post-primary-pre-index`` sits between
+the primary admit and the index admit), admitted stall-free
+(``force_admit`` — the primary's gate already paced the batch), and
+flushed/merged by the index tree under the shared budget.
 
-Thread safety: every foreground entry point (``put``/``put_batch``,
-``get``/``get_batch``, ``scan_range``) and the background plane
-(``pump``/``drain``) takes the engine's REENTRANT lock internally, so a
-router worker thread racing a live ``BackgroundDriver`` can never
-observe a half-updated ``_order`` list or a donated filter-stack buffer
-(``scan_range`` releases the lock for the k-way merge itself — its run
-windows are immutable snapshots).  ``lock()`` still exposes the lock for
-callers needing compound atomicity (e.g. read-modify-write sequences, or
-the harnesses' multi-call invariant checks); holding it around a call
-that also locks internally costs one reentrant acquire.  Uncontended
-acquisition is ~100 ns — noise against any engine call's numpy work.
+Execution model (per tree, unchanged from the pre-split engine)
+===============================================================
 
-Durability contract (the WAL plane; ``core/wal.py``):
+Deterministic cooperative quanta: flushes take strict priority, then
+merges per the tree scheduler's allocation.  All background work is
+STREAMED so one quantum costs O(quantum): a merge keeps per-run
+cursors, cuts each window at a global key boundary (the merge-path
+pivot — no equal-key group straddles windows, so concatenated windows
+are bit-identical to the one-shot merge), and accumulates output into
+preallocated host + device buffers that ``_finish_merge`` binds as O(1)
+views.  Flushes larger than the remaining quantum carry their overshoot
+as per-tree debt repaid before new work.
 
-* **With no WAL attached** (``wal=None``, the default) the engine is a
-  volatile store: a crash loses every memtable entry and every SSTable
-  not captured by an explicit snapshot — exactly the seed's behavior.
-* **With a WAL**, every admitted entry (put OR delete) is appended to
-  the log BEFORE the memtable admits it, so the admitted-write history
-  and the log agree entry-for-entry (LSN == admission index).  An
-  acknowledged write is in the OS file buffer immediately and durable
-  after the next fsync; fsyncs happen when ``group_commit_entries``
-  accumulate (group commit) and unconditionally at every ``pump`` epoch.
-  Synced WAL traffic is charged to ``_flush_debt`` — the same budget
-  flushes and merges draw from — so durability I/O competes with
-  compaction for the configured bandwidth (the paper's single-disk
-  write-budget model).
-* **Crash loss model**: everything fsynced survives; of the
-  appended-but-unsynced tail an arbitrary byte prefix survives (page
-  cache).  Recovery (``wal.RecoverySession``) restores the last
-  snapshot's SSTables (``checkpoint.EngineSnapshotStore``) and replays
-  the WAL suffix from the snapshot's ``flushed_lsn``; the recovered
-  read view answers every get/get_batch/scan_range bit-identically to
-  an uncrashed engine fed the same durable prefix (the differential
-  ``tests/test_durability.py`` pins, across policies and crash points).
-* **Tombstone lifecycle**: ``delete``/``delete_batch`` admit the
-  reserved ``TOMBSTONE`` value (int32 min, rejected on the user put
-  path) through the ordinary write path — WAL, memtable, flush, merge
-  all carry it as data, so newest-wins dedup resolves put-vs-delete
-  races for free.  The READ plane hides it: a tombstone hit reports
-  "not found" / is filtered from scans (both backends).  A merge whose
-  output nothing older overlaps (decided at open against ``_order``)
-  DROPS tombstones — reclaiming the deleted keys' space — so a full
-  compaction returns space-amp to ~1 (``compact_all``).
+Read view contract (per tree): point reads and scans go through a
+cached ``_ReadView`` over the disk tables, NEWEST-FIRST by
+``(-data_stamp, level)``, maintained INCREMENTALLY — a flush prepends
+one table, a merge completion bisect-inserts its outputs; no re-sort.
+The Bloom stack (``_FilterStack``) is event-driven: background events
+journal adds/removes in O(1) and the first point lookup after an event
+applies the journal (donated device row writes, host mirror in
+lockstep).  ``get_batch`` walks the view newest-first with early exit
+behind ONE fused multi-table probe; ``scan_range`` resolves every run's
+window in one k-way newest-wins merge (tombstones filtered in-merge).
+
+Backend / dispatch: every launch routes through the group's ONE
+``ExecBackend`` (host-vs-kernel per op per size class from the measured
+calibration artifact; the three legacy booleans map to forced modes via
+``ExecBackend.from_legacy`` and are exposed read-only).
+
+Thread safety: every foreground entry point and the background plane
+take the GROUP's reentrant lock internally; ``lock()`` exposes it for
+compound atomicity.  ``scan_range`` releases it for the merge itself
+(run windows are immutable snapshots).
+
+Durability contract (group-owned; ``core/wal.py``)
+==================================================
+
+* With no WAL the group is volatile (the seed's behavior).
+* With a WAL, every admitted chunk — primary puts/deletes AND the index
+  maintenance entries they induce — is appended as one tree-tagged
+  frame BEFORE its memtable admits it, so the admitted history and the
+  log agree entry-for-entry (global LSN == group admission index).
+  fsyncs happen at ``group_commit_entries`` and at every pump epoch;
+  synced traffic is charged to the group's WAL debt and repaid from the
+  budget ahead of all trees.
+* ``flushed_lsn`` is per tree (everything below the oldest unflushed
+  memtable's ``start_lsn`` is in that tree's SSTables); the group's is
+  their MINIMUM — the snapshot's WAL-truncation point (segment-granular:
+  the log drops whole sealed segments below it, so ``wal.start_lsn``
+  may land before it and replay skips the overlap per tree).
+* Recovery: restore each tree's snapshot section, then replay
+  ``wal.frames_since`` in global LSN order, routing frames by tree id
+  and skipping, inside a frame, the prefix below that tree's snapshot
+  origin.  The recovered group answers every read bit-identically to an
+  uncrashed group fed the same durable prefix — per tree
+  (``tests/test_durability.py`` pins this, crash points x policies, and
+  the multi-tree crash between primary admit and eager index
+  maintenance).
+* Tombstones: deletes admit the reserved ``TOMBSTONE`` value through
+  the ordinary write path (WAL, memtable, flush, merge carry it as
+  data); the read plane hides it; merges nothing-older overlaps drop
+  them (``compact_all`` reclaims space-amp to ~1).  Eager index
+  maintenance writes the same tombstones into index trees to kill stale
+  entries.
 """
 from __future__ import annotations
 
@@ -164,19 +142,21 @@ import functools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
 from .backend import ExecBackend, merge_kway_host  # noqa: F401 (re-export:
                                                    # the fleet's scan gather
                                                    # shares the host merge)
-from .component import Component, LSMTree, MergeOp
+from .component import Component, MergeOp
+from .component import LSMTree as ComponentTree
 from .constraints import ComponentConstraint, NoConstraint
 from .memtable import (MemTable, SENTINEL_KEY, TOMBSTONE,
                        drop_tombstones)
 from .policies import MergePolicy
-from .scheduler import MergeScheduler, apportion_largest_remainder
+from .scheduler import (FairScheduler, MergeScheduler,
+                        apportion_largest_remainder)
 from .sstable import SSTable
 
 try:  # the kernels need jax; engine tests always have it
@@ -211,13 +191,13 @@ else:  # pragma: no cover - kernels unavailable
 
 @dataclass
 class _ReadView:
-    """Cached snapshot of the disk tables for the read plane.
+    """Cached snapshot of ONE tree's disk tables for the read plane.
 
     ``tables`` is newest-first by ``(-data_stamp, level)`` — an O(tables)
-    tuple snapshot of the engine's insertion-maintained ``_order`` list.
+    tuple snapshot of the tree's insertion-maintained ``_order`` list.
     ``filts``/``meta`` stay ``None`` until the first point lookup applies
     the persistent ``_FilterStack``'s pending journal
-    (``LSMEngine._view_filters``): ``filts`` is the stack's DEVICE array
+    (``LSMTree._view_filters``): ``filts`` is the stack's DEVICE array
     (capacity rows, only live slots meaningful), ``meta`` the host-side
     per-row (n_bits, k) geometry; each table's probe row is its own
     ``stack_slot``.  Scan-only workloads never populate them.
@@ -230,9 +210,9 @@ class _ReadView:
 class _FilterStack:
     """Persistent device-side Bloom filter stack with slot reuse — the
     fused multi-table probe's operand, maintained incrementally and
-    EVENT-DRIVEN.
+    EVENT-DRIVEN (one stack per tree).
 
-    The engine notes every table add/remove as it happens
+    The tree notes every table add/remove as it happens
     (``note_add``/``note_remove``, O(1) bookkeeping, NO device work — so
     background quanta and scan-only workloads never touch the stack).
     ``sync(tables)``, called on the first point lookup after a view
@@ -380,51 +360,75 @@ class _RunningMerge:
     cursor: int = 0            # entries of the merged stream already emitted
     merged_keys: Optional[np.ndarray] = None
     merged_vals: Optional[np.ndarray] = None
+    # owning tree (None on hand-built cursors: the group defaults to the
+    # primary) — lets the GROUP dispatch advance/finish per merge, so
+    # instance-level instrumentation on the engine sees every tree's
+    # merges
+    tree: Optional["LSMTree"] = field(default=None, repr=False)
 
 
-class LSMEngine:
-    """A single-partition LSM store (uint32 keys -> int32 values)."""
+def _identity_attr(vals: np.ndarray) -> np.ndarray:
+    """Default index attribute: the value's low 32 bits as uint32."""
+    return (np.asarray(vals).astype(np.int64)
+            & 0xFFFFFFFF).astype(np.uint32)
 
-    def __init__(self, policy: MergePolicy, scheduler: MergeScheduler,
-                 constraint: ComponentConstraint | None = None,
-                 memtable_entries: int = 4096, num_memtables: int = 2,
-                 unique_keys: float = 1e6, use_kernels: bool = True,
-                 merge_block: int = 256, interpret: bool = True,
-                 scan_use_kernels: Optional[bool] = None,
-                 streaming_merge: bool = True,
-                 wal=None, group_commit_entries: int = 512,
-                 wal_sync_cost: int = 32, faults=None,
-                 backend: "ExecBackend | str | None" = None):
+
+@dataclass(frozen=True)
+class IndexSpec:
+    """Declaration of one secondary index (a sibling LSM tree).
+
+    ``mode`` picks the maintenance strategy (``"eager"`` exact-at-all-
+    times vs ``"lazy"`` blind-append + read validation — see the module
+    docstring).  ``extract`` maps a value array (int32) to uint32
+    attributes; ``None`` = the value's low 32 bits.  Tree knobs default
+    to the primary's (``policy`` is shared — policies are stateless
+    config — but each index tree gets its OWN ``FairScheduler`` unless
+    one is given: schedulers may carry state)."""
+    name: str
+    mode: str = "eager"
+    extract: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    policy: Optional[MergePolicy] = None
+    scheduler: Optional[MergeScheduler] = None
+    constraint: Optional[ComponentConstraint] = None
+    memtable_entries: Optional[int] = None
+    num_memtables: Optional[int] = None
+
+
+@dataclass
+class _IndexState:
+    """Resolved runtime state of one index."""
+    name: str
+    mode: str
+    extract: Callable[[np.ndarray], np.ndarray]
+    tree_id: int
+
+
+class LSMTree:
+    """One LSM tree of a ``StorageGroup``: memtable plane, run levels,
+    read view + filter stack, merge policy/scheduler/constraint, and the
+    streaming-merge state of its running merges.  Cross-cutting concerns
+    (backend, WAL, budget, lock, clock, faults) live on ``self.group``
+    and are owned exactly once — see the module docstring."""
+
+    def __init__(self, group: "StorageGroup", tree_id: int, name: str,
+                 policy: MergePolicy, scheduler: MergeScheduler,
+                 constraint: ComponentConstraint, memtable_entries: int,
+                 num_memtables: int, unique_keys: float,
+                 streaming_merge: bool):
+        self.group = group
+        self.tree_id = int(tree_id)
+        self.name = name
         self.policy = policy
         self.scheduler = scheduler
-        self.constraint = constraint or NoConstraint()
-        # -- durability plane (see module docstring) -------------------
-        self.wal = wal                           # WriteAheadLog | None
-        self.group_commit_entries = int(group_commit_entries)
-        self.wal_sync_cost = int(wal_sync_cost)  # fixed fsync charge
-                                                 # (entries of budget)
-        self.faults = faults                     # FaultInjector | None
-        self._lsn = wal.end_lsn if wal is not None else 0
-        self.tree = LSMTree(unique_keys=unique_keys)
+        self.constraint = constraint
         self.memtable_entries = int(memtable_entries)
         self.num_memtables = int(num_memtables)
-        # -- execution backend (see module docstring): every kernel-vs-
-        # host decision lives here.  The three legacy booleans map to a
-        # forced-dispatch backend reproducing the old behavior exactly.
-        if backend is None:
-            backend = ExecBackend.from_legacy(
-                use_kernels=use_kernels, interpret=interpret,
-                scan_use_kernels=scan_use_kernels,
-                merge_block=merge_block)
-        elif isinstance(backend, str):
-            backend = ExecBackend(mode=backend, merge_block=merge_block,
-                                  interpret=interpret)
-        self.backend = backend
-        self.merge_block = int(backend.merge_block)
+        self.unique_keys = unique_keys
         self.streaming_merge = bool(streaming_merge)
-        self._rlock = threading.RLock()
-
+        self.meta = ComponentTree(unique_keys=unique_keys)  # scheduling-
+                                                # plane model (policy input)
         self.active = MemTable(self.memtable_entries)
+        self.active.start_lsn = group._lsn
         self.sealed: list[MemTable] = []
         self.tables: dict[int, SSTable] = {}     # component id -> SSTable
         self._order: list[SSTable] = []          # newest-first (see module
@@ -435,215 +439,66 @@ class LSMEngine:
         self._view_epoch = 0                     # bumped on invalidation
         self.running: dict[int, _RunningMerge] = {}
         self.pending_flush: list[tuple[np.ndarray, np.ndarray]] = []
-        self.now = 0.0
         self._stamp = 0
         self.stalled = False
         self._flush_debt = 0             # flush-quantum overshoot owed
-        self._recorder = None            # optional WriteTraceRecorder
         self.stats = {"puts": 0, "stall_events": 0, "flushes": 0,
                       "merges": 0, "merge_bytes": 0, "merge_touched": 0,
                       "lookups": 0, "bloom_skips": 0,
-                      # durability / amplification counters (PR 7)
                       "deletes": 0, "replayed": 0, "tombstones_dropped": 0,
-                      "wal_entries": 0, "wal_bytes": 0, "wal_syncs": 0,
                       "flush_bytes": 0, "logical_bytes": 0}
 
-    # ----------------------------------------------------------- backend
-    def set_backend(self, backend: "ExecBackend | str") -> None:
-        """Swap the execution backend (the fleet plumbs ONE shared
-        backend to every shard through here).  Takes an ``ExecBackend``
-        or a mode string (``"auto"``/``"host"``/``"interpret"``/
-        ``"compiled"``)."""
-        if isinstance(backend, str):
-            backend = ExecBackend(mode=backend,
-                                  merge_block=self.merge_block)
-        with self._rlock:
-            self.backend = backend
-            self.merge_block = int(backend.merge_block)
-
-    # Legacy dispatch flags, now READ-ONLY views of the backend's
-    # configuration (no engine code branches on them anymore; they are
-    # kept for callers/tests that introspect the dispatch discipline).
-    @property
-    def use_kernels(self) -> bool:
-        lk = self.backend.legacy_use_kernels
-        if lk is not None:
-            return lk
-        return self.backend.decide("merge_kway", 1 << 20) != "host"
-
-    @property
-    def interpret(self) -> bool:
-        return self.backend.interpret
-
-    @property
-    def scan_use_kernels(self) -> bool:
-        lk = self.backend.legacy_scan_use_kernels
-        if lk is not None:
-            return lk
-        return self.backend.decide("scan_merge", 1 << 20) != "host"
-
-    # -------------------------------------------------------- fault hooks
-    def _fault(self, point: str) -> None:
-        """Hit a named crash point (no-op without an injector)."""
-        if self.faults is not None:
-            self.faults.hit(point)
-
-    def attach_write_recorder(self, recorder) -> None:
-        """Attach a ``metrics.WriteTraceRecorder`` (or None to detach).
-        The write path then reports (admitted, offered) ONCE per
-        ``put``/``put_batch`` call — per-batch timestamping, so tracing
-        costs one branch and the hot path stays vectorized.  Stall
-        intervals fall out of the recorder's admitted<offered transitions
-        (see ``metrics.py``); this is the engine half of the two-phase
-        harness's measurement plane."""
-        self._recorder = recorder
-
-    # ------------------------------------------------------------------ write
-    def put(self, key: int, value: int) -> bool:
-        """Returns False when the write must stall (component constraint or
-        no free memtable slot) — the caller decides to retry/queue."""
-        if np.int32(value) == TOMBSTONE:
-            raise ValueError("value -2**31 is reserved (delete tombstone)")
-        with self._rlock:
-            return self._put_locked(key, value)
-
-    def _put_locked(self, key: int, value: int) -> bool:
-        if np.uint32(key) == SENTINEL_KEY:
-            raise ValueError("key 2**32-1 is reserved")
-        self._refresh_stall()
-        ok = True
-        if self.stalled:
-            # a constraint-induced rejection IS a stall event: the paper's
-            # stall accounting charges the writer whenever the write path
-            # refuses work, whichever side (memtable backpressure or the
-            # component constraint) refused it
-            self.stats["stall_events"] += 1
-            ok = False
-        elif self.active.full and len(self.sealed) >= self.num_memtables - 1:
-            self.stats["stall_events"] += 1
-            ok = False
-        else:
-            if self.active.full:
-                self.seal_active()
-            self._wal_log(np.array([key], np.uint32),
-                          np.array([value], np.int32))
-            self.active.put(key, value)
-            self.stats["puts"] += 1
-            self.stats["logical_bytes"] += ENTRY_BYTES
-        if self._recorder is not None:
-            self._recorder.on_puts(int(ok), 1)
-        return ok
-
-    def put_batch(self, keys, values) -> int:
-        """Bulk admission: admit entries in numpy-slice chunks, computing
-        the seal/stall boundary once per chunk instead of per entry.
-        Returns the count accepted before the first stall — identical to
-        running the scalar ``put`` loop (the tree, and hence the stall
-        predicate, only changes under ``pump``, so one check per chunk is
-        exact).  Sole divergence: a reserved sentinel key raises
-        ValueError before its chunk admits ANY entry (atomic batch
-        validation), where the scalar loop would admit the prefix
-        first."""
-        keys = np.asarray(keys, np.uint32)
-        values = np.asarray(values, np.int32)
-        if (values == TOMBSTONE).any():
-            raise ValueError("value -2**31 is reserved (delete tombstone)")
-        with self._rlock:
-            return self._put_batch_locked(keys, values)
-
-    def delete(self, key: int) -> bool:
-        """Blind delete: admit a TOMBSTONE for ``key`` through the
-        ordinary write path (WAL-logged, stall-checked).  Returns False
-        when the write must stall — True says the delete was ADMITTED,
-        not that the key existed (LSM deletes never look)."""
-        return self.delete_batch(np.array([key], np.uint32)) == 1
-
-    def delete_batch(self, keys) -> int:
-        """Bulk blind deletes: ``put_batch`` semantics (admit until the
-        first stall, returns the admitted count), writing TOMBSTONE
-        values.  The markers flow through flush/merge as data and are
-        reclaimed by bottom-level merges (see module docstring)."""
-        keys = np.asarray(keys, np.uint32)
-        vals = np.full(len(keys), TOMBSTONE, np.int32)
-        with self._rlock:
-            return self._put_batch_locked(keys, vals, deletes=True)
-
-    def _put_batch_locked(self, keys, values, deletes: bool = False) -> int:
-        n = len(keys)
-        if (keys == SENTINEL_KEY).any():
-            raise ValueError("key 2**32-1 is reserved")
-        n_ok = 0
-        while n_ok < n:
-            self._refresh_stall()
-            if self.stalled:
-                # mirror ``put``: one stall event per batch rejection,
-                # whichever predicate (constraint here, memtable
-                # backpressure below) refused the remainder
-                self.stats["stall_events"] += 1
-                break
-            if self.active.full:
-                if len(self.sealed) >= self.num_memtables - 1:
-                    self.stats["stall_events"] += 1
-                    break
-                self.seal_active()
-            # chunk size is known up front (memtable room), so the WAL
-            # frame and the memtable admission carry identical entries —
-            # the LSN == admission-index invariant recovery relies on
-            take = min(n - n_ok, self.active.capacity - len(self.active))
-            chunk_k = keys[n_ok:n_ok + take]
-            chunk_v = values[n_ok:n_ok + take]
-            self._wal_log(chunk_k, chunk_v)
-            took = self.active.put_batch(chunk_k, chunk_v)
-            assert took == take, "memtable admitted less than its room"
-            n_ok += took
-            self.stats["deletes" if deletes else "puts"] += took
-        self.stats["logical_bytes"] += n_ok * ENTRY_BYTES
-        if self._recorder is not None and n > 0:
-            self._recorder.on_puts(n_ok, n)
-        return n_ok
-
-    # ------------------------------------------------------------- WAL
-    def _wal_log(self, keys, vals) -> None:
-        """Append one admitted chunk as one WAL frame (the group-commit
-        unit) BEFORE memtable admission, hit the ack-unknown crash
-        point, and group-commit when enough entries accumulated."""
-        if self.wal is None:
-            self._lsn += len(keys)
-            return
-        self.wal.append(keys, vals)
-        self._lsn = self.wal.end_lsn
-        self.stats["wal_entries"] += len(keys)
-        self._fault("post-wal-pre-memtable")
-        if self.wal.unsynced_entries >= self.group_commit_entries:
-            self._wal_sync()
-
-    def _wal_sync(self) -> None:
-        """fsync the WAL and charge the synced traffic (entries plus the
-        fixed ``wal_sync_cost`` seek charge) to ``_flush_debt`` — repaid
-        from pump budget before flushes/merges, so durability I/O
-        competes with compaction for the configured bandwidth."""
-        if self.wal is None:
-            return
-        n = self.wal.unsynced_entries
-        if n <= 0:
-            return
-        self.wal.sync()
-        self._flush_debt += n + self.wal_sync_cost
-        self.stats["wal_bytes"] += n * ENTRY_BYTES
-        self.stats["wal_syncs"] += 1
-
-    def seal_active(self) -> None:
+    # ------------------------------------------------------------ memtables
+    def seal_active(self, next_start_lsn: Optional[int] = None) -> None:
         """Seal the active memtable (it becomes a flush candidate) and
-        open a fresh one whose ``start_lsn`` is the current WAL position
-        — the bookkeeping behind ``flushed_lsn``."""
+        open a fresh one whose ``start_lsn`` is the group's current WAL
+        position — the bookkeeping behind ``flushed_lsn``.  Group-
+        internal admission paths that seal MID-chunk (``force_admit``)
+        pass the LSN of the chunk's next entry instead, since the chunk
+        was WAL-framed before any of it was admitted."""
         self.sealed.append(self.active)
         self.active = MemTable(self.memtable_entries)
-        self.active.start_lsn = self._lsn
-
-    _seal_active = seal_active        # compat alias (pre-PR7 name)
+        self.active.start_lsn = self.group._lsn \
+            if next_start_lsn is None else int(next_start_lsn)
 
     def _refresh_stall(self):
-        self.stalled = self.constraint.violated(self.tree)
+        self.stalled = self.constraint.violated(self.meta)
+
+    def force_admit(self, keys, vals, base_lsn: int) -> None:
+        """Stall-free admission for group-internal writes (index
+        maintenance): seals past ``num_memtables`` freely — the
+        primary's admission gate already paced the batch, and the extra
+        sealed memtables are background debt the next pump epochs repay.
+        ``base_lsn`` is the chunk's WAL frame base (already logged), so
+        a mid-chunk seal stamps the new memtable at the exact LSN of the
+        first entry it will hold."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.asarray(vals, np.int32)
+        n = len(keys)
+        pos = 0
+        while pos < n:
+            if self.active.full:
+                self.seal_active(next_start_lsn=base_lsn + pos)
+            take = min(n - pos, self.active.capacity - len(self.active))
+            took = self.active.put_batch(keys[pos:pos + take],
+                                         vals[pos:pos + take])
+            assert took == take, "memtable admitted less than its room"
+            pos += take
+
+    def replay_admit(self, keys, vals) -> int:
+        """Recovery-only admission: entries already durable in the WAL
+        re-enter the memtable plane WITHOUT re-logging and WITHOUT
+        constraint stalls.  Callers size chunks to the active memtable's
+        room and maintain the group's LSN clock (``RecoverySession``
+        does both)."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.asarray(vals, np.int32)
+        if self.active.full:
+            self.seal_active()
+        took = self.active.put_batch(keys, vals)
+        assert took == len(keys), "replay chunk exceeded memtable room"
+        self.stats["replayed"] += took
+        return took
 
     # ------------------------------------------------------------------ read
     def _read_view(self) -> _ReadView:
@@ -665,11 +520,8 @@ class LSMEngine:
     def _view_filters(self, view: _ReadView):
         """Lazily apply the filter stack's pending add/remove journal
         (first point lookup after a background event pays O(rows
-        changed); scans never call this).  The stack syncs against the
-        authoritative ``_order`` list — a raced, uncached view probes
-        through its tables' ``stack_slot``s, which stay correct for
-        every table still live.  Returns ``(filts, meta)`` — ``None``s
-        when the bloom kernels are unavailable."""
+        changed); scans never call this).  Returns ``(filts, meta)`` —
+        ``None``s when the bloom kernels are unavailable."""
         if view.filts is None and view.tables and set_stack_row is not None:
             view.filts, view.meta = self._fstack.sync(self._order)
         return view.filts, view.meta
@@ -683,30 +535,12 @@ class LSMEngine:
         """Newest-first rank of a table in the read view / merge order."""
         return (-t.data_stamp, t.component.level if t.component else 0)
 
-    def get(self, key: int):
-        found, vals = self.get_batch(np.array([key], np.uint32))
-        return int(vals[0]) if found[0] else None
-
-    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
-        """Resolve a whole key batch in one pass: vectorized newest-wins
-        lookup over the memtables, then ONE fused Bloom probe across all
-        disk tables (a (tables, keys) Pallas grid), then sorted searches
-        only for surviving (table, key) pairs, newest table first with
-        early exit.  Returns (found mask, values).
-
-        Thread-safe: the whole resolution runs under ``lock()`` — the
-        memtable walk, the view snapshot, the filter-stack sync (whose
-        row writes DONATE the previous device buffer) and the per-table
-        sorted searches must all see one consistent engine state against
-        a live ``BackgroundDriver`` pump."""
-        keys = np.asarray(keys, np.uint32)
-        with self._rlock:
-            return self._get_batch_locked(keys)
-
-    def _get_batch_locked(self, keys) -> tuple[np.ndarray, np.ndarray]:
-        # ``resolved`` tracks keys whose NEWEST version is known — a
-        # tombstone hit resolves the key (stop searching older runs) but
-        # must still report "not found"; the final mask strips them.
+    def get_batch_locked(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized newest-wins lookup over THIS tree (group lock
+        held): memtables newest-first, then ONE fused Bloom probe across
+        all disk tables, then sorted searches only for surviving
+        (table, key) pairs with early exit.  Returns (found, values);
+        tombstone hits resolve the key but report "not found"."""
         q = len(keys)
         self.stats["lookups"] += q
         resolved = np.zeros(q, bool)
@@ -727,7 +561,7 @@ class LSMEngine:
                     # tables); each table's row is its own stack_slot —
                     # no gather.  The backend picks host vs kernel; the
                     # host path probes the stack's host mirror.
-                    probed = self.backend.probe_multi(
+                    probed = self.group.backend.probe_multi(
                         filts, meta, keys,
                         filts_host=self._fstack.filts_np)
                 else:  # pragma: no cover - kernels unavailable
@@ -769,19 +603,13 @@ class LSMEngine:
         return runs
 
     def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
-        """Newest-wins range scan: sorted (keys, values) arrays for
-        ``lo <= key < hi``, resolved across all live runs in one k-way
-        merge (vs the seed's per-table Python dict replay).
-
-        Thread-safe: the run-window snapshot (``_scan_runs`` — the part
-        that reads ``_order`` and the live memtables) runs under
-        ``lock()``; the k-way merge itself runs OUTSIDE it, because the
-        captured windows are (copies of, or views into) immutable
-        arrays — sealed-memtable caches and SSTable host mirrors stay
-        valid and unchanged even if a concurrent merge retires their
-        tables — so a large scan never extends the pump's lock-hold
-        tail."""
-        with self._rlock:
+        """Newest-wins range scan over THIS tree: sorted (keys, values)
+        for ``lo <= key < hi``, resolved across all live runs in one
+        k-way merge.  The run-window snapshot runs under the group lock;
+        the merge itself runs OUTSIDE it (the captured windows are
+        immutable snapshots), so a large scan never extends the pump's
+        lock-hold tail."""
+        with self.group._rlock:
             runs = self._scan_runs(lo, hi)
         if not runs:
             return np.empty(0, np.uint32), np.empty(0, np.int32)
@@ -793,82 +621,43 @@ class LSMEngine:
             return ks.copy(), vs.copy()
         # the backend fuses tombstone filtering into its merge (kernel:
         # the compaction mask; host: drop_tombstones on the merged run)
-        return self.backend.scan_merge(runs, drop_value=int(TOMBSTONE))
-
-    def scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
-                                                        np.ndarray]]:
-        """Locked snapshot of the per-run ``[lo, hi)`` windows, newest
-        first (the k-way merge's age order), merge NOT applied.  The
-        fleet router gathers these across shards into ONE flat k-way
-        merge instead of merging per shard and re-merging the gather —
-        half the sort work for a fan-out scan.  The returned windows are
-        immutable snapshots (sealed caches / host mirrors) but may alias
-        live storage: callers must not write through them."""
-        with self._rlock:
-            return self._scan_runs(lo, hi)
-
-    def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
-        """Dict-compat wrapper over ``scan_range`` (the seed's contract)."""
-        ks, vs = self.scan_range(lo, hi)
-        return dict(zip(ks.tolist(), vs.tolist()))
-
-    _merge_kway_host = staticmethod(merge_kway_host)
+        return self.group.backend.scan_merge(runs,
+                                             drop_value=int(TOMBSTONE))
 
     # ------------------------------------------------------- background I/O
-    def pump(self, budget_entries: int) -> int:
-        """Advance background work by ``budget_entries`` of write I/O.
-        Flushes take strict priority; the remainder goes to merges per the
-        scheduler's allocation.  Returns entries actually written.
-
-        Flushes are atomic (one SSTable build per sealed memtable), so a
-        flush larger than the remaining budget overshoots the quantum —
-        the overshoot is carried as a DEBT repaid from subsequent quanta
-        before any new work, so the long-run delivered bandwidth matches
-        the configured budget even when the pacing quantum is smaller than
-        a memtable (the seed spent the overshoot for free, which made the
-        I/O budget knob a no-op for flush-bound workloads at fine
-        quanta)."""
-        with self._rlock:
-            return self._pump_locked(budget_entries)
-
-    def _pump_locked(self, budget_entries: int) -> int:
+    def pump_tree(self, budget_entries: int) -> int:
+        """Advance THIS tree's background work by its quantum of the
+        group epoch (group lock held): repay flush-overshoot debt, then
+        flushes at strict priority, then merges per the tree scheduler's
+        allocation (largest-remainder apportionment, never exceeding the
+        quantum).  Returns entries actually charged."""
+        g = self.group
         spent = 0
-        self.now += 1.0
-        # every pump is an fsync-epoch boundary: sync the WAL first so
-        # its traffic lands in _flush_debt and is repaid below, ahead of
-        # flushes/merges — durability shares the bandwidth budget
-        self._wal_sync()
-        # 0. repay flush overshoot from previous quanta
         repay = min(self._flush_debt, budget_entries)
         self._flush_debt -= repay
         spent += repay
-        # 1. flushes
         while self.sealed and spent < budget_entries:
-            self._fault("pre-flush")
+            g._fault("pre-flush")
             mt = self.sealed.pop(0)
             keys, vals = mt.seal()
             table = SSTable.build(keys, vals,
                                   level=self.policy.flush_target_level(),
-                                  created_at=self.now,
-                                  interpret=self.interpret)
+                                  created_at=g.now,
+                                  interpret=g.interpret)
             self._bind_table(table)
             self.stats["flushes"] += 1
             self.stats["flush_bytes"] += len(keys) * ENTRY_BYTES
             cost = len(keys)
             avail = budget_entries - spent
             if cost > avail:
+                # atomic flush overshoot carried as debt (see pump)
                 self._flush_debt += cost - avail
                 spent = budget_entries
             else:
                 spent += cost
             self._collect_merges()
         if spent >= budget_entries:
-            self._refresh_stall()
             return spent
-        # 2. merges, per scheduler allocation.  Quanta are apportioned by
-        # largest remainder (``scheduler.apportion_largest_remainder``,
-        # shared with the fleet's GlobalBudgetArbiter): sub-1 fair shares
-        # must not starve, and the quanta never exceed ``remaining``.
         self._collect_merges()
         ops = [rm.op for rm in self.running.values()]
         alloc = self.scheduler.allocate(ops) if ops else {}
@@ -879,15 +668,17 @@ class LSMEngine:
             quanta = apportion_largest_remainder(shares, remaining)
             for (op_id, _), quantum in zip(shares, quanta):
                 if quantum > 0:
-                    spent += self._advance_merge(self.running[op_id],
-                                                 quantum)
+                    # dispatch through the GROUP so instance-level
+                    # instrumentation (tests wrap eng._advance_merge)
+                    # sees every tree's merges
+                    spent += g._advance_merge(self.running[op_id],
+                                              quantum)
             assert spent <= budget_entries, \
                 "merge quanta exceeded the pump budget"
-        self._refresh_stall()
         return spent
 
     def _bind_table(self, table: SSTable) -> None:
-        """Register a freshly built run as the globally NEWEST table:
+        """Register a freshly built run as this tree's NEWEST table:
         stamp it, enter it into the scheduling plane and the read plane
         (prepend to ``_order`` — O(1) rank — and journal the filter-stack
         add).  The flush path binds through here; benchmarks use it to
@@ -895,27 +686,38 @@ class LSMEngine:
         self._stamp += 1
         table.data_stamp = self._stamp
         table.component.stamp = float(self._stamp)
-        self.tree.add(table.component)
+        self.meta.add(table.component)
         self.tables[table.component.cid] = table
         self._order.insert(0, table)
         self._fstack.note_add(table)
         self._invalidate_view()
 
-    def drain(self, budget_entries: int = 1 << 30, max_pumps: int = 10_000):
-        """Pump until no background work remains (tests/shutdown)."""
-        with self._rlock:
-            for _ in range(max_pumps):
-                self._collect_merges()
-                if not self.sealed and not self.running:
-                    break
-                self.pump(budget_entries)
-
     def _collect_merges(self):
-        for op in self.policy.collect_merges(self.tree, self.now):
+        for op in self.policy.collect_merges(self.meta, self.group.now):
             inputs = [self.tables[c.cid] for c in op.inputs]
-            self.running[op.op_id] = _RunningMerge(op=op, inputs=inputs)
+            self.running[op.op_id] = _RunningMerge(op=op, inputs=inputs,
+                                                   tree=self)
 
-    # -- merge execution (the paper's unit of schedulable I/O) ---------------
+    def pending_entries(self) -> int:
+        """This tree's background I/O debt in entries (group lock held):
+        flush-quantum debt, sealed memtables awaiting flush, and the
+        unconsumed inputs of every running merge.  The group's pump
+        epoch apportions its budget across trees by this number."""
+        self._collect_merges()
+        pending = self._flush_debt + sum(len(m) for m in self.sealed)
+        for rm in self.running.values():
+            if rm.lens is not None:       # streaming cursor open
+                pending += int((rm.lens - rm.cursors).sum())
+            elif rm.merged_keys is not None:   # one-shot materialized
+                pending += len(rm.merged_keys) - rm.cursor
+            else:
+                # unopened cursor: the inputs are the upper bound; a
+                # zero-input op (hand-built test cursors) still counts
+                # as live work so the group routes it budget
+                pending += max(sum(len(t) for t in rm.inputs), 1)
+        return pending
+
+    # -- merge execution (the paper's unit of schedulable I/O) -------------
     def _open_merge(self, rm: _RunningMerge):
         """Set up the streaming cursor: sort inputs newest-first (the
         k-way age order — data_stamp is the data-age order; on equal
@@ -1017,13 +819,13 @@ class LSMEngine:
         (post-dedup) are what the budget is charged for, matching the
         paper's written-bytes accounting; heavy dedup therefore spends
         less than the allocated quantum rather than overshooting it."""
-        self._fault("mid-merge-quantum")
+        self.group._fault("mid-merge-quantum")
         if not self.streaming_merge:
             return self._advance_merge_oneshot(rm, quantum)
         if rm.tables is None:
             self._open_merge(rm)
         if int((rm.lens - rm.cursors).sum()) == 0:
-            self._finish_merge(rm)
+            self.group._finish_merge(rm)
             return 0
         starts = rm.cursors
         stops, consumed = self._merge_cut(rm, quantum)
@@ -1035,7 +837,7 @@ class LSMEngine:
                 int((rm.run_vals[i][starts[i]:stops[i]]
                      == TOMBSTONE).sum())
                 for i in range(len(rm.tables)))
-        wk, wv, dev = self.backend.merge_kway_window(
+        wk, wv, dev = self.group.backend.merge_kway_window(
             list(zip(rm.run_keys, rm.run_vals)),
             starts.tolist(), stops.tolist(), drop_value=drop,
             runs_dev=lambda: [(t.keys, t.vals) for t in rm.tables])
@@ -1050,7 +852,7 @@ class LSMEngine:
         self.stats["merge_bytes"] += take * ENTRY_BYTES
         self.stats["merge_touched"] += consumed
         if int((rm.lens - rm.cursors).sum()) == 0:
-            self._finish_merge(rm)
+            self.group._finish_merge(rm)
         return take
 
     def _accumulate_device(self, rm: _RunningMerge, dev, take: int) -> None:
@@ -1094,7 +896,7 @@ class LSMEngine:
         if rm.drop:
             rm.tombs_in = sum(int((t._host()[1] == TOMBSTONE).sum())
                               for t in rm.inputs)
-        mk, mv, _ = self.backend.merge_kway(
+        mk, mv, _ = self.group.backend.merge_kway(
             [t._host() for t in tables], drop_value=drop,
             runs_dev=lambda: [(t.keys, t.vals) for t in tables])
         rm.merged_keys, rm.merged_vals = mk, mv
@@ -1111,7 +913,7 @@ class LSMEngine:
             rm.op.written += take
             self.stats["merge_bytes"] += take * ENTRY_BYTES
         if rm.cursor >= total:
-            self._finish_merge(rm)
+            self.group._finish_merge(rm)
         return max(take, 0)
 
     def _finish_merge(self, rm: _RunningMerge):
@@ -1149,12 +951,12 @@ class LSMEngine:
             self._fstack.note_remove(cid)
         self._order = [t for t in self._order
                        if t.component.cid not in in_cids]
-        outs = self.policy.complete_merge(self.tree, rm.op, self.now)
+        outs = self.policy.complete_merge(self.meta, rm.op, self.group.now)
         # partitioned policies may split the output into several files
         def _bind(comp, ks, vs, dev=None):
             table = SSTable.build(ks, vs, level=comp.level,
-                                  created_at=self.now,
-                                  interpret=self.interpret, dev=dev)
+                                  created_at=self.group.now,
+                                  interpret=self.group.interpret, dev=dev)
             table.component = comp
             table.data_stamp = stamp
             comp.stamp = float(stamp)
@@ -1203,57 +1005,773 @@ class LSMEngine:
         self.stats["merges"] += 1
         self._collect_merges()
 
+    # ---------------------------------------------------- recovery / info
+    @property
+    def flushed_lsn(self) -> int:
+        """First LSN NOT yet captured in THIS tree's on-disk SSTables.
+        Memtables are flushed FIFO and filled in LSN order, so everything
+        of this tree below the oldest unflushed memtable's ``start_lsn``
+        lives in its SSTables (other trees' entries in that range are
+        THEIR problem — the group's replay origin is the min over
+        trees)."""
+        return self.sealed[0].start_lsn if self.sealed \
+            else self.active.start_lsn
+
+    def restore_tables(self, tables, snap: dict) -> int:
+        """Rebuild this tree's read view from its snapshot section (the
+        recovery path): re-bind each saved run at its recorded
+        (stamp, level) rank — ``_order`` re-sorts once, the filter stack
+        rebuilds lazily on the first probe.  Returns the section's
+        ``flushed_lsn`` (this tree's WAL replay origin)."""
+        for keys, vals, tmeta in tables:
+            t = SSTable.build(keys, vals, level=int(tmeta["level"]),
+                              created_at=float(tmeta["created_at"]),
+                              interpret=self.group.interpret)
+            t.data_stamp = int(tmeta["stamp"])
+            t.component.stamp = float(tmeta["stamp"])
+            self.meta.add(t.component)
+            self.tables[t.component.cid] = t
+            self._order.append(t)
+        self._order.sort(key=self._order_key)
+        self._stamp = max(self._stamp, int(snap.get("stamp", 0)),
+                          max((t.data_stamp for t in self._order),
+                              default=0))
+        self._invalidate_view()
+        return int(snap.get("flushed_lsn", 0))
+
+    def start_full_merge(self) -> bool:
+        """Queue ONE merge of every live table to the deepest level (the
+        ``compact_all`` step; group lock held).  Returns False when there
+        is nothing to compact (<= 1 run, no tombstones)."""
+        live = list(self._order)
+        if not live:
+            return False
+        if len(live) == 1 and \
+                int((live[0]._host()[1] == TOMBSTONE).sum()) == 0:
+            return False            # already one run with nothing to drop
+        comps = [t.component for t in live]
+        op = MergeOp(inputs=comps,
+                     output_level=max(self.meta.max_level(),
+                                      max(c.level for c in comps)),
+                     output_size=float(sum(len(t) for t in live)))
+        self.running[op.op_id] = _RunningMerge(op=op, inputs=live,
+                                               tree=self)
+        return True
+
+    def total_entries(self) -> int:
+        return sum(len(t) for t in self.tables.values()) + \
+            sum(len(m) for m in self.sealed) + len(self.active)
+
+    def num_components(self) -> int:
+        return self.meta.num_components()
+
+    def live_entries(self) -> int:
+        """Distinct keys whose newest version is NOT a tombstone — this
+        tree's logical data size behind ``space_amp`` (an O(n) full-range
+        scan)."""
+        return int(len(self.scan_range(0, 0xFFFFFFFF)[0]))
+
+    _merge_kway_host = staticmethod(merge_kway_host)
+
+
+# canonical stats key order (the legacy engine's dict order)
+_STATS_ORDER = ("puts", "stall_events", "flushes", "merges", "merge_bytes",
+                "merge_touched", "lookups", "bloom_skips", "deletes",
+                "replayed", "tombstones_dropped", "wal_entries", "wal_bytes",
+                "wal_syncs", "flush_bytes", "logical_bytes")
+
+
+class StorageGroup:
+    """N LSM trees (one primary + one per secondary index) sharing ONE
+    I/O plane: backend, WAL, budget, lock, clock, snapshots, recovery
+    (see the module docstring for the ownership split).  With no
+    indexes this IS the legacy single-tree engine — every legacy
+    attribute/method delegates to the primary tree bit-identically —
+    and ``LSMEngine`` is exactly that instantiation."""
+
+    def __init__(self, policy: MergePolicy, scheduler: MergeScheduler,
+                 constraint: ComponentConstraint | None = None,
+                 memtable_entries: int = 4096, num_memtables: int = 2,
+                 unique_keys: float = 1e6, use_kernels: bool = True,
+                 merge_block: int = 256, interpret: bool = True,
+                 scan_use_kernels: Optional[bool] = None,
+                 streaming_merge: bool = True,
+                 wal=None, group_commit_entries: int = 512,
+                 wal_sync_cost: int = 32, faults=None,
+                 backend: "ExecBackend | str | None" = None,
+                 indexes=()):
+        # -- durability plane (group-owned) ----------------------------
+        self.wal = wal                           # WriteAheadLog | None
+        self.group_commit_entries = int(group_commit_entries)
+        self.wal_sync_cost = int(wal_sync_cost)  # fixed fsync charge
+                                                 # (entries of budget)
+        self.faults = faults                     # FaultInjector | None
+        self._lsn = wal.end_lsn if wal is not None else 0
+        self._wal_debt = 0                       # synced-WAL budget owed
+        self._wal_stats = {"wal_entries": 0, "wal_bytes": 0, "wal_syncs": 0}
+        # -- execution backend (group-owned): every kernel-vs-host
+        # decision lives here.  The three legacy booleans map to a
+        # forced-dispatch backend reproducing the old behavior exactly.
+        if backend is None:
+            backend = ExecBackend.from_legacy(
+                use_kernels=use_kernels, interpret=interpret,
+                scan_use_kernels=scan_use_kernels,
+                merge_block=merge_block)
+        elif isinstance(backend, str):
+            backend = ExecBackend(mode=backend, merge_block=merge_block,
+                                  interpret=interpret)
+        self.backend = backend
+        self.merge_block = int(backend.merge_block)
+        self.streaming_merge = bool(streaming_merge)
+        self._rlock = threading.RLock()
+        self.now = 0.0
+        self._recorder = None            # optional WriteTraceRecorder
+        self.trees: list[LSMTree] = [
+            LSMTree(self, 0, "primary", policy, scheduler,
+                    constraint or NoConstraint(), int(memtable_entries),
+                    int(num_memtables), unique_keys,
+                    self.streaming_merge)]
+        self._indexes: dict[str, _IndexState] = {}
+        self._eager = False
+        for spec in indexes:
+            self.add_index(spec)
+
+    # ----------------------------------------------------------- indexes
+    def add_index(self, spec: "IndexSpec | str") -> None:
+        """Declare a secondary index as a sibling tree.  Must run before
+        any write is admitted — indexes are not backfilled."""
+        if isinstance(spec, str):
+            spec = IndexSpec(spec)
+        if spec.mode not in ("eager", "lazy"):
+            raise ValueError(f"unknown index mode {spec.mode!r}")
+        if spec.name in self._indexes:
+            raise ValueError(f"duplicate index {spec.name!r}")
+        primary = self.trees[0]
+        if len(primary.active) or primary.sealed or primary.tables:
+            raise ValueError("indexes must be declared before any write "
+                             "(no backfill)")
+        tree = LSMTree(
+            self, len(self.trees), spec.name,
+            spec.policy or primary.policy,
+            spec.scheduler or FairScheduler(),
+            spec.constraint or NoConstraint(),
+            spec.memtable_entries or primary.memtable_entries,
+            spec.num_memtables or primary.num_memtables,
+            primary.unique_keys, self.streaming_merge)
+        self.trees.append(tree)
+        self._indexes[spec.name] = _IndexState(
+            name=spec.name, mode=spec.mode,
+            extract=spec.extract or _identity_attr,
+            tree_id=tree.tree_id)
+        self._eager = self._eager or spec.mode == "eager"
+
+    @property
+    def index_names(self) -> tuple:
+        return tuple(self._indexes)
+
+    # ----------------------------------------------------------- backend
+    def set_backend(self, backend: "ExecBackend | str") -> None:
+        """Swap the execution backend (the fleet plumbs ONE shared
+        backend to every shard through here).  Takes an ``ExecBackend``
+        or a mode string (``"auto"``/``"host"``/``"interpret"``/
+        ``"compiled"``)."""
+        if isinstance(backend, str):
+            backend = ExecBackend(mode=backend,
+                                  merge_block=self.merge_block)
+        with self._rlock:
+            self.backend = backend
+            self.merge_block = int(backend.merge_block)
+
+    # Legacy dispatch flags, now READ-ONLY views of the backend's
+    # configuration (no engine code branches on them anymore; they are
+    # kept for callers/tests that introspect the dispatch discipline).
+    @property
+    def use_kernels(self) -> bool:
+        lk = self.backend.legacy_use_kernels
+        if lk is not None:
+            return lk
+        return self.backend.decide("merge_kway", 1 << 20) != "host"
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend.interpret
+
+    @property
+    def scan_use_kernels(self) -> bool:
+        lk = self.backend.legacy_scan_use_kernels
+        if lk is not None:
+            return lk
+        return self.backend.decide("scan_merge", 1 << 20) != "host"
+
+    # -------------------------------------------------------- fault hooks
+    def _fault(self, point: str) -> None:
+        """Hit a named crash point (no-op without an injector)."""
+        if self.faults is not None:
+            self.faults.hit(point)
+
+    def attach_write_recorder(self, recorder) -> None:
+        """Attach a ``metrics.WriteTraceRecorder`` (or None to detach).
+        The write path then reports (admitted, offered) ONCE per
+        ``put``/``put_batch`` call — per-batch timestamping, so tracing
+        costs one branch and the hot path stays vectorized."""
+        self._recorder = recorder
+
+    # ------------------------------------------------------------------ write
+    def put(self, key: int, value: int) -> bool:
+        """Returns False when the write must stall (component constraint
+        or no free primary memtable slot) — the caller decides to
+        retry/queue."""
+        if np.int32(value) == TOMBSTONE:
+            raise ValueError("value -2**31 is reserved (delete tombstone)")
+        with self._rlock:
+            return self._put_batch_locked(np.array([key], np.uint32),
+                                          np.array([value], np.int32)) == 1
+
+    def put_batch(self, keys, values) -> int:
+        """Bulk admission: admit entries in numpy-slice chunks sized to
+        the primary memtable's room, computing the seal/stall boundary
+        once per chunk.  Returns the count accepted before the first
+        stall.  Each admitted chunk triggers index maintenance (eager:
+        old-value probe + stale tombstone + insert; lazy: blind append)
+        before the next chunk is considered."""
+        keys = np.asarray(keys, np.uint32)
+        values = np.asarray(values, np.int32)
+        if (values == TOMBSTONE).any():
+            raise ValueError("value -2**31 is reserved (delete tombstone)")
+        with self._rlock:
+            return self._put_batch_locked(keys, values)
+
+    def delete(self, key: int) -> bool:
+        """Blind delete: admit a TOMBSTONE for ``key`` through the
+        ordinary write path (WAL-logged, stall-checked).  Returns False
+        when the write must stall — True says the delete was ADMITTED,
+        not that the key existed.  Eager indexes get the stale entry
+        tombstoned (which makes the delete non-blind for them: the old
+        value IS looked up); lazy indexes rely on read validation."""
+        return self.delete_batch(np.array([key], np.uint32)) == 1
+
+    def delete_batch(self, keys) -> int:
+        """Bulk blind deletes: ``put_batch`` semantics (admit until the
+        first stall, returns the admitted count), writing TOMBSTONE
+        values."""
+        keys = np.asarray(keys, np.uint32)
+        vals = np.full(len(keys), TOMBSTONE, np.int32)
+        with self._rlock:
+            return self._put_batch_locked(keys, vals, deletes=True)
+
+    def _put_batch_locked(self, keys, values, deletes: bool = False) -> int:
+        primary = self.trees[0]
+        n = len(keys)
+        if (keys == SENTINEL_KEY).any():
+            raise ValueError("key 2**32-1 is reserved")
+        if self._indexes and n and int(keys.max()) >= 2 ** 31:
+            raise ValueError("indexed groups require primary keys < 2**31 "
+                             "(the key is stored as the index value, int32)")
+        n_ok = 0
+        while n_ok < n:
+            primary._refresh_stall()
+            if primary.stalled:
+                # a constraint-induced rejection IS a stall event: the
+                # paper's stall accounting charges the writer whenever
+                # the write path refuses work, whichever side refused it
+                primary.stats["stall_events"] += 1
+                break
+            if primary.active.full:
+                if len(primary.sealed) >= primary.num_memtables - 1:
+                    primary.stats["stall_events"] += 1
+                    break
+                primary.seal_active()
+            # chunk size is known up front (memtable room), so the WAL
+            # frame and the memtable admission carry identical entries —
+            # the LSN == admission-index invariant recovery relies on
+            take = min(n - n_ok,
+                       primary.active.capacity - len(primary.active))
+            chunk_k = keys[n_ok:n_ok + take]
+            chunk_v = values[n_ok:n_ok + take]
+            old_found = old_vals = None
+            if self._eager:
+                # resolve OLD values BEFORE the chunk lands: real point
+                # lookups through the fused probe (charged to the
+                # primary's lookup stats — eager maintenance pays reads)
+                old_found, old_vals = self._chunk_old_values(
+                    chunk_k, chunk_v, deletes)
+            self._wal_log(0, chunk_k, chunk_v)
+            took = primary.active.put_batch(chunk_k, chunk_v)
+            assert took == take, "memtable admitted less than its room"
+            n_ok += took
+            primary.stats["deletes" if deletes else "puts"] += took
+            if self._indexes:
+                self._fault("post-primary-pre-index")
+                self._maintain_indexes(chunk_k, chunk_v, deletes,
+                                       old_found, old_vals)
+        primary.stats["logical_bytes"] += n_ok * ENTRY_BYTES
+        if self._recorder is not None and n > 0:
+            self._recorder.on_puts(n_ok, n)
+        return n_ok
+
+    def _chunk_old_values(self, ck, cv, deletes: bool):
+        """Pre-admission old values for one chunk (eager maintenance):
+        first occurrences of each key probe the primary (one batched
+        fused-probe lookup); later intra-chunk occurrences take the
+        previous occurrence's NEW value in chunk order — exactly what a
+        per-entry sequential maintainer would have seen."""
+        primary = self.trees[0]
+        n = len(ck)
+        order = np.argsort(ck, kind="stable")
+        sk = ck[order]
+        same = np.zeros(n, bool)
+        if n > 1:
+            same[1:] = sk[1:] == sk[:-1]
+        dup_pos = np.flatnonzero(same)
+        dup = np.zeros(n, bool)
+        dup[order[dup_pos]] = True
+        firsts = np.flatnonzero(~dup)
+        old_found = np.zeros(n, bool)
+        old_vals = np.zeros(n, np.int32)
+        if len(firsts):
+            pf, pv = primary.get_batch_locked(ck[firsts])
+            old_found[firsts] = pf
+            old_vals[firsts] = pv
+        if len(dup_pos):
+            src = order[dup_pos - 1]     # previous occurrence, chunk order
+            dst = order[dup_pos]
+            if deletes:
+                old_found[dst] = False   # already deleted by the earlier
+                                         # entry of this chunk
+            else:
+                old_found[dst] = True
+                old_vals[dst] = cv[src]
+        return old_found, old_vals
+
+    @staticmethod
+    def _check_attrs(attrs: np.ndarray, name: str) -> None:
+        if (attrs == SENTINEL_KEY).any():
+            raise ValueError(f"index {name!r}: attribute 2**32-1 is "
+                             "reserved (pick an extract that avoids it)")
+
+    def _maintain_indexes(self, ck, cv, deletes: bool,
+                          old_found, old_vals) -> None:
+        """Apply one admitted primary chunk to every index tree.  Eager:
+        the NET index mutation of the chunk is computed sequentially
+        (insertion-ordered stale-deletes and inserts, later entries
+        overriding earlier ones exactly like a per-entry maintainer),
+        then admitted as one tombstone frame + one insert frame — frame
+        order makes newest-wins resolve del-then-add correctly.  Lazy:
+        one blind ``attr -> pk`` frame per put chunk, nothing on
+        deletes."""
+        pks = ck.astype(np.int32)
+        for st in self._indexes.values():
+            tree = self.trees[st.tree_id]
+            if st.mode == "lazy":
+                if deletes:
+                    continue
+                attrs = np.asarray(st.extract(cv), np.uint32)
+                self._check_attrs(attrs, st.name)
+                base = self._wal_log(st.tree_id, attrs, pks)
+                tree.force_admit(attrs, pks, base)
+                tree.stats["puts"] += len(attrs)
+                continue
+            new_attrs = None
+            if not deletes:
+                new_attrs = np.asarray(st.extract(cv), np.uint32)
+                self._check_attrs(new_attrs, st.name)
+            old_attrs = np.asarray(st.extract(old_vals), np.uint32)
+            dels: dict[int, None] = {}
+            adds: dict[int, int] = {}
+            for i in range(len(ck)):
+                a_old = int(old_attrs[i]) if old_found[i] else None
+                if deletes:
+                    if a_old is not None:
+                        adds.pop(a_old, None)
+                        dels[a_old] = None
+                else:
+                    a_new = int(new_attrs[i])
+                    if a_old is not None and a_old != a_new:
+                        adds.pop(a_old, None)
+                        dels[a_old] = None
+                    adds[a_new] = int(pks[i])
+            if dels:
+                dk = np.fromiter(dels.keys(), np.uint32, len(dels))
+                dv = np.full(len(dels), TOMBSTONE, np.int32)
+                base = self._wal_log(st.tree_id, dk, dv)
+                tree.force_admit(dk, dv, base)
+                tree.stats["deletes"] += len(dels)
+            if adds:
+                ak = np.fromiter(adds.keys(), np.uint32, len(adds))
+                av = np.fromiter(adds.values(), np.int64,
+                                 len(adds)).astype(np.int32)
+                base = self._wal_log(st.tree_id, ak, av)
+                tree.force_admit(ak, av, base)
+                tree.stats["puts"] += len(adds)
+
+    # ------------------------------------------------------------- WAL
+    def _wal_log(self, tree: int, keys, vals) -> int:
+        """Append one admitted chunk as one tree-tagged WAL frame (the
+        group-commit unit) BEFORE memtable admission, hit the
+        ack-unknown crash point, and group-commit when enough entries
+        accumulated.  Returns the frame's base LSN (the global clock
+        advances even without a WAL)."""
+        base = self._lsn
+        if self.wal is None:
+            self._lsn += len(keys)
+            return base
+        base = self.wal.append(keys, vals, tree=tree)
+        self._lsn = self.wal.end_lsn
+        self._wal_stats["wal_entries"] += len(keys)
+        self._fault("post-wal-pre-memtable")
+        if self.wal.unsynced_entries >= self.group_commit_entries:
+            self._wal_sync()
+        return base
+
+    def _wal_sync(self) -> None:
+        """fsync the WAL and charge the synced traffic (entries plus the
+        fixed ``wal_sync_cost`` seek charge) to the group's WAL debt —
+        repaid from pump budget before ANY tree's flushes/merges, so
+        durability I/O competes with compaction for the configured
+        bandwidth."""
+        if self.wal is None:
+            return
+        n = self.wal.unsynced_entries
+        if n <= 0:
+            return
+        self.wal.sync()
+        self._wal_debt += n + self.wal_sync_cost
+        self._wal_stats["wal_bytes"] += n * ENTRY_BYTES
+        self._wal_stats["wal_syncs"] += 1
+
+    # ------------------------------------------------------------------ read
+    def get(self, key: int):
+        found, vals = self.get_batch(np.array([key], np.uint32))
+        return int(vals[0]) if found[0] else None
+
+    def get_batch(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Primary-tree point reads (see ``LSMTree.get_batch_locked``):
+        one fused multi-table Bloom probe behind a newest-first walk with
+        early exit.  Thread-safe under the group lock."""
+        keys = np.asarray(keys, np.uint32)
+        with self._rlock:
+            return self.trees[0].get_batch_locked(keys)
+
+    def _get_batch_locked(self, keys):
+        return self.trees[0].get_batch_locked(keys)
+
+    def scan_range(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Primary-tree newest-wins range scan (one k-way merge)."""
+        return self.trees[0].scan_range(lo, hi)
+
+    def scan_runs(self, lo: int, hi: int) -> list[tuple[np.ndarray,
+                                                        np.ndarray]]:
+        """Locked snapshot of the primary tree's per-run ``[lo, hi)``
+        windows, newest first, merge NOT applied — the fleet router
+        gathers these across shards into ONE flat k-way merge.  The
+        returned windows may alias live storage: callers must not write
+        through them."""
+        with self._rlock:
+            return self.trees[0]._scan_runs(lo, hi)
+
+    def scan_range_dict(self, lo: int, hi: int) -> dict[int, int]:
+        """Dict-compat wrapper over ``scan_range`` (the seed's contract)."""
+        ks, vs = self.scan_range(lo, hi)
+        return dict(zip(ks.tolist(), vs.tolist()))
+
+    # --------------------------------------------------------- index reads
+    def index_lookup(self, name: str,
+                     attrs) -> tuple[np.ndarray, np.ndarray]:
+        """Attribute -> primary-key lookup through the index tree.
+        Returns ``(found, pks)`` (pks as uint32 keys).  Eager indexes
+        answer from the index tree alone (it is exact); lazy indexes
+        VALIDATE every candidate against the primary — the entry counts
+        only if the primary's current value still maps to the queried
+        attribute."""
+        st = self._indexes[name]
+        attrs = np.asarray(attrs, np.uint32)
+        with self._rlock:
+            tree = self.trees[st.tree_id]
+            found, pk_vals = tree.get_batch_locked(attrs)
+            found = found.copy()
+            if st.mode == "lazy" and found.any():
+                idx = np.flatnonzero(found)
+                pf, pv = self.trees[0].get_batch_locked(
+                    pk_vals[idx].astype(np.uint32))
+                valid = pf & (np.asarray(st.extract(pv), np.uint32)
+                              == attrs[idx])
+                found[idx] = valid
+            pks = np.where(found, pk_vals, 0).astype(np.int32)
+        return found, pks.astype(np.uint32)
+
+    def get_by_index(self, name: str,
+                     attrs) -> tuple[np.ndarray, np.ndarray]:
+        """Index-to-primary point read: resolve attributes to primary
+        keys, then fetch the primary VALUES.  Returns ``(found,
+        values)``."""
+        with self._rlock:
+            found, pks = self.index_lookup(name, attrs)
+            vals = np.zeros(len(found), np.int32)
+            idx = np.flatnonzero(found)
+            if idx.size:
+                pf, pv = self.trees[0].get_batch_locked(pks[idx])
+                found = found.copy()
+                found[idx] = pf
+                vals[idx] = pv
+        return found, vals
+
+    def index_scan(self, name: str, lo: int,
+                   hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Attribute-range scan ``lo <= attr < hi`` over the index tree.
+        Returns sorted ``(attrs, pks)``.  For an EAGER index this is a
+        COVERING scan — one k-way merge over the index tree, no primary
+        access.  A LAZY index validates every scanned entry against the
+        primary (batched)."""
+        st = self._indexes[name]
+        tree = self.trees[st.tree_id]
+        with self._rlock:
+            attrs, pk_vals = tree.scan_range(lo, hi)
+            if st.mode == "lazy" and len(attrs):
+                pf, pv = self.trees[0].get_batch_locked(
+                    pk_vals.astype(np.uint32))
+                keep = pf & (np.asarray(st.extract(pv), np.uint32) == attrs)
+                attrs, pk_vals = attrs[keep], pk_vals[keep]
+        return attrs, pk_vals.astype(np.uint32)
+
+    # ------------------------------------------------------- background I/O
+    def pump(self, budget_entries: int) -> int:
+        """Advance background work by ``budget_entries`` of write I/O —
+        one group epoch: sync the WAL and repay its debt first, then
+        split the remainder ACROSS TREES by background debt
+        (largest-remainder apportionment); each tree spends its quantum
+        on flushes (strict priority) then merges per its scheduler.
+        Returns entries actually charged."""
+        with self._rlock:
+            return self._pump_locked(budget_entries)
+
+    def _pump_locked(self, budget_entries: int) -> int:
+        spent = 0
+        self.now += 1.0
+        # every pump is an fsync-epoch boundary: sync the WAL first so
+        # its traffic lands in the group debt and is repaid below, ahead
+        # of every tree — durability shares the bandwidth budget
+        self._wal_sync()
+        repay = min(self._wal_debt, budget_entries)
+        self._wal_debt -= repay
+        spent += repay
+        remaining = budget_entries - spent
+        if remaining > 0:
+            debts = []
+            for t in self.trees:
+                d = t.pending_entries()
+                if d > 0:
+                    debts.append((t.tree_id, d))
+            if len(debts) == 1:
+                spent += self.trees[debts[0][0]].pump_tree(remaining)
+            elif debts:
+                total = float(sum(d for _, d in debts))
+                quanta = apportion_largest_remainder(
+                    [(tid, d / total) for tid, d in debts], remaining)
+                for (tid, _), q in zip(debts, quanta):
+                    if q > 0:
+                        spent += self.trees[tid].pump_tree(q)
+        for t in self.trees:
+            t._refresh_stall()
+        return spent
+
+    def drain(self, budget_entries: int = 1 << 30, max_pumps: int = 10_000):
+        """Pump until no background work remains on ANY tree
+        (tests/shutdown)."""
+        with self._rlock:
+            for _ in range(max_pumps):
+                busy = False
+                for t in self.trees:
+                    t._collect_merges()
+                    busy = busy or t.sealed or t.running
+                if not busy:
+                    break
+                self.pump(budget_entries)
+
+    # --------------------------------------------- legacy engine surface
+    # (the 1-tree API every existing caller uses: delegates to the
+    # primary tree / sums over trees — bit-identical for one tree)
+    @property
+    def policy(self) -> MergePolicy:
+        return self.trees[0].policy
+
+    @policy.setter
+    def policy(self, p: MergePolicy) -> None:
+        self.trees[0].policy = p
+
+    @property
+    def scheduler(self) -> MergeScheduler:
+        return self.trees[0].scheduler
+
+    @scheduler.setter
+    def scheduler(self, s: MergeScheduler) -> None:
+        self.trees[0].scheduler = s
+
+    @property
+    def constraint(self) -> ComponentConstraint:
+        return self.trees[0].constraint
+
+    @constraint.setter
+    def constraint(self, c: ComponentConstraint) -> None:
+        self.trees[0].constraint = c
+
+    @property
+    def tree(self) -> ComponentTree:
+        """The PRIMARY tree's scheduling-plane model (legacy name)."""
+        return self.trees[0].meta
+
+    @property
+    def memtable_entries(self) -> int:
+        return self.trees[0].memtable_entries
+
+    @property
+    def num_memtables(self) -> int:
+        return self.trees[0].num_memtables
+
+    @property
+    def active(self) -> MemTable:
+        return self.trees[0].active
+
+    @property
+    def sealed(self) -> list:
+        return self.trees[0].sealed
+
+    @property
+    def tables(self) -> dict:
+        return self.trees[0].tables
+
+    @property
+    def running(self) -> dict:
+        return self.trees[0].running
+
+    @property
+    def pending_flush(self) -> list:
+        return self.trees[0].pending_flush
+
+    @property
+    def stalled(self) -> bool:
+        return self.trees[0].stalled
+
+    @property
+    def _order(self) -> list:
+        return self.trees[0]._order
+
+    @property
+    def _fstack(self) -> _FilterStack:
+        return self.trees[0]._fstack
+
+    @property
+    def _stamp(self) -> int:
+        return self.trees[0]._stamp
+
+    @property
+    def _flush_debt(self) -> int:
+        """Total budget debt: group WAL debt + every tree's flush debt
+        (the legacy engine kept one combined pot)."""
+        return self._wal_debt + sum(t._flush_debt for t in self.trees)
+
+    @property
+    def stats(self) -> dict:
+        """Merged counters: sum over trees plus the group's WAL
+        counters, in the legacy key order.  (A fresh dict per access —
+        hold no live reference.)"""
+        out = dict.fromkeys(_STATS_ORDER, 0)
+        for t in self.trees:
+            for k, v in t.stats.items():
+                out[k] += v
+        for k, v in self._wal_stats.items():
+            out[k] += v
+        return out
+
+    def seal_active(self) -> None:
+        self.trees[0].seal_active()
+
+    _seal_active = seal_active        # compat alias (pre-PR7 name)
+
+    def _refresh_stall(self) -> None:
+        for t in self.trees:
+            t._refresh_stall()
+
+    def _read_view(self) -> _ReadView:
+        return self.trees[0]._read_view()
+
+    def _view_filters(self, view: _ReadView):
+        return self.trees[0]._view_filters(view)
+
+    def _invalidate_view(self) -> None:
+        self.trees[0]._invalidate_view()
+
+    def _bind_table(self, table: SSTable) -> None:
+        self.trees[0]._bind_table(table)
+
+    def _collect_merges(self) -> None:
+        for t in self.trees:
+            t._collect_merges()
+
+    def _scan_runs(self, lo: int, hi: int):
+        return self.trees[0]._scan_runs(lo, hi)
+
+    # merge advance/finish dispatch per-merge via ``rm.tree`` (primary
+    # for hand-built cursors): every tree's pump routes its merges
+    # THROUGH these two entry points, so wrapping them on the engine
+    # instance instruments the whole group
+    def _open_merge(self, rm: _RunningMerge) -> None:
+        (rm.tree or self.trees[0])._open_merge(rm)
+
+    def _merge_cut(self, rm: _RunningMerge, target: int):
+        return (rm.tree or self.trees[0])._merge_cut(rm, target)
+
+    def _tombstone_drop_safe(self, rm: _RunningMerge) -> bool:
+        return (rm.tree or self.trees[0])._tombstone_drop_safe(rm)
+
+    def _advance_merge(self, rm: _RunningMerge, quantum: int) -> int:
+        return (rm.tree or self.trees[0])._advance_merge(rm, quantum)
+
+    def _finish_merge(self, rm: _RunningMerge) -> None:
+        (rm.tree or self.trees[0])._finish_merge(rm)
+
+    _order_key = staticmethod(LSMTree._order_key)
+    _merge_kway_host = staticmethod(merge_kway_host)
+
     # ------------------------------------------------------------------ info
     def lock(self) -> threading.RLock:
-        """The engine's reentrant lock (see module docstring): the
+        """The group's reentrant lock (see module docstring): the
         ``BackgroundDriver`` holds it around ``pump``; foreground callers
-        sharing an engine with a driver must hold it around every engine
+        sharing a group with a driver must hold it around every engine
         call (``with engine.lock(): ...``)."""
         return self._rlock
 
     def num_components(self) -> int:
         with self._rlock:
-            return self.tree.num_components()
+            return sum(t.num_components() for t in self.trees)
 
     def total_entries(self) -> int:
         with self._rlock:
-            return sum(len(t) for t in self.tables.values()) + \
-                sum(len(m) for m in self.sealed) + len(self.active)
+            return sum(t.total_entries() for t in self.trees)
 
     def pending_background_entries(self) -> int:
-        """Background I/O debt in entries: outstanding flush-quantum debt,
-        sealed memtables awaiting flush, and the unconsumed inputs of
-        every running merge (plus merges the policy would start right
-        now).  This is the per-shard 'pending debt' the fleet's
-        ``GlobalBudgetArbiter`` apportions the global budget by."""
+        """Background I/O debt in entries across the WHOLE group: WAL
+        debt plus every tree's flush debt, sealed memtables and
+        unconsumed merge inputs.  This is the per-shard 'pending debt'
+        the fleet's ``GlobalBudgetArbiter`` apportions the global budget
+        by — and, within a group, what each pump epoch is split by."""
         with self._rlock:
-            self._collect_merges()
-            pending = self._flush_debt + sum(len(m) for m in self.sealed)
-            for rm in self.running.values():
-                if rm.lens is not None:       # streaming cursor open
-                    pending += int((rm.lens - rm.cursors).sum())
-                elif rm.merged_keys is not None:   # one-shot materialized
-                    pending += len(rm.merged_keys) - rm.cursor
-                else:
-                    pending += sum(len(t) for t in rm.inputs)
-            return pending
+            return self._wal_debt + sum(t.pending_entries()
+                                        for t in self.trees)
 
     # ----------------------------------------------- durability lifecycle
     @property
     def flushed_lsn(self) -> int:
-        """First LSN NOT yet captured in on-disk SSTables — the WAL
-        replay origin a snapshot records.  Memtables are flushed FIFO and
-        filled in LSN order, so everything below the oldest unflushed
-        memtable's ``start_lsn`` lives in SSTables."""
-        return self.sealed[0].start_lsn if self.sealed \
-            else self.active.start_lsn
+        """First LSN NOT yet captured in on-disk SSTables, over ALL
+        trees (the minimum of the per-tree origins) — the WAL
+        truncation point a snapshot records."""
+        return min(t.flushed_lsn for t in self.trees)
 
     def snapshot(self, store) -> dict:
-        """Persist the durable view: fsync the WAL, save every live
-        SSTable plus metadata atomically through ``store``
-        (``checkpoint.EngineSnapshotStore``), then drop WAL frames whose
-        entries are all captured by the saved tables.  Returns the
-        manifest dict."""
+        """Persist the durable view: fsync the WAL, save every tree's
+        live SSTables plus per-tree metadata atomically through
+        ``store`` (``checkpoint.EngineSnapshotStore``), then drop whole
+        WAL segments whose entries are all captured by the saved tables.
+        Returns the manifest dict."""
         with self._rlock:
             self._wal_sync()
             manifest = store.save(self)
@@ -1262,90 +1780,63 @@ class LSMEngine:
             return manifest
 
     def restore_tables(self, tables, snap: dict) -> int:
-        """Rebuild the read view from a snapshot (the recovery path):
-        re-bind each saved run at its recorded (stamp, level) rank —
-        ``_order`` re-sorts once, the filter stack rebuilds lazily on the
-        first probe — and restore the clocks.  Returns the snapshot's
-        ``flushed_lsn`` (the WAL replay origin)."""
+        """Legacy single-tree restore (the multi-tree path goes through
+        ``RecoverySession`` -> ``LSMTree.restore_tables`` per tree):
+        rebuild the PRIMARY tree's read view and the group clock.
+        Returns the snapshot's ``flushed_lsn``."""
         with self._rlock:
-            for keys, vals, meta in tables:
-                t = SSTable.build(keys, vals, level=int(meta["level"]),
-                                  created_at=float(meta["created_at"]),
-                                  interpret=self.interpret)
-                t.data_stamp = int(meta["stamp"])
-                t.component.stamp = float(meta["stamp"])
-                self.tree.add(t.component)
-                self.tables[t.component.cid] = t
-                self._order.append(t)
-            self._order.sort(key=self._order_key)
-            self._stamp = max(self._stamp, int(snap.get("stamp", 0)),
-                              max((t.data_stamp for t in self._order),
-                                  default=0))
+            out = self.trees[0].restore_tables(tables, snap)
             self.now = max(self.now, float(snap.get("now", 0.0)))
-            self._invalidate_view()
-            return int(snap.get("flushed_lsn", 0))
+            return out
 
     def begin_replay(self, lsn: int) -> None:
-        """Position the engine at WAL offset ``lsn`` before replay: the
-        next admitted entry (via ``replay_admit``) is entry ``lsn`` of
-        the admitted-write history."""
+        """Position the group at WAL offset ``lsn`` before replay: the
+        next admitted entry is entry ``lsn`` of the admitted-write
+        history.  (``RecoverySession`` then raises individual trees'
+        memtable origins to their own snapshot frontiers.)"""
         with self._rlock:
             self._lsn = int(lsn)
-            self.active.start_lsn = self._lsn
+            for t in self.trees:
+                t.active.start_lsn = self._lsn
 
     def replay_admit(self, keys, vals) -> int:
-        """Recovery-only admission: entries already durable in the WAL
-        re-enter the memtable plane WITHOUT re-logging and WITHOUT
-        constraint stalls (recovery must not deadlock on a shape
-        constraint mid-rebuild).  Callers size chunks to the active
-        memtable's room (``RecoverySession`` does)."""
-        keys = np.asarray(keys, np.uint32)
-        vals = np.asarray(vals, np.int32)
+        """Legacy recovery admission into the PRIMARY tree (no
+        re-logging, no constraint stalls), advancing the group LSN.
+        Multi-tree replay uses ``LSMTree.replay_admit`` per frame with
+        session-managed LSNs instead."""
         with self._rlock:
-            if self.active.full:
-                self.seal_active()
-            took = self.active.put_batch(keys, vals)
-            assert took == len(keys), "replay chunk exceeded memtable room"
+            took = self.trees[0].replay_admit(keys, vals)
             self._lsn += took
-            self.stats["replayed"] += took
             return took
 
     def compact_all(self, budget_per_pump: int = 1 << 30) -> None:
-        """Force-merge the whole store into one bottom run: flush every
-        memtable, drain policy merges, then merge ALL live tables to the
-        deepest level in one op — no older run can overlap it, so every
-        tombstone is reclaimed.  This is the space-amp floor the
-        durability tests pin (delete-all then compact_all -> ~0 live
-        entries)."""
+        """Force-merge every tree into one bottom run: flush every
+        memtable, drain policy merges, then merge ALL live tables per
+        tree to the deepest level in one op — no older run can overlap
+        it, so every tombstone is reclaimed.  This is the space-amp
+        floor the durability tests pin."""
         with self._rlock:
-            if len(self.active):
-                self.seal_active()
+            for t in self.trees:
+                if len(t.active):
+                    t.seal_active()
             self.drain(budget_per_pump)
-            live = list(self._order)
-            if not live:
-                return
-            if len(live) == 1 and \
-                    int((live[0]._host()[1] == TOMBSTONE).sum()) == 0:
-                return            # already one run with nothing to drop
-            comps = [t.component for t in live]
-            op = MergeOp(inputs=comps,
-                         output_level=max(self.tree.max_level(),
-                                          max(c.level for c in comps)),
-                         output_size=float(sum(len(t) for t in live)))
-            self.running[op.op_id] = _RunningMerge(op=op, inputs=live)
-            self.drain(budget_per_pump)
+            started = False
+            for t in self.trees:
+                started = t.start_full_merge() or started
+            if started:
+                self.drain(budget_per_pump)
 
     def live_entries(self) -> int:
-        """Distinct keys whose newest version is NOT a tombstone — the
-        logical data size behind ``space_amp`` (an O(n) full-range
-        scan)."""
-        return int(len(self.scan_range(0, 0xFFFFFFFF)[0]))
+        """Distinct keys whose newest version is NOT a tombstone, summed
+        over trees (an O(n) full-range scan per tree)."""
+        return sum(t.live_entries() for t in self.trees)
 
     def amplification(self) -> dict:
         """Write/space amplification snapshot (see
         ``metrics.amplification_stats``): bytes written by flush + merge
-        + WAL over logical bytes ingested, and physical entries stored
-        over live entries."""
+        + WAL over logical bytes ingested (index maintenance counts in
+        the numerator, not the denominator — it IS amplification), and
+        physical entries stored over live entries, across all trees."""
         from .metrics import amplification_stats
         with self._rlock:
             return amplification_stats(self.stats,
@@ -1354,17 +1845,25 @@ class LSMEngine:
 
     def close(self) -> None:
         """Graceful shutdown: fsync and release the WAL (no-op without
-        one).  The engine object stays readable afterwards; only the
-        durability plane is closed."""
+        one).  The group stays readable afterwards; only the durability
+        plane is closed."""
         with self._rlock:
             if self.wal is not None:
                 self.wal.close()
 
-    def __enter__(self) -> "LSMEngine":
+    def __enter__(self) -> "StorageGroup":
         return self
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class LSMEngine(StorageGroup):
+    """A single-partition LSM store (uint32 keys -> int32 values): the
+    1-tree ``StorageGroup`` — the engine every pre-split caller
+    constructs.  Secondary indexes can still be declared (``indexes=``
+    or ``add_index``); a bare construction is bit-identical to the
+    pre-split single-tree engine."""
 
 
 class BackgroundDriver:

@@ -25,6 +25,11 @@ Crash points::
     mid-snapshot          between two table files of a snapshot save
                           (the manifest is not yet committed, so
                           recovery must use the previous snapshot)
+    post-primary-pre-index  a write batch has been WAL-logged and
+                          admitted to the PRIMARY tree but its eager
+                          index maintenance has not run (multi-tree
+                          groups only — recovery must rebuild index
+                          consistency from the tree-tagged WAL frames)
 
 The differential contract (``tests/test_durability.py`` pins it across
 every crash point x {tiering, leveling, partitioned} x {single engine,
@@ -47,7 +52,7 @@ import numpy as np
 from .memtable import TOMBSTONE
 
 CRASH_POINTS = ("pre-flush", "mid-merge-quantum", "post-wal-pre-memtable",
-                "mid-snapshot")
+                "mid-snapshot", "post-primary-pre-index")
 
 
 class SimulatedCrash(RuntimeError):
@@ -92,19 +97,22 @@ class FaultInjector:
 
 
 def apply_torn_tail(wal, frac: float) -> int:
-    """Crash the WAL file: close its handle WITHOUT syncing, then keep
-    the synced prefix plus ``frac`` of the unsynced appended bytes
-    (``frac`` in [0, 1]; a mid-frame cut is expected — reopening
-    validates frame CRCs and drops the remainder).  Returns the surviving
-    byte length.  The ``wal`` object is dead afterwards; reopen the path
-    with a fresh ``WriteAheadLog`` to recover."""
+    """Crash the WAL: close its handle WITHOUT syncing, then keep the
+    synced prefix plus ``frac`` of the unsynced appended bytes (``frac``
+    in [0, 1]; a mid-frame cut is expected — reopening validates frame
+    CRCs and drops the remainder).  Only the TAIL segment can tear:
+    sealed segments were fsynced at rotation, so the cut lands in
+    ``wal.tail_path`` alone.  Returns the total surviving byte length
+    across all segments.  The ``wal`` object is dead afterwards; reopen
+    the path with a fresh ``WriteAheadLog`` to recover."""
     if not 0.0 <= frac <= 1.0:
         raise ValueError("frac must be in [0, 1]")
     wal.abort()
-    keep = wal.synced_bytes + int(round(
-        frac * (wal.written_bytes - wal.synced_bytes)))
-    os.truncate(wal.path, keep)
-    return keep
+    sealed_bytes = wal.written_bytes - wal.tail_written_bytes
+    tail_keep = wal.tail_synced_bytes + int(round(
+        frac * (wal.tail_written_bytes - wal.tail_synced_bytes)))
+    os.truncate(wal.tail_path, tail_keep)
+    return sealed_bytes + tail_keep
 
 
 # ---------------------------------------------------------------------------

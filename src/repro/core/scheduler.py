@@ -26,10 +26,12 @@ def apportion_largest_remainder(shares: Sequence[tuple[int, float]],
 
     ``shares`` is a sequence of ``(id, fraction)`` pairs (fractions sum
     to <= 1); the returned quanta align with ``shares`` and always sum to
-    at most ``budget``.  Shared by ``LSMEngine.pump`` (merge quanta
-    within one engine) and the fleet's ``GlobalBudgetArbiter`` (shard
-    budgets across engines), so the sub-1-share starvation fix lives in
-    exactly one place."""
+    at most ``budget``.  Shared by three budget-splitting layers — merge
+    quanta within one tree (``LSMTree.pump_tree``), the pump epoch
+    across a ``StorageGroup``'s trees (primary + secondary indexes,
+    split by background debt), and the fleet's ``GlobalBudgetArbiter``
+    (shard budgets across engines) — so the sub-1-share starvation fix
+    lives in exactly one place."""
     if not shares or budget <= 0:
         return [0] * len(shares)
     targets = [budget * frac for _, frac in shares]

@@ -138,6 +138,13 @@ class EngineSystem:
     key_space: int = 1 << 20           # uniform workload key universe
     max_batch: int = 1 << 15           # cap on a single put_batch call
     last_engine: LSMEngine | None = None   # engine of the most recent run
+    # Optional write-rate controller (the paper's fig 27 ``cap(t) =
+    # C/(a + b*n_components)`` law): called each tick as
+    # ``controller(t, engine)`` under the engine lock and returns the
+    # instantaneous insert-capacity ceiling in entries/s; the effective
+    # capacity is ``min(write_capacity, controller(t, eng))``.  None
+    # (default) keeps the uncontrolled constant-capacity model.
+    write_controller: Callable[[float, LSMEngine], float] | None = None
 
     @property
     def write_capacity(self) -> float:
@@ -189,8 +196,12 @@ class EngineSystem:
                 # drains at ``capacity`` — never in one giant batch.  The
                 # 1.0 floor lets sub-entry-per-tick capacities accumulate
                 # to whole entries instead of rounding to zero forever.
-                admit_credit = min(admit_credit + capacity * dt,
-                                   max(capacity * dt, 1.0))
+                cap_t = capacity
+                if self.write_controller is not None:
+                    with lock:
+                        cap_t = min(capacity, self.write_controller(t, eng))
+                admit_credit = min(admit_credit + cap_t * dt,
+                                   max(cap_t * dt, 1.0))
                 if client.closed:
                     offer = int(min(admit_credit, self.max_batch))
                 else:

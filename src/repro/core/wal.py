@@ -1,56 +1,72 @@
 """Write-ahead log + crash recovery for the real engine (the durability
 plane).
 
-The WAL is a single append-only file of CRC-framed record batches.  One
-``append`` call writes one frame — the group-commit unit: the engine
-appends each admitted ``put_batch`` chunk as one frame BEFORE the
-memtable admits it, so every acknowledged write is in the OS file
+The WAL is a sequence of fixed-size SEGMENT files of CRC-framed record
+batches, shared by every tree of a ``StorageGroup`` (the single-tree
+``LSMEngine`` is the 1-tree case).  One ``append`` call writes one frame
+— the group-commit unit: the group appends each admitted chunk (primary
+write, or the index-maintenance entries it induces) as one frame BEFORE
+the memtable admits it, so every acknowledged write is in the OS file
 buffer, and is durable once ``sync`` (fsync) runs.  Group commit is the
-engine's knob (``group_commit_entries``): syncs happen when enough
+group's knob (``group_commit_entries``): syncs happen when enough
 entries accumulate, and unconditionally at every ``pump`` epoch — the
 fsync-epoch boundary — with the synced bytes charged against the
 scheduler's I/O budget, so WAL traffic competes with flushes and merges
-for the same bandwidth (the paper's single-SSD write-budget model;
-commit-path batching trades durability latency against that budget,
-exactly the interaction Luo & Carey's ingestion study measures).
+for the same bandwidth (the paper's single-SSD write-budget model).
 
 Frame layout (little-endian)::
 
-    u32 magic | u32 n_entries | u64 base_lsn | u32 crc32(payload)
+    u32 magic | u32 n_entries | u32 tree | u64 base_lsn | u32 crc32(payload)
     payload: n_entries * (u32 key, i32 val)
 
-LSNs number logical entries from the log's creation, monotonically,
-across truncations.  Tombstones need no flag: a record whose value is
-the reserved ``TOMBSTONE`` sentinel IS the delete (the same encoding
-the memtable/SSTable/merge planes carry).
+``tree`` is the owning tree's id within the group (0 = the primary;
+secondary-index trees get 1..N).  LSNs are GLOBAL across trees: they
+number logical entries in group admission order, monotonically, across
+truncations — so one log totally orders the interleaved multi-tree
+history, which is what makes multi-tree recovery a PREFIX property.
+Tombstones need no flag: a record whose value is the reserved
+``TOMBSTONE`` sentinel IS the delete (the same encoding the
+memtable/SSTable/merge planes carry).
 
-Crash semantics: on open, the file is scanned frame-by-frame; the first
-frame with a bad magic, an impossible length, a CRC mismatch, or a
-non-contiguous ``base_lsn`` ends the valid prefix, and the file is
-truncated there — a torn tail (a crash mid-write, or the fault
-harness's deliberate mid-frame cut) silently costs the entries past the
-last complete frame, never correctness.  Everything fsynced before the
-crash is always inside the valid prefix; unsynced-but-buffered frames
-may or may not survive (page-cache reality, modeled by
-``faults.apply_torn_tail``).
+Segmentation: frames append to the TAIL segment; once a segment holds
+``segment_entries`` logical entries it is fsynced and sealed, and a new
+tail opens (``<path>`` is segment 0, rotated segments are
+``<path>.NNNNNN``).  Because rotation fsyncs, unsynced bytes only ever
+live in the tail — so a torn tail (crash mid-write) can only damage the
+LAST segment, and the scan-on-open truncation never touches sealed
+segments.  ``truncate_upto`` drops whole sealed segment files whose
+entries all precede the cutoff — an O(1) unlink per segment, never a
+rewrite of the log — and keeps a straddling segment whole (replay skips
+its already-flushed prefix), so ``start_lsn <= flushed_lsn`` after a
+snapshot rather than exact equality.
 
-Recovery (``RecoverySession``) restores the snapshot's SSTables (see
-``checkpoint.store.EngineSnapshotStore``), then replays the WAL suffix
-from the snapshot's ``flushed_lsn`` into fresh memtables in LSN order —
-admission without re-logging and without constraint stalls.  Replay is
+Crash semantics: on open, segments are scanned in order frame-by-frame;
+the first frame with a bad magic, an impossible length, a CRC mismatch,
+or a non-contiguous ``base_lsn`` ends the valid prefix — that file is
+truncated there and every later segment file is deleted.  Everything
+fsynced before the crash is always inside the valid prefix;
+unsynced-but-buffered frames may or may not survive (page-cache
+reality, modeled by ``faults.apply_torn_tail``, which only ever cuts
+the tail segment).
+
+Recovery (``RecoverySession``) restores the snapshot's per-tree
+SSTables (see ``checkpoint.store.EngineSnapshotStore``), then replays
+the WAL suffix from the minimum per-tree ``flushed_lsn`` in GLOBAL LSN
+order, routing each frame to its tree id and skipping, inside a frame,
+the prefix already captured by that tree's snapshot.  Replay is
 BUDGETED: each replayed entry charges one entry of read I/O and
-replay-induced flushes/merges run through ``engine.pump`` on the same
-budget, so a starved bandwidth budget slows recovery measurably
-(``benchmarks/recovery.py`` pins this).  The recovered engine's read
-view is bit-identical to the pre-crash durable state: ``_order`` is
-rebuilt at its ``(-data_stamp, level)`` ranks and the Bloom filter
-stack rebuilds lazily on the first probe.
+replay-induced flushes/merges run through ``group.pump`` on the same
+budget (apportioned across trees by background debt), so a starved
+bandwidth budget slows recovery measurably (``benchmarks/recovery.py``
+pins this).  The recovered group's read view is bit-identical to the
+pre-crash durable state, tree by tree.
 """
 from __future__ import annotations
 
 import os
 import struct
 import zlib
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Optional
 
@@ -58,72 +74,129 @@ import numpy as np
 
 from .memtable import TOMBSTONE  # noqa: F401  (re-export: the WAL's delete encoding)
 
-WAL_MAGIC = 0x57414C31            # "WAL1"
-_HEADER = struct.Struct("<IIQI")  # magic, n_entries, base_lsn, crc32
+WAL_MAGIC = 0x57414C32            # "WAL2" (v1 had no tree id)
+_HEADER = struct.Struct("<IIIQI")  # magic, n_entries, tree, base_lsn, crc32
 REC_DTYPE = np.dtype([("key", "<u4"), ("val", "<i4")])
 
 
+@dataclass
+class _Segment:
+    """One on-disk log file: a contiguous LSN range of whole frames."""
+    path: Path
+    seq: int
+    entries: int = 0              # logical entries across its frames
+    nbytes: int = 0               # valid bytes on disk
+    end_lsn: int = 0              # first LSN after this segment
+
+
 class WriteAheadLog:
-    """Append-only CRC-framed record log with an explicit durability
-    boundary.
+    """Append-only CRC-framed record log, split into rotation segments,
+    with an explicit durability boundary.
 
     ``append`` writes one frame into the OS file (flushed, not fsynced);
-    ``sync`` fsyncs and advances the durable boundary
-    (``synced_bytes``/``synced_lsn``).  Opening an existing path scans
-    and validates the frames, truncates any torn tail, and positions
-    appends after the last valid frame; everything on disk at open is
-    treated as durable (it survived the crash by definition)."""
+    ``sync`` fsyncs the tail and advances the durable boundary
+    (``synced_bytes``/``synced_lsn``) — sealed segments are fsynced at
+    rotation, so they are always durable.  Opening an existing path
+    scans and validates the segment chain, truncates any torn tail
+    (deleting segments past a corrupt one), and positions appends after
+    the last valid frame; everything on disk at open is treated as
+    durable (it survived the crash by definition)."""
 
-    def __init__(self, path: str | os.PathLike):
+    def __init__(self, path: str | os.PathLike,
+                 segment_entries: int = 1 << 14):
         self.path = Path(path)
-        self._frames: list[tuple[int, np.ndarray]] = []  # (base_lsn, recs)
-        self.start_lsn = 0            # first LSN still present in the file
+        self.segment_entries = max(1, int(segment_entries))
+        self._frames: list[tuple[int, int, np.ndarray]] = []
+        #            (base_lsn, tree, recs) — global LSN order
+        self._segs: list[_Segment] = []
+        self.start_lsn = 0            # first LSN still present in the log
         self.end_lsn = 0              # next LSN to be appended
-        valid = 0
-        if self.path.exists():
-            valid = self._scan()
-            if self.path.stat().st_size > valid:
-                os.truncate(self.path, valid)       # drop the torn tail
-        self._f = open(self.path, "ab")
-        self.written_bytes = valid    # bytes in the OS file
-        self.synced_bytes = valid     # bytes known durable (fsynced)
+        self._next_seq = 0
+        self._scan_all()
+        if not self._segs:            # fresh log: segment 0 is ``path``
+            self._segs = [_Segment(self.path, 0, end_lsn=self.end_lsn)]
+            self._next_seq = 1
+        self._f = open(self._segs[-1].path, "ab")
+        self.written_bytes = sum(s.nbytes for s in self._segs)
+        self.synced_bytes = self.written_bytes  # on disk at open == durable
         self.synced_lsn = self.end_lsn
         self.syncs = 0
 
+    # ------------------------------------------------------------- layout
+    def _seg_path(self, seq: int) -> Path:
+        return self.path if seq == 0 else \
+            self.path.with_name(f"{self.path.name}.{seq:06d}")
+
+    def _discover(self) -> list[tuple[int, Path]]:
+        """Existing segment files, ordered by rotation sequence."""
+        found: list[tuple[int, Path]] = []
+        if self.path.exists():
+            found.append((0, self.path))
+        if self.path.parent.exists():
+            for p in self.path.parent.glob(self.path.name + ".*"):
+                suffix = p.name[len(self.path.name) + 1:]
+                if suffix.isdigit():
+                    found.append((int(suffix), p))
+        return sorted(found)
+
     # ------------------------------------------------------------- scanning
-    def _scan(self) -> int:
-        """Validate frames from the start; populate ``_frames`` and the
-        LSN bounds.  Returns the byte length of the valid prefix."""
-        data = self.path.read_bytes()
-        off = 0
-        first = True
-        while off + _HEADER.size <= len(data):
-            magic, n, base, crc = _HEADER.unpack_from(data, off)
-            end = off + _HEADER.size + n * REC_DTYPE.itemsize
-            if magic != WAL_MAGIC or n == 0 or end > len(data):
+    def _scan_all(self) -> None:
+        """Validate the segment chain from the start; populate
+        ``_frames``/``_segs`` and the LSN bounds.  The first invalid
+        frame ends the valid prefix: its file is truncated there and
+        every later segment file is deleted (unsynced bytes only ever
+        live in the tail, so sealed segments can only be cut by real
+        corruption — which still ends the prefix, never correctness)."""
+        found = self._discover()
+        if found:
+            self._next_seq = found[-1][0] + 1
+        lsn: Optional[int] = None
+        cut_at: Optional[int] = None
+        for i, (seq, p) in enumerate(found):
+            data = p.read_bytes()
+            off = 0
+            n_in_seg = 0
+            seg_frames: list[tuple[int, int, np.ndarray]] = []
+            while off + _HEADER.size <= len(data):
+                magic, n, tree, base, crc = _HEADER.unpack_from(data, off)
+                end = off + _HEADER.size + n * REC_DTYPE.itemsize
+                if magic != WAL_MAGIC or n == 0 or end > len(data):
+                    break
+                payload = data[off + _HEADER.size:end]
+                if zlib.crc32(payload) != crc:
+                    break
+                if lsn is None:
+                    self.start_lsn = base
+                elif base != lsn:                      # non-contiguous
+                    break
+                lsn = base + n
+                seg_frames.append((base, tree,
+                                   np.frombuffer(payload, REC_DTYPE)))
+                n_in_seg += n
+                off = end
+            if off > 0:
+                self._frames.extend(seg_frames)
+                self._segs.append(_Segment(p, seq, n_in_seg, off, lsn or 0))
+            if off < len(data) or len(data) == 0:
+                if off < len(data):
+                    os.truncate(p, off)                # drop the torn tail
+                elif off == 0:
+                    p.unlink(missing_ok=True)          # crashed-rotation husk
+                cut_at = i
                 break
-            payload = data[off + _HEADER.size:end]
-            if zlib.crc32(payload) != crc:
-                break
-            if first:
-                self.start_lsn = base
-                self.end_lsn = base
-                first = False
-            elif base != self.end_lsn:
-                break                                  # non-contiguous
-            recs = np.frombuffer(payload, REC_DTYPE)
-            self._frames.append((base, recs))
-            self.end_lsn = base + n
-            off = end
-        if first:
-            self.start_lsn = self.end_lsn = 0
-        return off
+        if cut_at is not None:
+            for seq, p in found[cut_at + 1:]:
+                p.unlink(missing_ok=True)
+        self.end_lsn = lsn if lsn is not None else 0
+        if lsn is None:
+            self.start_lsn = 0
 
     # ------------------------------------------------------------- writing
-    def append(self, keys, vals) -> int:
-        """Write one frame (the group-commit unit) into the OS file
-        buffer; returns the frame's base LSN.  NOT yet durable — durable
-        after the next ``sync``."""
+    def append(self, keys, vals, tree: int = 0) -> int:
+        """Write one frame (the group-commit unit) for ``tree`` into the
+        OS file buffer; returns the frame's base LSN.  NOT yet durable —
+        durable after the next ``sync``.  Rotates the tail segment once
+        it holds ``segment_entries`` logical entries."""
         keys = np.asarray(keys, np.uint32)
         vals = np.asarray(vals, np.int32)
         n = len(keys)
@@ -134,18 +207,39 @@ class WriteAheadLog:
         recs["val"] = vals
         payload = recs.tobytes()
         base = self.end_lsn
-        self._f.write(_HEADER.pack(WAL_MAGIC, n, base, zlib.crc32(payload)))
+        hdr = _HEADER.pack(WAL_MAGIC, n, int(tree), base,
+                           zlib.crc32(payload))
+        self._f.write(hdr)
         self._f.write(payload)
         self._f.flush()                       # to the OS, not to disk
-        self._frames.append((base, recs))
+        self._frames.append((base, int(tree), recs))
         self.end_lsn = base + n
-        self.written_bytes += _HEADER.size + len(payload)
+        tail = self._segs[-1]
+        tail.entries += n
+        tail.nbytes += len(hdr) + len(payload)
+        tail.end_lsn = self.end_lsn
+        self.written_bytes += len(hdr) + len(payload)
+        if tail.entries >= self.segment_entries:
+            self._rotate()
         return base
 
+    def _rotate(self) -> None:
+        """Seal the tail segment (fsync — after this, unsynced bytes can
+        only live in the NEW tail) and open the next one."""
+        self.sync()
+        self._f.close()
+        seq = self._next_seq
+        self._next_seq += 1
+        seg = _Segment(self._seg_path(seq), seq, end_lsn=self.end_lsn)
+        seg.path.unlink(missing_ok=True)       # stale crashed-rotation file
+        self._segs.append(seg)
+        self._f = open(seg.path, "ab")
+
     def sync(self) -> int:
-        """fsync: advance the durability boundary over everything
-        appended so far.  Returns the bytes made durable by this call
-        (0 when already clean)."""
+        """fsync the tail: advance the durability boundary over
+        everything appended so far (sealed segments were fsynced at
+        rotation).  Returns the bytes made durable by this call (0 when
+        already clean)."""
         delta = self.written_bytes - self.synced_bytes
         if delta > 0:
             self._f.flush()
@@ -164,13 +258,34 @@ class WriteAheadLog:
         """Logical entries currently in the log (post-truncation)."""
         return self.end_lsn - self.start_lsn
 
+    @property
+    def segments(self) -> int:
+        """Live segment files (the tail included)."""
+        return len(self._segs)
+
+    # -- tail introspection (the fault harness's torn-tail model only
+    # ever cuts the tail segment: rotation fsyncs, so nothing unsynced
+    # exists anywhere else) ---------------------------------------------
+    @property
+    def tail_path(self) -> Path:
+        return self._segs[-1].path
+
+    @property
+    def tail_written_bytes(self) -> int:
+        return self._segs[-1].nbytes
+
+    @property
+    def tail_synced_bytes(self) -> int:
+        return self._segs[-1].nbytes - (self.written_bytes
+                                        - self.synced_bytes)
+
     # ------------------------------------------------------------- reading
     def entries_since(self, lsn: int) -> tuple[np.ndarray, np.ndarray]:
         """All (keys, vals) with LSN >= ``lsn``, concatenated in LSN
-        order — the replay suffix recovery feeds back through the
-        memtable plane."""
+        order regardless of tree — the single-tree replay suffix (and
+        the flat view tests/benchmarks inspect)."""
         ks, vs = [], []
-        for base, recs in self._frames:
+        for base, _tree, recs in self._frames:
             if base + len(recs) <= lsn:
                 continue
             sl = recs[max(0, lsn - base):]
@@ -181,33 +296,48 @@ class WriteAheadLog:
         return (np.concatenate(ks).astype(np.uint32),
                 np.concatenate(vs).astype(np.int32))
 
+    def frames_since(self, lsn: int) -> list[tuple[int, int, np.ndarray,
+                                                   np.ndarray]]:
+        """Tree-attributed replay suffix: ``(tree, base_lsn, keys,
+        vals)`` per surviving frame in global LSN order, with frames
+        straddling ``lsn`` sliced to their suffix (``base_lsn`` is the
+        slice's first LSN).  Multi-tree recovery routes each frame to
+        its tree."""
+        out = []
+        for base, tree, recs in self._frames:
+            if base + len(recs) <= lsn:
+                continue
+            sl = recs[max(0, lsn - base):]
+            out.append((tree, max(base, lsn),
+                        sl["key"].astype(np.uint32),
+                        sl["val"].astype(np.int32)))
+        return out
+
     # ---------------------------------------------------------- truncation
     def truncate_upto(self, lsn: int) -> None:
-        """Drop whole frames whose entries all precede ``lsn`` (snapshot
-        compaction: those entries are captured in durable SSTables).
-        Frame-granular: a frame straddling ``lsn`` is kept whole and
-        replay skips its already-flushed prefix.  Atomic: the survivors
-        are rewritten to a temp file that replaces the log."""
-        keep = [(b, r) for b, r in self._frames if b + len(r) > lsn]
-        if len(keep) == len(self._frames):
+        """Drop whole SEALED segments whose entries all precede ``lsn``
+        (snapshot compaction: those entries are captured in durable
+        SSTables).  Segment-granular and O(1) per segment — an unlink,
+        never a rewrite: a segment straddling ``lsn`` is kept whole and
+        replay skips its already-flushed prefix (so ``start_lsn`` lands
+        at or before ``lsn``, never past it)."""
+        drop = 0
+        for seg in self._segs[:-1]:            # the tail never drops
+            if seg.end_lsn <= lsn:
+                drop += 1
+            else:
+                break
+        if drop == 0:
             return
-        tmp = self.path.with_suffix(".tmp")
-        with open(tmp, "wb") as f:
-            for base, recs in keep:
-                payload = recs.tobytes()
-                f.write(_HEADER.pack(WAL_MAGIC, len(recs), base,
-                                     zlib.crc32(payload)))
-                f.write(payload)
-            f.flush()
-            os.fsync(f.fileno())
-        self._f.close()
-        os.replace(tmp, self.path)
-        self._f = open(self.path, "ab")
-        self._frames = keep
-        self.start_lsn = keep[0][0] if keep else self.end_lsn
-        self.written_bytes = self.path.stat().st_size
-        self.synced_bytes = self.written_bytes
-        self.synced_lsn = self.end_lsn
+        boundary = self._segs[drop - 1].end_lsn
+        for seg in self._segs[:drop]:
+            self.written_bytes -= seg.nbytes
+            self.synced_bytes -= seg.nbytes    # sealed == fully synced
+            seg.path.unlink(missing_ok=True)
+        self._segs = self._segs[drop:]
+        self._frames = [(b, t, r) for b, t, r in self._frames
+                        if b >= boundary]
+        self.start_lsn = self._frames[0][0] if self._frames else self.end_lsn
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
@@ -224,43 +354,75 @@ class WriteAheadLog:
 
 
 class RecoverySession:
-    """Budgeted crash recovery: snapshot restore + WAL replay.
+    """Budgeted crash recovery for a ``StorageGroup`` (the single-tree
+    ``LSMEngine`` included): per-tree snapshot restore + global-LSN-order
+    WAL replay.
 
-    Construct with a FRESH engine (same configuration as the crashed
-    one, its reopened ``WriteAheadLog`` attached).  Construction
-    restores the snapshot's SSTables into the read view and stages the
-    WAL suffix from the snapshot's ``flushed_lsn``; ``advance(budget)``
-    then replays up to ``budget`` entries of I/O — each replayed entry
-    charges one entry (the WAL read), and replay-induced flushes/merges
-    run through ``engine.pump`` against the same budget, so recovery
-    speed is bandwidth-bound end to end.  ``run(budget)`` loops to
-    completion and returns the epoch count (the virtual recovery time
-    at that bandwidth)."""
+    Construct with a FRESH group (same tree topology as the crashed one,
+    its reopened ``WriteAheadLog`` attached).  Construction restores
+    each snapshot tree section into its tree's read view, computes the
+    global replay origin (the minimum per-tree ``flushed_lsn``, floored
+    by ``wal.start_lsn``) and stages the tree-attributed WAL suffix;
+    inside a frame, the prefix already captured by that tree's snapshot
+    is skipped exactly.  ``advance(budget)`` then replays up to
+    ``budget`` entries of I/O — each replayed entry charges one entry
+    (the WAL read), and replay-induced flushes/merges run through
+    ``group.pump`` against the same budget (apportioned across trees by
+    background debt), so recovery speed is bandwidth-bound end to end.
+    ``run(budget)`` loops to completion and returns the epoch count
+    (the virtual recovery time at that bandwidth)."""
 
     def __init__(self, engine, store=None):
         self.engine = engine
-        base = 0
+        trees = engine.trees
         with engine.lock():
             snap = store.load() if store is not None else None
+            base_by_tree = {t.tree_id: 0 for t in trees}
             if snap is not None:
-                base = engine.restore_tables(store.load_tables(snap), snap)
+                sections = snap.get("trees")
+                if sections is None:           # legacy single-tree manifest
+                    sections = [dict(snap, tree=0)]
+                if len(sections) > len(trees):
+                    raise ValueError(
+                        f"snapshot has {len(sections)} trees but the "
+                        f"group has {len(trees)}: topology mismatch")
+                for sec in sections:
+                    tid = int(sec.get("tree", 0))
+                    base_by_tree[tid] = trees[tid].restore_tables(
+                        store.load_tree_tables(sec), sec)
+                engine.now = max(engine.now, float(snap.get("now", 0.0)))
+            base = min(base_by_tree.values()) if base_by_tree else 0
             if engine.wal is not None:
                 base = max(base, engine.wal.start_lsn)
-                self.keys, self.vals = engine.wal.entries_since(base)
+                frames = engine.wal.frames_since(base)
             else:
-                self.keys = np.empty(0, np.uint32)
-                self.vals = np.empty(0, np.int32)
+                frames = []
             engine.begin_replay(base)
-        self.pos = 0
+            for t in trees:
+                t.active.start_lsn = max(base, base_by_tree[t.tree_id])
+            # stage per-frame replay chunks, skipping each tree's
+            # already-flushed prefix (LSNs below its snapshot origin)
+            self._chunks: list[tuple[int, np.ndarray, np.ndarray, int]] = []
+            self.total = 0
+            for tree, fbase, ks, vs in frames:
+                skip = max(0, base_by_tree.get(tree, 0) - fbase)
+                if skip >= len(ks):
+                    continue
+                self._chunks.append((tree, ks[skip:], vs[skip:],
+                                     fbase + skip))
+                self.total += len(ks) - skip
+        self._ci = 0          # current chunk index
+        self.pos = 0          # replayed entries (all chunks)
+        self._cpos = 0        # position within the current chunk
         self.epochs = 0
 
     @property
     def remaining(self) -> int:
-        return len(self.keys) - self.pos
+        return self.total - self.pos
 
     @property
     def done(self) -> bool:
-        return self.pos >= len(self.keys)
+        return self.pos >= self.total
 
     def advance(self, budget_entries: int) -> int:
         """One recovery epoch: replay/pump up to ``budget_entries`` of
@@ -269,25 +431,35 @@ class RecoverySession:
         spent = 0
         self.epochs += 1
         with eng.lock():
-            while spent < int(budget_entries) and self.pos < len(self.keys):
-                if eng.active.full and \
-                        len(eng.sealed) >= eng.num_memtables - 1:
+            while spent < int(budget_entries) and self._ci < len(self._chunks):
+                tid, ks, vs, lsn0 = self._chunks[self._ci]
+                if self._cpos >= len(ks):
+                    self._ci += 1
+                    self._cpos = 0
+                    continue
+                tree = eng.trees[tid]
+                if tree.active.full and \
+                        len(tree.sealed) >= tree.num_memtables - 1:
                     done = eng.pump(int(budget_entries) - spent)
                     spent += done
                     if done <= 0:       # budget too small to flush: stop
                         break
                     continue
-                if eng.active.full:
-                    eng.seal_active()
-                room = eng.active.capacity - len(eng.active)
+                if tree.active.full:
+                    tree.seal_active()
+                room = tree.active.capacity - len(tree.active)
                 take = min(room, int(budget_entries) - spent,
-                           len(self.keys) - self.pos)
+                           len(ks) - self._cpos)
                 if take <= 0:
                     break
-                eng.replay_admit(self.keys[self.pos:self.pos + take],
-                                 self.vals[self.pos:self.pos + take])
+                tree.replay_admit(ks[self._cpos:self._cpos + take],
+                                  vs[self._cpos:self._cpos + take])
+                self._cpos += take
                 self.pos += take
                 spent += take
+                # frames are replayed in global LSN order, so the group
+                # clock is the consumed chunk's frontier
+                eng._lsn = lsn0 + self._cpos
         return spent
 
     def run(self, budget_per_epoch: int, max_epochs: int = 1_000_000) -> int:
@@ -304,6 +476,6 @@ class RecoverySession:
 
 def recover_engine(engine, store=None,
                    budget_per_epoch: int = 1 << 30) -> int:
-    """One-call recovery: replay the engine's WAL (plus ``store``'s
+    """One-call recovery: replay the group's WAL (plus ``store``'s
     snapshot, when given) to completion.  Returns the epoch count."""
     return RecoverySession(engine, store).run(budget_per_epoch)

@@ -22,12 +22,20 @@ from repro.core import (CRASH_POINTS, BackgroundDriver, FaultInjector,
                         TOMBSTONE, WorkloadLog, WriteAheadLog,
                         amplification_stats, apply_entries, apply_torn_tail,
                         assert_reads_equal, recover_engine)
+from repro.core import IndexSpec
 from repro.core.constraints import GlobalConstraint
 from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
                                  TieringPolicy)
 from repro.core.scheduler import GreedyScheduler
 
 KEY_SPACE = 2048
+
+# the index-maintenance crash point never fires on a plain single-tree
+# engine (it sits between primary admit and index maintenance) — the
+# single-tree grids sweep the others; the multi-tree scenario below
+# covers it
+SINGLE_TREE_CRASH_POINTS = tuple(p for p in CRASH_POINTS
+                                 if p != "post-primary-pre-index")
 
 
 def _mk(policy="tiering", wal=None, faults=None, use_kernels=False,
@@ -109,18 +117,40 @@ class TestWAL:
         apply_torn_tail(wal, 1.0)             # whole page cache survived
         assert WriteAheadLog(tmp_path / "wal").end_lsn == 8
 
-    def test_truncate_upto_is_frame_granular(self, tmp_path):
-        wal = WriteAheadLog(tmp_path / "wal")
+    def test_truncate_upto_is_segment_granular(self, tmp_path):
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=5)
         for i in range(4):
             wal.append(np.arange(5, dtype=np.uint32),
-                       np.full(5, i, np.int32))
+                       np.full(5, i, np.int32))   # each fills one segment
         wal.sync()
-        wal.truncate_upto(7)                  # LSN 7 straddles frame 1
-        assert wal.start_lsn == 5             # frame 0 dropped, 1 kept whole
+        segs_before = wal.segments
+        assert segs_before >= 4               # rotation actually happened
+        wal.truncate_upto(7)                  # LSN 7 straddles segment 1
+        # segment 0 (LSNs 0..4) unlinked whole; segment 1 kept whole
+        assert wal.start_lsn == 5
+        assert wal.segments < segs_before
         ks, vs = wal.entries_since(7)
         assert len(ks) == 13
         re = WriteAheadLog(tmp_path / "wal")
         assert re.start_lsn == 5 and re.end_lsn == 20
+
+    def test_segment_rotation_reopen_and_tail_only_tear(self, tmp_path):
+        """Rotated segments chain across reopen; a torn tail only ever
+        damages the LAST segment (sealed ones were fsynced at
+        rotation)."""
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=8)
+        wal.append(np.arange(8, dtype=np.uint32), np.zeros(8, np.int32))
+        wal.append(np.arange(8, dtype=np.uint32), np.ones(8, np.int32))
+        wal.append(np.arange(6, dtype=np.uint32),
+                   np.full(6, 2, np.int32))   # unsynced tail frame
+        assert wal.segments == 3
+        kept = apply_torn_tail(wal, 0.0)      # page cache lost the tail
+        assert kept >= 0
+        re = WriteAheadLog(tmp_path / "wal", segment_entries=8)
+        assert re.start_lsn == 0 and re.end_lsn == 16   # sealed survive
+        ks, vs = re.entries_since(0)
+        assert np.array_equal(vs[:8], np.zeros(8, np.int32))
+        assert np.array_equal(vs[8:], np.ones(8, np.int32))
 
     def test_corrupt_frame_ends_valid_prefix(self, tmp_path):
         wal = WriteAheadLog(tmp_path / "wal")
@@ -270,7 +300,8 @@ class TestRecovery:
     def _workload(self, tmp_path, policy="tiering", rounds=10, seed=0,
                   faults=None, snapshot_at=5):
         rng = np.random.default_rng(seed)
-        eng = _mk(policy, wal=WriteAheadLog(tmp_path / "wal"),
+        eng = _mk(policy,
+                  wal=WriteAheadLog(tmp_path / "wal", segment_entries=256),
                   faults=faults, group_commit_entries=96)
         store = EngineSnapshotStore(tmp_path / "snap")
         log = WorkloadLog()
@@ -286,10 +317,16 @@ class TestRecovery:
     def test_snapshot_truncates_wal(self, tmp_path):
         eng, store, log = self._workload(tmp_path)
         before = eng.wal.entries
+        segs_before = eng.wal.segments
         eng.drain()
         eng.snapshot(store)
-        assert eng.wal.entries < before       # flushed prefix dropped
-        assert eng.wal.start_lsn == eng.flushed_lsn
+        # whole sealed segments below flushed_lsn dropped; the partially
+        # covered segment is kept, so start_lsn trails flushed_lsn by at
+        # most one segment
+        assert eng.wal.entries < before
+        assert eng.wal.segments <= segs_before
+        assert eng.wal.start_lsn <= eng.flushed_lsn
+        assert eng.flushed_lsn - eng.wal.start_lsn < 256
 
     def test_recover_clean_shutdown(self, tmp_path):
         eng, store, log = self._workload(tmp_path)
@@ -404,7 +441,7 @@ def test_crash_differential_smoke(tmp_path):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
-@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("point", SINGLE_TREE_CRASH_POINTS)
 def test_crash_differential_grid(tmp_path, point, policy):
     for frac in (0.0, 0.5, 1.0):
         d = tmp_path / f"f{int(frac * 10)}"
@@ -499,10 +536,68 @@ def test_fleet_crash_differential_smoke(tmp_path):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
-@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("point", SINGLE_TREE_CRASH_POINTS)
 def test_fleet_crash_differential_grid(tmp_path, point, policy):
     _fleet_crash_differential(tmp_path, point, policy,
                               torn_frac=0.5, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tree crash: between primary admit and eager index maintenance
+# ---------------------------------------------------------------------------
+def test_multi_tree_crash_between_primary_and_index(tmp_path):
+    """Crash AFTER a chunk's primary admit but BEFORE its eager index
+    maintenance: the WAL holds the primary frame without its index
+    frames.  Recovery must restore, per tree, exactly the durable frame
+    prefix — the primary reads as a consistent history prefix and the
+    index tree equals the newest-wins replay of its own logged frames
+    (stale by at most the un-maintained chunk, never corrupt)."""
+    faults = FaultInjector()
+    rng = np.random.default_rng(7)
+    eng = _mk(wal=WriteAheadLog(tmp_path / "wal", segment_entries=512),
+              faults=faults, group_commit_entries=96,
+              indexes=(IndexSpec("by_attr", mode="eager"),))
+    log = WorkloadLog()
+
+    def round_():
+        _feed(eng, log, rng.integers(0, KEY_SPACE, 200, dtype=np.uint32),
+              rng.integers(0, 1 << 20, 200, dtype=np.int32))
+        eng.pump(256)
+
+    for _ in range(3):
+        round_()
+    faults.arm("post-primary-pre-index", after=2)
+    with pytest.raises(SimulatedCrash):
+        for _ in range(8):
+            round_()
+
+    apply_torn_tail(eng.wal, 0.5)
+    wal2 = WriteAheadLog(tmp_path / "wal", segment_entries=512)
+    eng2 = _mk(wal=wal2, indexes=(IndexSpec("by_attr", mode="eager"),))
+    RecoverySession(eng2).run(1 << 12)
+    assert wal2.synced_lsn <= eng2._lsn == wal2.end_lsn
+
+    # per-tree newest-wins replay of the durable tree-tagged frames
+    state: list[dict[int, int]] = [{}, {}]
+    for tree, base, ks, vs in wal2.frames_since(0):
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            if v == TOMBSTONE:
+                state[tree].pop(k, None)
+            else:
+                state[tree][k] = v
+
+    # primary: bit-identical to the replayed primary frames
+    qs = np.arange(KEY_SPACE, dtype=np.uint32)
+    found, vals = eng2.get_batch(qs)
+    want = np.array([state[0].get(int(k), 0) for k in qs], np.int32)
+    assert np.array_equal(found, np.array([int(k) in state[0] for k in qs]))
+    assert np.array_equal(vals[found], want[found])
+
+    # eager index tree: exactly its own logged frames (covering scan)
+    attrs, pks = eng2.index_scan("by_attr", 0, 1 << 20)
+    want_idx = dict(sorted(state[1].items()))
+    assert attrs.tolist() == list(want_idx.keys())
+    assert pks.tolist() == [v & 0xFFFFFFFF for v in want_idx.values()]
 
 
 def test_fleet_deletes_and_amplification(tmp_path):

@@ -1,0 +1,264 @@
+"""Secondary-index differential tests (the PR-9 acceptance grid).
+
+A ``StorageGroup`` maintains secondary indexes as sibling LSM trees
+sharing the primary's WAL, budget and backend.  The contract under test,
+per maintenance mode (see ``core/engine.py``):
+
+* eager — the index tree is EXACT: every primary put/delete
+  synchronously deletes the stale index entry (read-old-value through
+  the fused probe) and inserts the new one.  Index reads never touch
+  the primary; covering scans are one k-way merge over the index tree.
+* lazy — maintenance appends blindly (no read-before-write); index
+  READS validate each candidate against the primary, so a stale entry
+  is filtered at query time.  Because the index tree is newest-wins per
+  attribute, a stale newest entry HIDES older valid ones — the
+  reference reader models exactly that.
+
+The grid compares both modes against a dict-of-dicts reference reader —
+bit-identical found masks, primary keys and covering scans — across
+{tiering, leveling, partitioned} x {host, kernel} under update-heavy
+and delete-heavy workloads, plus stale-entry reclamation through
+``compact_all``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import IndexSpec, LSMEngine, StorageGroup
+from repro.core.constraints import GlobalConstraint
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 TieringPolicy)
+from repro.core.scheduler import GreedyScheduler
+
+PKS = 512            # primary-key universe
+ATTRS = 96           # attribute universe (dense -> heavy collisions)
+
+
+def _mk(policy="tiering", use_kernels=False, memtable=128, indexes=(),
+        **kw):
+    pol = {
+        "tiering": lambda: TieringPolicy(3, memtable, PKS),
+        "leveling": lambda: LevelingPolicy(3, memtable, PKS),
+        "partitioned": lambda: PartitionedLevelingPolicy(
+            4, memtable, PKS, file_entries=64, l1_capacity=256),
+    }[policy]()
+    kw.setdefault("scan_use_kernels", use_kernels)
+    return LSMEngine(pol, GreedyScheduler(), GlobalConstraint(200),
+                     memtable_entries=memtable, unique_keys=PKS,
+                     use_kernels=use_kernels, merge_block=64,
+                     indexes=indexes, **kw)
+
+
+def _feed(eng, keys, vals=None, pump=1 << 12):
+    done = 0
+    while done < len(keys):
+        if vals is None:
+            n = eng.delete_batch(keys[done:])
+        else:
+            n = eng.put_batch(keys[done:], vals[done:])
+        done += n
+        if done < len(keys):
+            eng.pump(pump)
+
+
+class RefIndexed:
+    """Dict-of-dicts reference: a primary map plus one attr -> pk index
+    map replayed per entry with the mode's exact semantics."""
+
+    def __init__(self, mode):
+        self.mode = mode
+        self.primary: dict[int, int] = {}
+        self.idx: dict[int, int] = {}
+
+    @staticmethod
+    def extract(v: int) -> int:
+        return v & 0xFFFFFFFF
+
+    def put(self, pk: int, v: int) -> None:
+        a_new = self.extract(v)
+        if self.mode == "eager" and pk in self.primary:
+            a_old = self.extract(self.primary[pk])
+            if a_old != a_new:
+                # the engine logs the stale delete unconditionally; if
+                # another pk had since claimed a_old IN AN EARLIER
+                # batch, its entry is newer than the tombstone and
+                # survives newest-wins — dict semantics: only pop when
+                # this pk still owns it is NOT what the engine does
+                # per-chunk, but per-ENTRY replay (this class) is the
+                # pinned contract and the engine matches it
+                self.idx.pop(a_old, None)
+        self.idx[a_new] = pk
+        self.primary[pk] = v
+
+    def delete(self, pk: int) -> None:
+        if pk in self.primary:
+            if self.mode == "eager":
+                self.idx.pop(self.extract(self.primary[pk]), None)
+            del self.primary[pk]
+
+    def lookup(self, a: int):
+        pk = self.idx.get(a)
+        if pk is None:
+            return None
+        if self.mode == "lazy":
+            v = self.primary.get(pk)
+            if v is None or self.extract(v) != a:
+                return None
+        return pk
+
+    def scan(self, lo: int, hi: int) -> list[tuple[int, int]]:
+        return sorted((a, pk) for a in self.idx
+                      if lo <= a < hi and self.lookup(a) is not None
+                      for pk in [self.idx[a]])
+
+
+def _assert_index_equal(eng, ref, name="ix"):
+    """Bit-identical comparison across every index read path."""
+    qs = np.arange(ATTRS, dtype=np.uint32)
+    found, pks = eng.index_lookup(name, qs)
+    want = [ref.lookup(int(a)) for a in qs]
+    assert found.tolist() == [w is not None for w in want]
+    got_pairs = [(int(a), int(p)) for a, p, f in zip(qs, pks, found) if f]
+    assert got_pairs == [(int(a), w) for a, w in zip(qs, want)
+                         if w is not None]
+    # index-to-primary reads return the primary VALUES
+    vfound, vals = eng.get_by_index(name, qs)
+    assert vfound.tolist() == found.tolist()
+    for a, v, f in zip(qs, vals, vfound):
+        if f:
+            assert int(v) == ref.primary[ref.lookup(int(a))]
+    # covering / validated range scans
+    attrs, spks = eng.index_scan(name, 0, ATTRS)
+    assert list(zip(attrs.tolist(), spks.tolist())) == ref.scan(0, ATTRS)
+    lo, hi = ATTRS // 4, 3 * ATTRS // 4
+    attrs, spks = eng.index_scan(name, lo, hi)
+    assert list(zip(attrs.tolist(), spks.tolist())) == ref.scan(lo, hi)
+    # and the primary plane itself
+    pq = np.arange(PKS, dtype=np.uint32)
+    pf, pv = eng.get_batch(pq)
+    assert pf.tolist() == [int(k) in ref.primary for k in pq]
+    for k, v, f in zip(pq, pv, pf):
+        if f:
+            assert int(v) == ref.primary[int(k)]
+
+
+def _run_differential(policy, use_kernels, mode, seed=0, rounds=8):
+    rng = np.random.default_rng(seed)
+    eng = _mk(policy, use_kernels,
+              indexes=(IndexSpec("ix", mode=mode),))
+    ref = RefIndexed(mode)
+    for r in range(rounds):
+        # update-heavy: a narrow pk range re-put every round, so most
+        # writes move an existing pk to a new attribute (stale entries)
+        n = 150
+        pks = rng.integers(0, PKS, n, dtype=np.uint32)
+        vals = rng.integers(0, ATTRS, n, dtype=np.int32)
+        _feed(eng, pks, vals)
+        for pk, v in zip(pks.tolist(), vals.tolist()):
+            ref.put(pk, v)
+        if r % 2 == 1:                       # delete propagation
+            dels = rng.integers(0, PKS, 30, dtype=np.uint32)
+            _feed(eng, dels)
+            for pk in dels.tolist():
+                ref.delete(pk)
+        eng.pump(256)
+        if r == rounds // 2:
+            _assert_index_equal(eng, ref)    # mid-workload, merges live
+    eng.drain()
+    _assert_index_equal(eng, ref)
+    eng.compact_all()                        # stale-entry reclamation
+    _assert_index_equal(eng, ref)
+    return eng, ref
+
+
+def test_secondary_differential_smoke():
+    """Fast lane: one policy, host backend, both modes."""
+    _run_differential("tiering", False, "eager")
+    _run_differential("tiering", False, "lazy")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["host", "kernel"])
+@pytest.mark.parametrize("mode", ["eager", "lazy"])
+def test_secondary_differential_grid(policy, use_kernels, mode):
+    seed = {"tiering": 11, "leveling": 22, "partitioned": 33}[policy]
+    _run_differential(policy, use_kernels, mode, seed=seed)
+
+
+def test_eager_reclaims_stale_entries():
+    """Update-heavy eager maintenance: after full compaction the index
+    tree's PHYSICAL entries equal its live attribute count — stale
+    entries and their tombstones are reclaimed, not hidden."""
+    eng, ref = _run_differential("leveling", False, "eager", seed=3)
+    ix = eng.trees[1]
+    live = len(ref.scan(0, ATTRS))
+    assert ix.total_entries() == live
+    assert eng.stats["tombstones_dropped"] > 0
+
+
+def test_lazy_skips_read_before_write():
+    """Lazy maintenance never probes the primary on the write path:
+    same workload, strictly fewer primary lookups than eager."""
+    def lookups(mode):
+        eng = _mk(indexes=(IndexSpec("ix", mode=mode),))
+        rng = np.random.default_rng(1)
+        for _ in range(4):
+            _feed(eng, rng.integers(0, PKS, 200, dtype=np.uint32),
+                  rng.integers(0, ATTRS, 200, dtype=np.int32))
+        return eng.trees[0].stats["lookups"]
+    assert lookups("lazy") == 0
+    assert lookups("eager") > 0
+
+
+def test_custom_extract_and_multiple_indexes():
+    """Two indexes over different attributes of the same value, one
+    eager one lazy, maintained from the same write batch."""
+    lo4 = lambda vals: (vals.astype(np.int64) & 0xF).astype(np.uint32)
+    hi4 = lambda vals: ((vals.astype(np.int64) >> 4) & 0xF).astype(
+        np.uint32)
+    eng = _mk(indexes=(IndexSpec("lo", mode="eager", extract=lo4),
+                       IndexSpec("hi", mode="lazy", extract=hi4)))
+    assert eng.index_names == ("lo", "hi")
+    assert len(eng.trees) == 3
+    eng.put(5, 0x73)
+    eng.put(9, 0x21)
+    f, pks = eng.index_lookup("lo", np.array([3, 1], np.uint32))
+    assert f.all() and pks.tolist() == [5, 9]
+    f, pks = eng.index_lookup("hi", np.array([7, 2], np.uint32))
+    assert f.all() and pks.tolist() == [5, 9]
+    eng.put(5, 0x41)                         # moves 5: lo 3->1, hi 7->4
+    f, pks = eng.index_lookup("lo", np.array([3, 1], np.uint32))
+    assert f.tolist() == [False, True] and int(pks[1]) == 5
+    f, _ = eng.index_lookup("hi", np.array([7], np.uint32))
+    assert not f[0]                          # lazy validation filters
+
+
+def test_index_spec_validation():
+    eng = _mk(indexes=("ix",))               # bare name -> eager spec
+    assert eng.index_names == ("ix",)
+    with pytest.raises(ValueError):
+        eng.add_index("ix")                  # duplicate name
+    with pytest.raises(ValueError):
+        eng.add_index(IndexSpec("m", mode="bogus"))
+    eng.put(1, 2)
+    with pytest.raises(ValueError):
+        eng.add_index("late")                # after writes
+    with pytest.raises(ValueError):          # pk must bit-cast to int32
+        eng.put_batch(np.array([1 << 31], np.uint32),
+                      np.array([1], np.int32))
+
+
+def test_plain_engine_unchanged():
+    """A bare LSMEngine is the 1-tree group: no index trees, no index
+    overhead on the write path, legacy surface intact."""
+    eng = _mk()
+    assert isinstance(eng, StorageGroup) and len(eng.trees) == 1
+    assert eng.index_names == ()
+    eng.put_batch(np.arange(64, dtype=np.uint32), np.ones(64, np.int32))
+    assert eng.stats["puts"] == 64
+    assert eng.tree is eng.trees[0].meta
+    with pytest.raises(KeyError):
+        eng.index_lookup("nope", np.array([1], np.uint32))
