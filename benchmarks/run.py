@@ -40,6 +40,7 @@ MODULES = [
     "fleet_scaling",
     "roofline",
     "recovery",
+    "availability",
 ]
 
 

@@ -30,6 +30,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import zipfile
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import NamedTuple, Optional
@@ -38,6 +39,7 @@ import numpy as np
 
 from repro.core.component import Component, LSMTree, MergeOp
 from repro.core.constraints import ComponentConstraint, GlobalConstraint
+from repro.core.iostack import CorruptionError, IOStack, data_crc32
 from repro.core.policies import MergePolicy, TieringPolicy
 from repro.core.scheduler import GreedyScheduler, MergeScheduler
 
@@ -277,13 +279,24 @@ class EngineSnapshotStore:
     single-tree manifests (flat ``tables``) are still readable —
     ``RecoverySession`` maps them to a one-section group.  Stale table
     files from aborted or superseded saves are swept on the next
-    successful ``save``."""
+    successful ``save``.
+
+    Integrity: every table's manifest entry carries a CRC32 of its
+    content (``data_crc32`` — the same formula live ``SSTable``s seal
+    and the scrub pass verifies), checked on EVERY load: bit-rot in a
+    snapshot file surfaces as a typed ``CorruptionError`` at restore,
+    never as silently-wrong reads.  All file I/O routes through an
+    ``IOStack`` (transient-fault retries, ENOSPC classification), so
+    snapshot saves survive injected EIO and stall cleanly on a full
+    disk."""
 
     MANIFEST = "SNAPSHOT.json"
 
-    def __init__(self, root: str | os.PathLike):
+    def __init__(self, root: str | os.PathLike,
+                 io: Optional[IOStack] = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.io = io if io is not None else IOStack()
 
     def _manifest_path(self) -> Path:
         return self.root / self.MANIFEST
@@ -304,13 +317,14 @@ class EngineSnapshotStore:
                     continue
                 fname = (f"table-t{tree.tree_id}-{t.data_stamp:08d}"
                          f"-{t.component.cid}.npz")
-                np.savez(self.root / fname, keys=keys, vals=vals)
+                self.io.savez(self.root / fname, keys=keys, vals=vals)
                 keep.add(fname)
                 tables.append({"file": fname,
                                "level": int(t.component.level),
                                "stamp": int(t.data_stamp),
                                "created_at": float(t.component.created_at),
-                               "entries": int(len(keys))})
+                               "entries": int(len(keys)),
+                               "crc": int(data_crc32(keys, vals))})
                 if group.faults is not None:
                     group.faults.hit("mid-snapshot")
             sections.append({"tree": tree.tree_id, "name": tree.name,
@@ -321,12 +335,11 @@ class EngineSnapshotStore:
                     "flushed_lsn": int(group.flushed_lsn),
                     "now": float(group.now),
                     "stamp": int(group._stamp)}
-        tmp = self._manifest_path().with_suffix(".tmp")
-        tmp.write_text(json.dumps(manifest, indent=1))
-        os.replace(tmp, self._manifest_path())   # atomic on POSIX
+        self.io.write_atomic_text(self._manifest_path(),
+                                  json.dumps(manifest, indent=1))
         for p in self.root.iterdir():            # sweep stale table files
             if p.name not in keep and p.name.startswith("table-"):
-                p.unlink()
+                self.io.unlink(p)
         return manifest
 
     def load(self) -> Optional[dict]:
@@ -334,17 +347,63 @@ class EngineSnapshotStore:
         p = self._manifest_path()
         if not p.exists():
             return None
-        return json.loads(p.read_text())
+        return json.loads(self.io.read_text(p))
 
     def load_tree_tables(self, section: dict):
         """Yield ``(keys, vals, meta)`` per saved table of ONE tree
         section, newest-last — the iterable ``LSMTree.restore_tables``
         rebinds.  Also accepts a legacy flat manifest (it carries the
-        same ``tables`` key)."""
+        same ``tables`` key).  Each table's content is CRC-verified
+        against its manifest entry (when present — legacy manifests
+        carry none): a mismatch raises ``CorruptionError`` rather than
+        restoring rotten data."""
         for meta in section["tables"]:
-            with np.load(self.root / meta["file"]) as z:
-                yield (z["keys"].astype(np.uint32),
-                       z["vals"].astype(np.int32), meta)
+            try:
+                with self.io.load_npz(self.root / meta["file"]) as z:
+                    keys = z["keys"].astype(np.uint32)
+                    vals = z["vals"].astype(np.int32)
+            except (zipfile.BadZipFile, ValueError, KeyError) as e:
+                # the container itself is rotten (zip-level CRC or a
+                # torn write): same typed outcome as a content mismatch
+                raise CorruptionError(
+                    f"snapshot table {meta['file']!r} is unreadable: "
+                    f"{e}") from e
+            want = meta.get("crc")
+            if want is not None and data_crc32(keys, vals) != int(want):
+                raise CorruptionError(
+                    f"snapshot table {meta['file']!r} fails its "
+                    f"manifest checksum (bit-rot or torn write)")
+            yield keys, vals, meta
+
+    def find_table(self, tree_id: int, stamp: int, crc: int):
+        """Locate a saved table matching (tree, stamp, checksum) — the
+        scrub pass's repair source.  Returns verified ``(keys, vals)``
+        or None when no matching durable copy exists."""
+        snap = self.load()
+        if snap is None:
+            return None
+        sections = snap.get("trees")
+        if sections is None:
+            sections = [dict(snap, tree=0)]
+        for sec in sections:
+            if int(sec.get("tree", 0)) != int(tree_id):
+                continue
+            for meta in sec["tables"]:
+                if int(meta.get("stamp", -1)) != int(stamp) or \
+                        int(meta.get("crc", -1)) != int(crc):
+                    continue
+                p = self.root / meta["file"]
+                if not p.exists():
+                    continue
+                try:
+                    with self.io.load_npz(p) as z:
+                        keys = z["keys"].astype(np.uint32)
+                        vals = z["vals"].astype(np.int32)
+                except (zipfile.BadZipFile, ValueError, KeyError):
+                    continue        # this copy is rotten too: keep looking
+                if data_crc32(keys, vals) == int(crc):
+                    return keys, vals
+        return None
 
     # legacy name: a flat single-tree manifest IS a tree section
     load_tables = load_tree_tables

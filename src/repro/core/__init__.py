@@ -24,9 +24,13 @@ from .fleet import (FleetBackgroundDriver, FleetSystem, GlobalBudgetArbiter,
 from .memtable import MemTable, TOMBSTONE, drop_tombstones
 from .sstable import SSTable
 from .wal import RecoverySession, WriteAheadLog, recover_engine
-from .faults import (CRASH_POINTS, FaultInjector, SimulatedCrash,
-                     WorkloadLog, apply_entries, apply_torn_tail,
-                     assert_reads_equal)
+from .iostack import (CorruptionError, IOFaultError, IOStack,
+                      RetryPolicy, StorageFull,
+                      UnrepairableCorruptionError, data_crc32)
+from .scrub import Scrubber
+from .faults import (CRASH_POINTS, FaultInjector, IO_POINTS,
+                     SimulatedCrash, WorkloadLog, apply_entries,
+                     apply_torn_tail, assert_reads_equal, flip_bit)
 
 __all__ = [
     "Component", "FlushOp", "LSMTree", "MergeOp", "MergeState", "fresh_id",
@@ -51,5 +55,8 @@ __all__ = [
     "TOMBSTONE", "drop_tombstones", "WriteAheadLog", "RecoverySession",
     "recover_engine", "CRASH_POINTS", "FaultInjector", "SimulatedCrash",
     "WorkloadLog", "apply_entries", "apply_torn_tail",
-    "assert_reads_equal",
+    "assert_reads_equal", "flip_bit",
+    "CorruptionError", "IOFaultError", "IOStack", "IO_POINTS",
+    "RetryPolicy", "StorageFull", "UnrepairableCorruptionError",
+    "data_crc32", "Scrubber",
 ]

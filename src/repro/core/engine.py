@@ -134,6 +134,42 @@ Durability contract (group-owned; ``core/wal.py``)
   them (``compact_all`` reclaims space-amp to ~1).  Eager index
   maintenance writes the same tombstones into index trees to kill stale
   entries.
+
+Online recovery and the fault-tolerance plane
+=============================================
+
+A ``RecoverySession(online=True)`` reopens the group FOR TRAFFIC before
+replay finishes.  The consistency contract:
+
+* **Watermark**: ``_replay_watermark`` is the durable replay frontier —
+  every LSN below it has been re-admitted.  Reads observe exactly
+  ``durable prefix up to the watermark + live writes``; the watermark
+  only advances.
+* **Fresh-segment rule**: the session rotates the WAL tail at open, so
+  frames written by live traffic never interleave with the frames being
+  replayed; the group LSN jumps to the live frontier (max of the log's
+  end and the replay end) before the first live write.
+* **Live writes win**: per-tree ``_live_keys`` records keys written
+  since the reopen; the replay step drops those keys' history (the
+  memtable is newest-wins by insertion order, so un-filtered replay
+  would resurrect stale values).
+* Replay itself is a pump-driven debt stream: ``_pump_locked``
+  arbitrates it against flush/merge/WAL debt via the same
+  largest-remainder split, so a starved budget slows FULL recovery but
+  never time-to-first-read.  ``seal_active`` and the group
+  ``flushed_lsn`` cap their LSN claims at the watermark — snapshot
+  truncation can never drop un-replayed WAL.
+
+Transient I/O faults (``core/iostack.py``) retry with capped
+exponential backoff; ENOSPC surfaces as ``StorageFull`` and is absorbed
+as a constraint stall (writes refuse work, drain when space returns) —
+never data loss.  A background ``Scrubber`` (``enable_scrub``) streams
+CRC verification over live tables from the pump budget; a corrupt table
+is quarantined (out of the read view immediately), repaired from the
+snapshot store or by whole-tree WAL rebuild, and only when no durable
+copy survives does the tree turn ``corrupt`` — after which reads raise
+``UnrepairableCorruptionError``, a typed error instead of a wrong
+answer.  ``health()`` exposes the fault-plane counters.
 """
 from __future__ import annotations
 
@@ -152,6 +188,7 @@ from .backend import ExecBackend, merge_kway_host  # noqa: F401 (re-export:
 from .component import Component, MergeOp
 from .component import LSMTree as ComponentTree
 from .constraints import ComponentConstraint, NoConstraint
+from .iostack import StorageFull, UnrepairableCorruptionError
 from .memtable import (MemTable, SENTINEL_KEY, TOMBSTONE,
                        drop_tombstones)
 from .policies import MergePolicy
@@ -442,6 +479,12 @@ class LSMTree:
         self._stamp = 0
         self.stalled = False
         self._flush_debt = 0             # flush-quantum overshoot owed
+        self._live_keys: Optional[set] = None   # keys written since an
+                                         # online-recovery reopen (the
+                                         # replay step drops history for
+                                         # them — live writes win)
+        self.corrupt = False             # unrepairable corruption: reads
+                                         # raise, never answer wrong
         self.stats = {"puts": 0, "stall_events": 0, "flushes": 0,
                       "merges": 0, "merge_bytes": 0, "merge_touched": 0,
                       "lookups": 0, "bloom_skips": 0,
@@ -455,11 +498,22 @@ class LSMTree:
         position — the bookkeeping behind ``flushed_lsn``.  Group-
         internal admission paths that seal MID-chunk (``force_admit``)
         pass the LSN of the chunk's next entry instead, since the chunk
-        was WAL-framed before any of it was admitted."""
+        was WAL-framed before any of it was admitted.
+
+        During ONLINE recovery the new memtable's origin is capped by
+        the replay watermark: the active memtable mixes live writes
+        (LSN >= the live frontier) with replayed history (LSN < the
+        watermark), so the only safe ``flushed_lsn`` claim is the
+        watermark — snapshot truncation must never drop un-replayed
+        WAL."""
         self.sealed.append(self.active)
         self.active = MemTable(self.memtable_entries)
-        self.active.start_lsn = self.group._lsn \
-            if next_start_lsn is None else int(next_start_lsn)
+        lsn = self.group._lsn if next_start_lsn is None \
+            else int(next_start_lsn)
+        wm = self.group._replay_watermark
+        if wm is not None:
+            lsn = min(lsn, wm)
+        self.active.start_lsn = lsn
 
     def _refresh_stall(self):
         self.stalled = self.constraint.violated(self.meta)
@@ -541,6 +595,10 @@ class LSMTree:
         all disk tables, then sorted searches only for surviving
         (table, key) pairs with early exit.  Returns (found, values);
         tombstone hits resolve the key but report "not found"."""
+        if self.corrupt:
+            raise UnrepairableCorruptionError(
+                f"tree {self.name!r} has unrepairable corruption — "
+                "refusing to serve reads")
         q = len(keys)
         self.stats["lookups"] += q
         resolved = np.zeros(q, bool)
@@ -591,6 +649,10 @@ class LSMTree:
         sealed memtables newest-first, then the read view's tables) —
         the age order the k-way merge dedups by.  Empty windows are
         dropped."""
+        if self.corrupt:
+            raise UnrepairableCorruptionError(
+                f"tree {self.name!r} has unrepairable corruption — "
+                "refusing to serve scans")
         runs: list[tuple[np.ndarray, np.ndarray]] = []
         for mt in (self.active, *reversed(self.sealed)):
             ks, vs = mt.scan_range(lo, hi)
@@ -686,6 +748,7 @@ class LSMTree:
         self._stamp += 1
         table.data_stamp = self._stamp
         table.component.stamp = float(self._stamp)
+        table.seal_checksum()
         self.meta.add(table.component)
         self.tables[table.component.cid] = table
         self._order.insert(0, table)
@@ -971,6 +1034,7 @@ class LSMTree:
                 comp.key_hi = (float(ks[-1]) + 1) / 2**32
             else:
                 comp.key_lo = comp.key_hi = 0.0
+            table.seal_checksum()
             self.tables[comp.cid] = table
 
         if len(outs) == 1:
@@ -1029,6 +1093,7 @@ class LSMTree:
                               interpret=self.group.interpret)
             t.data_stamp = int(tmeta["stamp"])
             t.component.stamp = float(tmeta["stamp"])
+            t.seal_checksum()
             self.meta.add(t.component)
             self.tables[t.component.cid] = t
             self._order.append(t)
@@ -1109,6 +1174,13 @@ class StorageGroup:
         self._lsn = wal.end_lsn if wal is not None else 0
         self._wal_debt = 0                       # synced-WAL budget owed
         self._wal_stats = {"wal_entries": 0, "wal_bytes": 0, "wal_syncs": 0}
+        # -- fault-tolerance plane -------------------------------------
+        self._recovery = None            # active ONLINE RecoverySession
+        self._replay_watermark = None    # durable replay frontier while
+                                         # recovering (None = steady state)
+        self.scrubber = None             # background integrity scrub
+                                         # (``enable_scrub``)
+        self._health = {"enospc_stalls": 0}
         # -- execution backend (group-owned): every kernel-vs-host
         # decision lives here.  The three legacy booleans map to a
         # forced-dispatch backend reproducing the old behavior exactly.
@@ -1269,6 +1341,12 @@ class StorageGroup:
                              "(the key is stored as the index value, int32)")
         n_ok = 0
         while n_ok < n:
+            if self._recovery is not None and self._indexes:
+                # online recovery cannot maintain secondary indexes
+                # consistently mid-replay (no live-key tracking for
+                # lazily-validated index trees): stall until caught up
+                primary.stats["stall_events"] += 1
+                break
             primary._refresh_stall()
             if primary.stalled:
                 # a constraint-induced rejection IS a stall event: the
@@ -1295,10 +1373,21 @@ class StorageGroup:
                 # primary's lookup stats — eager maintenance pays reads)
                 old_found, old_vals = self._chunk_old_values(
                     chunk_k, chunk_v, deletes)
-            self._wal_log(0, chunk_k, chunk_v)
+            try:
+                self._wal_log(0, chunk_k, chunk_v)
+            except StorageFull:
+                # out of space: the write path refuses work (a stall,
+                # not data loss) until space returns and drains it
+                primary.stats["stall_events"] += 1
+                self._health["enospc_stalls"] += 1
+                break
             took = primary.active.put_batch(chunk_k, chunk_v)
             assert took == take, "memtable admitted less than its room"
             n_ok += took
+            if self._recovery is not None and \
+                    primary._live_keys is not None:
+                # live writes win: replay must drop these keys' history
+                primary._live_keys.update(chunk_k.tolist())
             primary.stats["deletes" if deletes else "puts"] += took
             if self._indexes:
                 self._fault("post-primary-pre-index")
@@ -1550,26 +1639,42 @@ class StorageGroup:
         # every pump is an fsync-epoch boundary: sync the WAL first so
         # its traffic lands in the group debt and is repaid below, ahead
         # of every tree — durability shares the bandwidth budget
-        self._wal_sync()
+        try:
+            self._wal_sync()
+        except StorageFull:
+            self._health["enospc_stalls"] += 1
         repay = min(self._wal_debt, budget_entries)
         self._wal_debt -= repay
         spent += repay
         remaining = budget_entries - spent
+        if remaining > 0 and self.scrubber is not None:
+            spent += self.scrubber.step(
+                min(remaining, self.scrubber.entries_per_epoch))
+            remaining = budget_entries - spent
         if remaining > 0:
+            rec = self._recovery
             debts = []
+            if rec is not None and not rec.done:
+                # replay debt competes with flush/merge debt for the
+                # same budget — the arbiter sees it as one more stream
+                debts.append((-1, rec.remaining))
             for t in self.trees:
                 d = t.pending_entries()
                 if d > 0:
                     debts.append((t.tree_id, d))
             if len(debts) == 1:
-                spent += self.trees[debts[0][0]].pump_tree(remaining)
+                tid = debts[0][0]
+                spent += rec._replay_step(remaining) if tid == -1 \
+                    else self.trees[tid].pump_tree(remaining)
             elif debts:
                 total = float(sum(d for _, d in debts))
                 quanta = apportion_largest_remainder(
                     [(tid, d / total) for tid, d in debts], remaining)
                 for (tid, _), q in zip(debts, quanta):
-                    if q > 0:
-                        spent += self.trees[tid].pump_tree(q)
+                    if q <= 0:
+                        continue
+                    spent += rec._replay_step(q) if tid == -1 \
+                        else self.trees[tid].pump_tree(q)
         for t in self.trees:
             t._refresh_stall()
         return spent
@@ -1755,16 +1860,24 @@ class StorageGroup:
         the fleet's ``GlobalBudgetArbiter`` apportions the global budget
         by — and, within a group, what each pump epoch is split by."""
         with self._rlock:
-            return self._wal_debt + sum(t.pending_entries()
-                                        for t in self.trees)
+            out = self._wal_debt + sum(t.pending_entries()
+                                       for t in self.trees)
+            if self._recovery is not None and not self._recovery.done:
+                out += self._recovery.remaining
+            return out
 
     # ----------------------------------------------- durability lifecycle
     @property
     def flushed_lsn(self) -> int:
         """First LSN NOT yet captured in on-disk SSTables, over ALL
         trees (the minimum of the per-tree origins) — the WAL
-        truncation point a snapshot records."""
-        return min(t.flushed_lsn for t in self.trees)
+        truncation point a snapshot records.  During online recovery
+        the claim is additionally capped by the replay watermark:
+        un-replayed WAL history must never be truncated away."""
+        lo = min(t.flushed_lsn for t in self.trees)
+        if self._replay_watermark is not None:
+            lo = min(lo, self._replay_watermark)
+        return lo
 
     def snapshot(self, store) -> dict:
         """Persist the durable view: fsync the WAL, save every tree's
@@ -1776,7 +1889,11 @@ class StorageGroup:
             self._wal_sync()
             manifest = store.save(self)
             if self.wal is not None:
-                self.wal.truncate_upto(self.flushed_lsn)
+                archived = self.wal.truncate_upto(self.flushed_lsn)
+                if archived:
+                    # archival is real I/O: charge the moved entries to
+                    # the background budget like any other traffic
+                    self._wal_debt += archived
             return manifest
 
     def restore_tables(self, tables, snap: dict) -> int:
@@ -1842,6 +1959,49 @@ class StorageGroup:
             return amplification_stats(self.stats,
                                        physical_entries=self.total_entries(),
                                        live_entries=self.live_entries())
+
+    def enable_scrub(self, store=None, entries_per_epoch: int = 256):
+        """Attach a background integrity ``Scrubber`` (see
+        ``core.scrub``): every pump epoch reserves up to
+        ``entries_per_epoch`` of the budget to stream CRC verification
+        over live tables, quarantining and repairing on mismatch.
+        ``store`` (an ``EngineSnapshotStore``) is the preferred repair
+        source.  Returns the scrubber (its ``stats`` feed
+        ``health()``)."""
+        from .scrub import Scrubber
+        with self._rlock:
+            self.scrubber = Scrubber(self, store=store,
+                                     entries_per_epoch=entries_per_epoch)
+            return self.scrubber
+
+    def health(self) -> dict:
+        """Fault-plane counters, ``amplification()``-style: a flat
+        numeric dict (summable fleet-wide) covering I/O retries and
+        backoff, ENOSPC stall epochs, scrub progress and
+        quarantine/repair outcomes, WAL archival, and online-recovery
+        state."""
+        with self._rlock:
+            out = {"enospc_stalls": self._health["enospc_stalls"],
+                   "recovering": int(self._recovery is not None),
+                   "replay_remaining": (self._recovery.remaining
+                                        if self._recovery is not None
+                                        else 0),
+                   "wal_archived_segments": 0, "wal_archived_entries": 0,
+                   "io_retries": 0, "io_backoff_s": 0.0, "io_faults": 0,
+                   "io_enospc": 0, "io_latency_injected_s": 0.0}
+            if self.wal is not None:
+                out["wal_archived_segments"] = self.wal.archived_segments
+                out["wal_archived_entries"] = self.wal.archived_entries
+                for k, v in self.wal.io.stats.items():
+                    out[k] += v
+            if self.scrubber is not None:
+                out.update(self.scrubber.stats)
+            else:
+                out.update({"scrub_passes": 0, "scrub_tables_checked": 0,
+                            "scrub_entries": 0, "tables_quarantined": 0,
+                            "tables_repaired": 0,
+                            "tables_unrepairable": 0})
+            return out
 
     def close(self) -> None:
         """Graceful shutdown: fsync and release the WAL (no-op without

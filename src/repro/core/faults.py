@@ -1,5 +1,6 @@
-"""Fault injection for the durability plane: named crash points, torn-tail
-WAL truncation, and the crash/recover differential harness.
+"""Fault injection for the durability plane: named crash points,
+transient I/O fault schedules, torn-tail WAL truncation, bit-flip
+corruption, and the crash/recover differential harness.
 
 A ``FaultInjector`` is shared by an engine (or every shard of a fleet)
 and armed at one of the ``CRASH_POINTS``; the instrumented site raises
@@ -11,6 +12,23 @@ disk: the snapshot directory and the WAL file.  ``apply_torn_tail``
 then models the page cache: everything fsynced survives; of the
 appended-but-unsynced tail, an arbitrary byte prefix survives (possibly
 cutting a frame in half — the WAL's CRC framing absorbs the cut).
+
+Arming modes (both crash and I/O points): the legacy one-shot
+``arm(point, after=N)`` fires exactly once on the N-th hit; persistent
+mode (``every=k``) fires every k-th hit after the countdown without
+re-arming ("every 3rd fsync fails"); probabilistic mode (``p=q,
+seed=s``) fires each eligible hit with probability q from a SEEDED rng
+(deterministic schedules for tests); ``count=c`` bounds the total
+firings of a persistent/probabilistic arm (None = unbounded).
+
+I/O faults (``IO_POINTS``, consumed by ``core/iostack.IOStack``) are
+armed with ``arm_io(point, error=...)``: ``error="EIO"`` injects a
+transient read/write/fsync failure the stack retries under capped
+exponential backoff; ``error="ENOSPC"`` raises ``StorageFull`` (the
+engine converts it to a write stall that drains when the fault is
+disarmed); ``latency=seconds`` injects a slow-I/O spike (served, timed,
+and counted — never an error).  ``flip_bit`` models bit-rot in a live
+SSTable's payload for the scrub pass to detect.
 
 Crash points::
 
@@ -53,6 +71,7 @@ from .memtable import TOMBSTONE
 
 CRASH_POINTS = ("pre-flush", "mid-merge-quantum", "post-wal-pre-memtable",
                 "mid-snapshot", "post-primary-pre-index")
+IO_POINTS = ("io-read", "io-write", "io-fsync", "io-replace", "io-unlink")
 
 
 class SimulatedCrash(RuntimeError):
@@ -63,37 +82,124 @@ class SimulatedCrash(RuntimeError):
         self.point = point
 
 
+class _ArmSpec:
+    """One armed point's firing schedule (shared by crash and I/O
+    points): countdown (``after``), then one-shot / every-k-th /
+    probabilistic, optionally bounded by a total firing ``count``."""
+
+    __slots__ = ("after", "every", "p", "count", "rng", "hits", "payload")
+
+    def __init__(self, after: int, every: Optional[int],
+                 p: Optional[float], count: Optional[int], seed: int,
+                 payload: Optional[dict] = None):
+        if after < 1:
+            raise ValueError("after must be >= 1")
+        if every is not None and every < 1:
+            raise ValueError("every must be >= 1")
+        if p is not None and not 0.0 < p <= 1.0:
+            raise ValueError("p must be in (0, 1]")
+        self.after = int(after)
+        self.every = None if every is None else int(every)
+        self.p = None if p is None else float(p)
+        # default: legacy one-shot (a single firing disarms the point)
+        if count is None and every is None and p is None:
+            count = 1
+        self.count = None if count is None else int(count)
+        self.rng = np.random.default_rng(seed) if p is not None else None
+        self.hits = 0
+        self.payload = payload or {}
+
+    def fire(self) -> bool:
+        """Account one hit; True when the fault fires this hit."""
+        self.hits += 1
+        if self.hits < self.after:
+            return False
+        if self.every is not None and \
+                (self.hits - self.after) % self.every != 0:
+            return False
+        if self.p is not None and float(self.rng.random()) >= self.p:
+            return False
+        if self.count is not None:
+            self.count -= 1
+        return True
+
+    @property
+    def exhausted(self) -> bool:
+        return self.count is not None and self.count <= 0
+
+
 class FaultInjector:
-    """Countdown-armed crash points.  ``arm(point, after=k)`` fires on
-    the k-th hit of ``point``; unarmed points are free (one dict probe).
-    One injector may be shared across engines (fleet shards) — whichever
-    shard hits the armed point first crashes the whole process, like
-    reality."""
+    """Armed crash points + transient-I/O fault schedules.  Unarmed
+    points are free (one dict probe).  One injector may be shared
+    across engines (fleet shards) — whichever shard hits an armed crash
+    point first crashes the whole process, like reality; I/O fault
+    schedules likewise apply to whichever shard's stack hits them."""
 
     def __init__(self):
-        self._armed: dict[str, int] = {}
+        self._armed: dict[str, _ArmSpec] = {}
+        self._io: dict[str, _ArmSpec] = {}
         self.fired: Optional[str] = None
 
-    def arm(self, point: str, after: int = 1) -> None:
+    def arm(self, point: str, after: int = 1, every: Optional[int] = None,
+            p: Optional[float] = None, count: Optional[int] = None,
+            seed: int = 0) -> None:
+        """Arm a crash point.  Default = the legacy one-shot countdown
+        (fires on the ``after``-th hit, then disarms); ``every``/``p``
+        make it persistent/probabilistic (see module docstring)."""
         if point not in CRASH_POINTS:
             raise ValueError(f"unknown crash point {point!r}; "
                              f"expected one of {CRASH_POINTS}")
-        if after < 1:
-            raise ValueError("after must be >= 1")
-        self._armed[point] = int(after)
+        self._armed[point] = _ArmSpec(after, every, p, count, seed)
 
-    def disarm(self) -> None:
-        self._armed.clear()
+    def arm_io(self, point: str, error: Optional[str] = "EIO",
+               after: int = 1, every: Optional[int] = None,
+               p: Optional[float] = None, count: Optional[int] = None,
+               seed: int = 0, latency: float = 0.0) -> None:
+        """Arm a transient I/O fault at one of ``IO_POINTS``.
+        ``error`` is ``"EIO"`` (retryable), ``"ENOSPC"`` (stall until
+        disarmed) or ``None`` (latency-only spike); ``latency`` seconds
+        are injected on every firing either way."""
+        if point not in IO_POINTS:
+            raise ValueError(f"unknown I/O point {point!r}; "
+                             f"expected one of {IO_POINTS}")
+        if error not in ("EIO", "ENOSPC", None):
+            raise ValueError(f"unknown I/O error kind {error!r}")
+        self._io[point] = _ArmSpec(after, every, p, count, seed,
+                                   payload={"error": error,
+                                            "latency": float(latency)})
+
+    def disarm(self, point: Optional[str] = None) -> None:
+        """Disarm one point (crash or I/O) or, with no argument,
+        everything."""
+        if point is None:
+            self._armed.clear()
+            self._io.clear()
+            return
+        self._armed.pop(point, None)
+        self._io.pop(point, None)
 
     def hit(self, point: str) -> None:
-        count = self._armed.get(point)
-        if count is None:
+        spec = self._armed.get(point)
+        if spec is None:
             return
-        if count <= 1:
-            del self._armed[point]
+        if spec.fire():
+            if spec.exhausted:
+                del self._armed[point]
             self.fired = point
             raise SimulatedCrash(point)
-        self._armed[point] = count - 1
+
+    def check_io(self, point: str) -> Optional[dict]:
+        """One I/O-point hit: the fault payload (``{"error", "latency"}``)
+        when the schedule fires, else None.  Called by ``IOStack`` before
+        each attempt, so a persistent schedule fails retries too."""
+        spec = self._io.get(point)
+        if spec is None:
+            return None
+        if not spec.fire():
+            return None
+        if spec.exhausted:
+            del self._io[point]
+        return dict(spec.payload)
 
 
 def apply_torn_tail(wal, frac: float) -> int:
@@ -113,6 +219,21 @@ def apply_torn_tail(wal, frac: float) -> int:
         frac * (wal.tail_written_bytes - wal.tail_synced_bytes)))
     os.truncate(wal.tail_path, tail_keep)
     return sealed_bytes + tail_keep
+
+
+def flip_bit(table, entry: int = 0, bit: int = 0) -> None:
+    """Bit-rot model: flip one bit of ``entry``'s VALUE in a live
+    SSTable's authoritative host mirror (values, not keys, so the run
+    stays sorted and the corruption is invisible to every structural
+    check — only a checksum can catch it).  The scrub pass
+    (``core/scrub.py``) must detect the mismatch against the table's
+    sealed CRC and quarantine + repair."""
+    vals = table.vals_np
+    if len(vals) == 0:
+        raise ValueError("cannot corrupt an empty table")
+    b = vals.view(np.uint8)
+    i = int(entry) % len(vals) * vals.itemsize + (int(bit) // 8)
+    b[i] ^= np.uint8(1 << (int(bit) % 8))
 
 
 # ---------------------------------------------------------------------------

@@ -461,15 +461,27 @@ class LSMFleet:
         return [res[s] for s in sorted(res)]
 
     def recover(self, stores, budget_per_epoch: int = 1 << 30,
-                max_epochs: int = 1_000_000) -> int:
+                max_epochs: int = 1_000_000,
+                serve_during_recovery: bool = False):
         """Fleet crash recovery under the GLOBAL budget: one
         ``wal.RecoverySession`` per shard; each epoch the arbiter splits
         ``budget_per_epoch`` across shards by remaining replay debt
         (WAL entries left plus replay-induced background work) — the
         same arbitration normal background I/O runs under, so recovery
         bandwidth competes fleet-wide exactly like merges do.  Returns
-        the epoch count (virtual recovery time)."""
+        the epoch count (virtual recovery time).
+
+        With ``serve_during_recovery=True`` the fleet goes ONLINE
+        instead: every shard opens an online ``RecoverySession`` (reads
+        and writes admitted immediately, consistency per the engine's
+        online-recovery contract) and the list of sessions is returned
+        at once — ordinary ``fleet.pump`` epochs then drive replay as a
+        per-shard debt stream, arbitrated against serving I/O by the
+        same global arbiter."""
         from .wal import RecoverySession
+        if serve_during_recovery:
+            return [RecoverySession(e, st, online=True)
+                    for e, st in zip(self.engines, stores)]
         sessions = [RecoverySession(e, st)
                     for e, st in zip(self.engines, stores)]
         epochs = 0
@@ -500,6 +512,17 @@ class LSMFleet:
 
     def per_shard_stats(self) -> list[dict]:
         return [dict(e.stats) for e in self.engines]
+
+    def health(self) -> dict:
+        """Fleet-wide fault-plane counters: the per-shard
+        ``engine.health()`` dicts summed key-wise (all values are flat
+        numbers, so the rollup is exact; ``recovering`` becomes the
+        COUNT of shards still replaying)."""
+        out: dict = {}
+        for e in self.engines:
+            for k, v in e.health().items():
+                out[k] = out.get(k, 0) + v
+        return out
 
     def num_components(self) -> int:
         return sum(e.num_components() for e in self.engines)

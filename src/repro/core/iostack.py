@@ -1,0 +1,212 @@
+"""Fault-tolerant file-I/O layer for the durability plane (the
+"storage stack" under the WAL and the snapshot store).
+
+Every file operation the ``WriteAheadLog`` and the
+``EngineSnapshotStore`` perform routes through ONE ``IOStack``: a thin
+guard that (a) consults the shared ``FaultInjector`` for an injected
+transient fault at a named I/O point, (b) retries transient errors
+(EIO) under a capped-exponential-backoff policy with a wall-clock
+deadline, and (c) classifies the failures that remain into TYPED
+errors the engine maps to its existing degradation paths:
+
+* ``IOFaultError``   — a transient fault outlived the retry policy
+  (retries + deadline exhausted).  Surfaced to the caller; never a
+  silent wrong answer.
+* ``StorageFull``    — ENOSPC.  NOT retried under backoff (waiting does
+  not free space): the engine's write path catches it and converts the
+  rejection into an ordinary constraint stall
+  (``stats["stall_events"]`` + ``health()["enospc_stalls"]``), so
+  writes stall gracefully and drain when space returns.
+* ``CorruptionError``— a checksum mismatch (snapshot file, manifest
+  table entry, or a live SSTable caught by the scrub pass).  Raised on
+  restore; the live scrub path quarantines + repairs instead (see
+  ``core/scrub.py``), escalating to ``UnrepairableCorruptionError``
+  only when no durable copy of the data survives.
+
+Slow-I/O latency spikes are injected as a per-op sleep (the injector's
+``latency`` spec); the stack records the injected seconds so tests and
+benchmarks can assert the spike was served, not dropped.
+
+The stack keeps flat numeric counters (``stats``) — retries, backoff
+seconds, faults injected by kind — which ``engine.health()`` rolls up
+per group and the fleet sums across shards.
+"""
+from __future__ import annotations
+
+import os
+import time
+import zlib
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class IOFaultError(OSError):
+    """A transient I/O fault outlived the retry policy (typed: callers
+    see the failure, never silently-wrong data)."""
+
+    def __init__(self, point: str, attempts: int):
+        super().__init__(f"I/O fault at {point!r} persisted through "
+                         f"{attempts} attempts")
+        self.point = point
+        self.attempts = attempts
+
+
+class StorageFull(OSError):
+    """ENOSPC: the write path converts this into a constraint-style
+    stall (writes drain when space returns) instead of crashing."""
+
+    def __init__(self, point: str):
+        super().__init__(f"no space left on device (at {point!r})")
+        self.point = point
+
+
+class CorruptionError(RuntimeError):
+    """A checksum mismatch on durable data (snapshot file or live
+    table).  Restore raises it; the live scrub pass repairs instead."""
+
+
+class UnrepairableCorruptionError(CorruptionError):
+    """Corruption with no surviving durable copy to rebuild from:
+    reads of the affected tree raise this rather than answer wrong."""
+
+
+def data_crc32(keys: np.ndarray, vals: np.ndarray) -> int:
+    """The one checksum formula for a sorted run's content: CRC32 over
+    the key bytes then the value bytes (little-endian mirrors).  Shared
+    by ``SSTable.seal_checksum``, the snapshot store's manifest entries
+    and the scrub pass, so a live table and its snapshot file match
+    checksums iff they hold identical data."""
+    crc = zlib.crc32(np.ascontiguousarray(keys, np.uint32).tobytes())
+    return zlib.crc32(np.ascontiguousarray(vals, np.int32).tobytes(), crc)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff with a per-operation deadline."""
+    max_retries: int = 6               # attempts = 1 + max_retries
+    backoff_s: float = 0.001           # first retry's sleep
+    backoff_cap_s: float = 0.05        # per-sleep ceiling
+    deadline_s: float = 2.0            # wall-clock budget per operation
+
+    def sleep_for(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based)."""
+        return min(self.backoff_s * (2 ** (attempt - 1)),
+                   self.backoff_cap_s)
+
+
+class IOStack:
+    """Retrying guard around the durability plane's file operations.
+
+    ``faults`` is the shared ``FaultInjector`` (or None — then every op
+    runs bare).  ``sleep``/``clock`` are injectable so tests run the
+    backoff schedule without real waiting (the stack still counts the
+    seconds it WOULD have slept in ``stats["backoff_s"]``)."""
+
+    def __init__(self, faults=None, policy: Optional[RetryPolicy] = None,
+                 sleep: Callable[[float], None] = time.sleep,
+                 clock: Callable[[], float] = time.monotonic):
+        self.faults = faults
+        self.policy = policy or RetryPolicy()
+        self._sleep = sleep
+        self._clock = clock
+        self.stats = {"io_retries": 0, "io_backoff_s": 0.0,
+                      "io_faults": 0, "io_enospc": 0,
+                      "io_latency_injected_s": 0.0}
+
+    # ------------------------------------------------------------ guard
+    def call(self, point: str, fn: Callable, *args, **kwargs):
+        """Run ``fn`` under the fault/retry guard for I/O point
+        ``point`` (one of ``faults.IO_POINTS``).  Injected EIO retries
+        with capped exponential backoff until the policy's retry count
+        or deadline runs out (then ``IOFaultError``); injected ENOSPC
+        raises ``StorageFull`` immediately (backoff cannot free space);
+        an injected latency spike sleeps, records, and proceeds."""
+        pol = self.policy
+        t0 = self._clock()
+        attempt = 0
+        while True:
+            attempt += 1
+            spec = None
+            if self.faults is not None:
+                spec = self.faults.check_io(point)
+            if spec is not None:
+                lat = float(spec.get("latency", 0.0))
+                if lat > 0.0:
+                    self.stats["io_latency_injected_s"] += lat
+                    self._sleep(lat)
+                err = spec.get("error")
+                if err == "ENOSPC":
+                    self.stats["io_faults"] += 1
+                    self.stats["io_enospc"] += 1
+                    raise StorageFull(point)
+                if err == "EIO":
+                    self.stats["io_faults"] += 1
+                    if attempt > pol.max_retries or \
+                            self._clock() - t0 > pol.deadline_s:
+                        raise IOFaultError(point, attempt)
+                    delay = pol.sleep_for(attempt)
+                    self.stats["io_retries"] += 1
+                    self.stats["io_backoff_s"] += delay
+                    self._sleep(delay)
+                    continue
+            try:
+                return fn(*args, **kwargs)
+            except OSError as e:               # real transient I/O error
+                if getattr(e, "errno", None) == 28:         # ENOSPC
+                    self.stats["io_faults"] += 1
+                    self.stats["io_enospc"] += 1
+                    raise StorageFull(point) from e
+                self.stats["io_faults"] += 1
+                if attempt > pol.max_retries or \
+                        self._clock() - t0 > pol.deadline_s:
+                    raise IOFaultError(point, attempt) from e
+                delay = pol.sleep_for(attempt)
+                self.stats["io_retries"] += 1
+                self.stats["io_backoff_s"] += delay
+                self._sleep(delay)
+
+    # ----------------------------------------------------- file primitives
+    def write(self, f, data: bytes) -> None:
+        """One guarded buffered write + flush (to the OS, not disk).
+        The injector fires BEFORE any byte is written, so an injected
+        failure never leaves a partial frame — torn tails come from the
+        crash model (``apply_torn_tail``), not from fault injection."""
+        def _op():
+            f.write(data)
+            f.flush()
+        self.call("io-write", _op)
+
+    def fsync(self, f) -> None:
+        self.call("io-fsync", lambda: os.fsync(f.fileno()))
+
+    def read_bytes(self, path: os.PathLike) -> bytes:
+        return self.call("io-read", Path(path).read_bytes)
+
+    def read_text(self, path: os.PathLike) -> str:
+        return self.call("io-read", Path(path).read_text)
+
+    def truncate(self, path: os.PathLike, n: int) -> None:
+        self.call("io-write", os.truncate, path, n)
+
+    def replace(self, src: os.PathLike, dst: os.PathLike) -> None:
+        self.call("io-replace", os.replace, src, dst)
+
+    def unlink(self, path: os.PathLike) -> None:
+        self.call("io-unlink",
+                  lambda: Path(path).unlink(missing_ok=True))
+
+    def write_atomic_text(self, path: Path, text: str) -> None:
+        """The manifest-commit idiom, guarded end to end: write a
+        sibling tmp file, then atomically replace the target."""
+        tmp = path.with_suffix(".tmp")
+        self.call("io-write", tmp.write_text, text)
+        self.replace(tmp, path)
+
+    def savez(self, path: os.PathLike, **arrays) -> None:
+        self.call("io-write", np.savez, path, **arrays)
+
+    def load_npz(self, path: os.PathLike):
+        return self.call("io-read", np.load, path)

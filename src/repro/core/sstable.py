@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.kernels.bloom.ops import bloom_build, bloom_probe, filter_params
 from .component import Component
+from .iostack import data_crc32
 from .memtable import scan_window, sorted_lookup
 
 
@@ -49,6 +50,9 @@ class SSTable:
     stack_slot: int = -1               # row in the engine's persistent
                                        # filter stack (set by its sync)
     interpret: bool = True             # Pallas mode for probe kernels
+    crc32: Optional[int] = None        # content checksum sealed at bind
+                                       # (``data_crc32``); the scrub pass
+                                       # re-verifies it to catch bit-rot
     bloom_np: Optional[np.ndarray] = None
     _keys_dev: Optional[jnp.ndarray] = field(default=None, repr=False)
     _vals_dev: Optional[jnp.ndarray] = field(default=None, repr=False)
@@ -109,6 +113,22 @@ class SSTable:
     def _host(self) -> tuple[np.ndarray, np.ndarray]:
         """Host-side (keys, vals) mirrors — the authoritative storage."""
         return self.keys_np, self.vals_np
+
+    # -- integrity ------------------------------------------------------------
+    def seal_checksum(self) -> int:
+        """Seal the content CRC (called when the table binds into a
+        read view — flush, merge completion, snapshot restore).  O(n),
+        but so was producing the run; the scrub pass amortizes
+        RE-verification across pump quanta instead."""
+        self.crc32 = int(data_crc32(self.keys_np, self.vals_np))
+        return self.crc32
+
+    def verify_checksum(self) -> bool:
+        """True when the host mirrors still match the sealed CRC (an
+        unsealed table vacuously passes)."""
+        if self.crc32 is None:
+            return True
+        return int(data_crc32(self.keys_np, self.vals_np)) == self.crc32
 
     def _ensure_bloom(self) -> jnp.ndarray:
         """Build the filter on first use (never on the background path)."""

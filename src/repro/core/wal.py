@@ -49,6 +49,27 @@ unsynced-but-buffered frames may or may not survive (page-cache
 reality, modeled by ``faults.apply_torn_tail``, which only ever cuts
 the tail segment).
 
+Archival: with ``archive_dir`` set, ``truncate_upto`` MOVES sealed
+segments into the archive directory (an atomic rename under the I/O
+stack) instead of unlinking them, under the canonical rotated name
+``<name>.NNNNNN`` (segment 0 included).  Archived segments stay
+replayable: ``frames_since`` transparently prepends the contiguous
+archived suffix when asked for LSNs older than the live log's
+``start_lsn``, and recovery clamps its origin to ``oldest_lsn`` (the
+archive's first LSN) rather than the live log's.  Archival is I/O like
+any other: ``truncate_upto`` returns the entries moved so the caller
+(``StorageGroup.snapshot``) can charge them to the shared budget.
+
+Every file operation — append writes, fsyncs, open-scan reads,
+truncation, unlink, archival rename — routes through one ``IOStack``
+(``core/iostack.py``): injected transient EIO retries under capped
+exponential backoff with a deadline (then surfaces as a typed
+``IOFaultError``), injected ENOSPC raises ``StorageFull`` for the
+engine's stall path, and injected latency spikes sleep and are
+counted.  A failed append mutates NO log state (the frame write is a
+single guarded call that fires before any byte lands), so a stalled
+write can simply be retried once space returns.
+
 Recovery (``RecoverySession``) restores the snapshot's per-tree
 SSTables (see ``checkpoint.store.EngineSnapshotStore``), then replays
 the WAL suffix from the minimum per-tree ``flushed_lsn`` in GLOBAL LSN
@@ -60,6 +81,32 @@ budget (apportioned across trees by background debt), so a starved
 bandwidth budget slows recovery measurably (``benchmarks/recovery.py``
 pins this).  The recovered group's read view is bit-identical to the
 pre-crash durable state, tree by tree.
+
+ONLINE recovery (``RecoverySession(..., online=True)``) opens the
+group for traffic immediately instead of replaying first:
+
+* The session becomes the group's replay stream (``group._recovery``)
+  and the group clock jumps to the LIVE frontier (``wal.end_lsn``), so
+  new writes are numbered after the entire crashed history.
+* The WAL tail is rotated before the first live write: replayed and
+  live frames never share a segment (the fresh-segment rule), so a
+  second crash mid-recovery still tears only live bytes.
+* The REPLAY WATERMARK (``session.watermark``) is the durable-prefix
+  frontier: every LSN below it has been re-admitted.  Reads observe
+  ``log.prefix(watermark) + live writes`` — a consistent prefix plus
+  everything acknowledged since reopen.  Live writes win over
+  unreplayed history: each tree tracks the keys written since reopen
+  and the replay step drops staged entries for those keys (the
+  memtable is newest-wins by insertion order, so un-dropped old
+  entries would clobber newer live ones).
+* Replay is driven from ``pump``: the session's remaining entries are
+  one more background-debt stream, apportioned against flush and
+  merge debt by the same largest-remainder split — so a starved
+  budget slows full recovery but never time-to-first-read, and the
+  fleet arbiter (``fleet.recover(serve_during_recovery=True)``)
+  trades recovery speed against serving tails with no new mechanism.
+* While recovering, the group's ``flushed_lsn`` is capped by the
+  watermark: snapshot truncation can never drop un-replayed WAL.
 """
 from __future__ import annotations
 
@@ -72,6 +119,7 @@ from typing import Optional
 
 import numpy as np
 
+from .iostack import IOStack
 from .memtable import TOMBSTONE  # noqa: F401  (re-export: the WAL's delete encoding)
 
 WAL_MAGIC = 0x57414C32            # "WAL2" (v1 had no tree id)
@@ -103,12 +151,21 @@ class WriteAheadLog:
     durable (it survived the crash by definition)."""
 
     def __init__(self, path: str | os.PathLike,
-                 segment_entries: int = 1 << 14):
+                 segment_entries: int = 1 << 14,
+                 io: Optional[IOStack] = None,
+                 archive_dir: str | os.PathLike | None = None):
         self.path = Path(path)
         self.segment_entries = max(1, int(segment_entries))
+        self.io = io if io is not None else IOStack()
+        self.archive_dir = Path(archive_dir) if archive_dir else None
         self._frames: list[tuple[int, int, np.ndarray]] = []
         #            (base_lsn, tree, recs) — global LSN order
         self._segs: list[_Segment] = []
+        self._archived: list[tuple[int, int, np.ndarray]] = []
+        #            archived frames, same shape, all LSNs < start_lsn
+        self.archived_segments = 0
+        self.archived_entries = 0
+        self.archived_bytes = 0
         self.start_lsn = 0            # first LSN still present in the log
         self.end_lsn = 0              # next LSN to be appended
         self._next_seq = 0
@@ -116,6 +173,7 @@ class WriteAheadLog:
         if not self._segs:            # fresh log: segment 0 is ``path``
             self._segs = [_Segment(self.path, 0, end_lsn=self.end_lsn)]
             self._next_seq = 1
+        self._scan_archive()
         self._f = open(self._segs[-1].path, "ab")
         self.written_bytes = sum(s.nbytes for s in self._segs)
         self.synced_bytes = self.written_bytes  # on disk at open == durable
@@ -153,7 +211,7 @@ class WriteAheadLog:
         lsn: Optional[int] = None
         cut_at: Optional[int] = None
         for i, (seq, p) in enumerate(found):
-            data = p.read_bytes()
+            data = self.io.read_bytes(p)
             off = 0
             n_in_seg = 0
             seg_frames: list[tuple[int, int, np.ndarray]] = []
@@ -179,17 +237,75 @@ class WriteAheadLog:
                 self._segs.append(_Segment(p, seq, n_in_seg, off, lsn or 0))
             if off < len(data) or len(data) == 0:
                 if off < len(data):
-                    os.truncate(p, off)                # drop the torn tail
+                    self.io.truncate(p, off)           # drop the torn tail
                 elif off == 0:
-                    p.unlink(missing_ok=True)          # crashed-rotation husk
+                    self.io.unlink(p)                  # crashed-rotation husk
                 cut_at = i
                 break
         if cut_at is not None:
             for seq, p in found[cut_at + 1:]:
-                p.unlink(missing_ok=True)
+                self.io.unlink(p)
         self.end_lsn = lsn if lsn is not None else 0
         if lsn is None:
             self.start_lsn = 0
+
+    def _scan_archive(self) -> None:
+        """Load replayable frames from the archive directory: archived
+        segments are sealed (whole, CRC-valid, fully durable), so the
+        scan only validates and never repairs.  Only the CONTIGUOUS run
+        ending exactly at the live log's ``start_lsn`` is kept — a gap
+        would make replay skip history, so a mismatched archive is
+        ignored rather than trusted.  A fresh live log (nothing on
+        disk) positions itself at the archive's end so appended LSNs
+        continue the archived history."""
+        if self.archive_dir is None or not self.archive_dir.exists():
+            return
+        found: list[tuple[int, Path]] = []
+        for p in self.archive_dir.glob(self.path.name + ".*"):
+            suffix = p.name[len(self.path.name) + 1:]
+            if suffix.isdigit():
+                found.append((int(suffix), p))
+        frames: list[tuple[int, int, np.ndarray]] = []
+        nbytes = 0
+        lsn: Optional[int] = None
+        for seq, p in sorted(found):
+            data = self.io.read_bytes(p)
+            off = 0
+            while off + _HEADER.size <= len(data):
+                magic, n, tree, base, crc = _HEADER.unpack_from(data, off)
+                end = off + _HEADER.size + n * REC_DTYPE.itemsize
+                if magic != WAL_MAGIC or n == 0 or end > len(data):
+                    break
+                payload = data[off + _HEADER.size:end]
+                if zlib.crc32(payload) != crc:
+                    break
+                if lsn is not None and base != lsn:
+                    break                              # non-contiguous
+                lsn = base + n
+                frames.append((base, tree,
+                               np.frombuffer(payload, REC_DTYPE)))
+                nbytes += end - off
+                off = end
+        if not frames:
+            return
+        live_empty = self.end_lsn == 0 and len(self._segs) == 1 \
+            and self._segs[0].nbytes == 0
+        if live_empty:
+            # continue the archived history from a clean slate
+            self.start_lsn = self.end_lsn = lsn
+            self._segs[0].end_lsn = lsn
+        elif lsn != self.start_lsn:
+            return                                     # gap: unusable
+        self._archived = frames
+        self.archived_segments = len(found)
+        self.archived_entries = sum(len(r) for _, _, r in frames)
+        self.archived_bytes = nbytes
+
+    @property
+    def oldest_lsn(self) -> int:
+        """First LSN still replayable — through the archive when one is
+        attached and contiguous, else the live log's ``start_lsn``."""
+        return self._archived[0][0] if self._archived else self.start_lsn
 
     # ------------------------------------------------------------- writing
     def append(self, keys, vals, tree: int = 0) -> int:
@@ -209,9 +325,10 @@ class WriteAheadLog:
         base = self.end_lsn
         hdr = _HEADER.pack(WAL_MAGIC, n, int(tree), base,
                            zlib.crc32(payload))
-        self._f.write(hdr)
-        self._f.write(payload)
-        self._f.flush()                       # to the OS, not to disk
+        # ONE guarded call; an injected fault fires before any byte
+        # lands, so a failed append leaves the log state untouched and
+        # the caller can stall + retry (ENOSPC) or surface the error.
+        self.io.write(self._f, hdr + payload)  # flushed to the OS, not disk
         self._frames.append((base, int(tree), recs))
         self.end_lsn = base + n
         tail = self._segs[-1]
@@ -231,9 +348,17 @@ class WriteAheadLog:
         seq = self._next_seq
         self._next_seq += 1
         seg = _Segment(self._seg_path(seq), seq, end_lsn=self.end_lsn)
-        seg.path.unlink(missing_ok=True)       # stale crashed-rotation file
+        self.io.unlink(seg.path)               # stale crashed-rotation file
         self._segs.append(seg)
         self._f = open(seg.path, "ab")
+
+    def rotate(self) -> None:
+        """Seal the tail NOW regardless of fill (online recovery's
+        fresh-segment rule: live frames open a new segment so they
+        never share a file with the replayed history).  No-op on an
+        empty tail."""
+        if self._segs[-1].nbytes > 0:
+            self._rotate()
 
     def sync(self) -> int:
         """fsync the tail: advance the durability boundary over
@@ -243,7 +368,7 @@ class WriteAheadLog:
         delta = self.written_bytes - self.synced_bytes
         if delta > 0:
             self._f.flush()
-            os.fsync(self._f.fileno())
+            self.io.fsync(self._f)
             self.synced_bytes = self.written_bytes
             self.synced_lsn = self.end_lsn
             self.syncs += 1
@@ -283,9 +408,13 @@ class WriteAheadLog:
     def entries_since(self, lsn: int) -> tuple[np.ndarray, np.ndarray]:
         """All (keys, vals) with LSN >= ``lsn``, concatenated in LSN
         order regardless of tree — the single-tree replay suffix (and
-        the flat view tests/benchmarks inspect)."""
+        the flat view tests/benchmarks inspect).  Like ``frames_since``,
+        reads straight through an attached contiguous archive."""
         ks, vs = [], []
-        for base, _tree, recs in self._frames:
+        frames = self._frames
+        if lsn < self.start_lsn and self._archived:
+            frames = self._archived + frames
+        for base, _tree, recs in frames:
             if base + len(recs) <= lsn:
                 continue
             sl = recs[max(0, lsn - base):]
@@ -302,9 +431,14 @@ class WriteAheadLog:
         vals)`` per surviving frame in global LSN order, with frames
         straddling ``lsn`` sliced to their suffix (``base_lsn`` is the
         slice's first LSN).  Multi-tree recovery routes each frame to
-        its tree."""
+        its tree.  When ``lsn`` predates the live log's ``start_lsn``
+        and a contiguous archive is attached, archived frames are
+        included — replay reads straight through cold storage."""
         out = []
-        for base, tree, recs in self._frames:
+        frames = self._frames
+        if lsn < self.start_lsn and self._archived:
+            frames = self._archived + frames
+        for base, tree, recs in frames:
             if base + len(recs) <= lsn:
                 continue
             sl = recs[max(0, lsn - base):]
@@ -314,13 +448,17 @@ class WriteAheadLog:
         return out
 
     # ---------------------------------------------------------- truncation
-    def truncate_upto(self, lsn: int) -> None:
+    def truncate_upto(self, lsn: int) -> int:
         """Drop whole SEALED segments whose entries all precede ``lsn``
         (snapshot compaction: those entries are captured in durable
-        SSTables).  Segment-granular and O(1) per segment — an unlink,
-        never a rewrite: a segment straddling ``lsn`` is kept whole and
-        replay skips its already-flushed prefix (so ``start_lsn`` lands
-        at or before ``lsn``, never past it)."""
+        SSTables).  Segment-granular and O(1) per segment — an unlink
+        (or, with ``archive_dir`` set, an atomic rename into the
+        archive under the canonical ``<name>.NNNNNN`` name), never a
+        rewrite: a segment straddling ``lsn`` is kept whole and replay
+        skips its already-flushed prefix (so ``start_lsn`` lands at or
+        before ``lsn``, never past it).  Returns the logical entries
+        ARCHIVED by this call (0 in unlink mode) so the caller can
+        charge the copy-out to the I/O budget."""
         drop = 0
         for seg in self._segs[:-1]:            # the tail never drops
             if seg.end_lsn <= lsn:
@@ -328,16 +466,34 @@ class WriteAheadLog:
             else:
                 break
         if drop == 0:
-            return
+            return 0
         boundary = self._segs[drop - 1].end_lsn
+        archived = 0
         for seg in self._segs[:drop]:
             self.written_bytes -= seg.nbytes
             self.synced_bytes -= seg.nbytes    # sealed == fully synced
-            seg.path.unlink(missing_ok=True)
+            if self.archive_dir is not None:
+                self.archive_dir.mkdir(parents=True, exist_ok=True)
+                dst = self.archive_dir / f"{self.path.name}.{seg.seq:06d}"
+                self.io.replace(seg.path, dst)
+                archived += seg.entries
+                self.archived_segments += 1
+                self.archived_entries += seg.entries
+                self.archived_bytes += seg.nbytes
+            else:
+                self.io.unlink(seg.path)
+        moved = [(b, t, r) for b, t, r in self._frames if b < boundary]
         self._segs = self._segs[drop:]
         self._frames = [(b, t, r) for b, t, r in self._frames
                         if b >= boundary]
+        if self.archive_dir is not None and moved:
+            if self._archived:
+                lb, _lt, lr = self._archived[-1]
+                if lb + len(lr) != moved[0][0]:    # stale disjoint archive
+                    self._archived = []
+            self._archived.extend(moved)
         self.start_lsn = self._frames[0][0] if self._frames else self.end_lsn
+        return archived
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
@@ -370,10 +526,22 @@ class RecoverySession:
     ``group.pump`` against the same budget (apportioned across trees by
     background debt), so recovery speed is bandwidth-bound end to end.
     ``run(budget)`` loops to completion and returns the epoch count
-    (the virtual recovery time at that bandwidth)."""
+    (the virtual recovery time at that bandwidth).
 
-    def __init__(self, engine, store=None):
+    With ``online=True`` the group opens for traffic IMMEDIATELY:
+    construction restores the snapshot, rotates the WAL tail (the
+    fresh-segment rule), jumps the group clock to the live frontier,
+    and attaches this session as the group's replay stream — ``pump``
+    then interleaves budgeted replay with serving (replay debt is one
+    more background stream in the largest-remainder split), reads
+    observe durable-prefix(``watermark``) + live writes, and live
+    writes win over the unreplayed history via per-tree live-key
+    tracking (see the module docstring's consistency contract).
+    ``advance``/``run`` on an online session simply drive ``pump``."""
+
+    def __init__(self, engine, store=None, online: bool = False):
         self.engine = engine
+        self.online = bool(online)
         trees = engine.trees
         with engine.lock():
             snap = store.load() if store is not None else None
@@ -393,7 +561,7 @@ class RecoverySession:
                 engine.now = max(engine.now, float(snap.get("now", 0.0)))
             base = min(base_by_tree.values()) if base_by_tree else 0
             if engine.wal is not None:
-                base = max(base, engine.wal.start_lsn)
+                base = max(base, engine.wal.oldest_lsn)
                 frames = engine.wal.frames_since(base)
             else:
                 frames = []
@@ -404,17 +572,50 @@ class RecoverySession:
             # already-flushed prefix (LSNs below its snapshot origin)
             self._chunks: list[tuple[int, np.ndarray, np.ndarray, int]] = []
             self.total = 0
+            self.replay_end = base      # first LSN after the staged history
             for tree, fbase, ks, vs in frames:
                 skip = max(0, base_by_tree.get(tree, 0) - fbase)
+                self.replay_end = max(self.replay_end, fbase + len(ks))
                 if skip >= len(ks):
                     continue
                 self._chunks.append((tree, ks[skip:], vs[skip:],
                                      fbase + skip))
                 self.total += len(ks) - skip
+            self.watermark = base       # durable-prefix frontier replayed
+            if self.online:
+                self._open_online(base)
         self._ci = 0          # current chunk index
         self.pos = 0          # replayed entries (all chunks)
         self._cpos = 0        # position within the current chunk
         self.epochs = 0
+
+    def _open_online(self, base: int) -> None:
+        """Attach as the group's live replay stream (engine lock held):
+        fresh WAL segment for live frames, group clock at the live
+        frontier, live-key tracking on, watermark mirrored."""
+        eng = self.engine
+        live_frontier = self.replay_end
+        if eng.wal is not None:
+            eng.wal.rotate()               # the fresh-segment rule
+            live_frontier = max(live_frontier, eng.wal.end_lsn)
+        eng._lsn = live_frontier           # new writes number after history
+        for t in eng.trees:
+            t._live_keys = set()
+        eng._replay_watermark = self.watermark
+        eng._recovery = self
+        if self.total == 0:                # nothing to replay: already done
+            self._finish_online()
+
+    def _finish_online(self) -> None:
+        """Replay drained (engine lock held): detach from the group and
+        stop filtering — the group is fully recovered and live."""
+        eng = self.engine
+        self.watermark = self.replay_end
+        if eng._recovery is self:
+            eng._recovery = None
+            eng._replay_watermark = None
+            for t in eng.trees:
+                t._live_keys = None
 
     @property
     def remaining(self) -> int:
@@ -424,12 +625,63 @@ class RecoverySession:
     def done(self) -> bool:
         return self.pos >= self.total
 
-    def advance(self, budget_entries: int) -> int:
-        """One recovery epoch: replay/pump up to ``budget_entries`` of
-        I/O.  Returns entries of budget actually spent."""
+    def _replay_step(self, budget_entries: int) -> int:
+        """Online replay quantum, called from ``StorageGroup`` inside
+        ``pump`` with the engine lock HELD (never recurses into pump:
+        when a tree's memtables are all full the step yields and the
+        flush debt it just created drains in the same epoch's tree
+        apportionment).  Charges one entry of budget per staged entry
+        read — including entries dropped by the live-key filter (the
+        WAL read happened either way) — and advances the watermark."""
         eng = self.engine
         spent = 0
+        while spent < int(budget_entries) and self._ci < len(self._chunks):
+            tid, ks, vs, lsn0 = self._chunks[self._ci]
+            if self._cpos >= len(ks):
+                self._ci += 1
+                self._cpos = 0
+                continue
+            tree = eng.trees[tid]
+            if tree.active.full:
+                if len(tree.sealed) >= tree.num_memtables - 1:
+                    break           # all memtables full: flush debt's turn
+                tree.seal_active()
+            room = tree.active.capacity - len(tree.active)
+            take = min(room, int(budget_entries) - spent,
+                       len(ks) - self._cpos)
+            if take <= 0:
+                break
+            sk = ks[self._cpos:self._cpos + take]
+            sv = vs[self._cpos:self._cpos + take]
+            live = tree._live_keys
+            if live:
+                # live writes win: drop history for keys written since
+                # reopen (the memtable is newest-wins by insertion
+                # order, so admitting old entries later would clobber)
+                keep = np.array([int(k) not in live for k in sk], bool)
+                sk, sv = sk[keep], sv[keep]
+            if len(sk):
+                tree.replay_admit(sk, sv)
+            self._cpos += take
+            self.pos += take
+            spent += take
+            self.watermark = lsn0 + self._cpos
+            eng._replay_watermark = self.watermark
+        if self.done:
+            self._finish_online()
+        return spent
+
+    def advance(self, budget_entries: int) -> int:
+        """One recovery epoch: replay/pump up to ``budget_entries`` of
+        I/O.  Returns entries of budget actually spent.  On an ONLINE
+        session this simply drives ``pump`` (replay is one of the
+        group's background-debt streams), so existing epoch-loop
+        drivers recover-while-serving unchanged."""
+        eng = self.engine
         self.epochs += 1
+        if self.online:
+            return eng.pump(int(budget_entries))
+        spent = 0
         with eng.lock():
             while spent < int(budget_entries) and self._ci < len(self._chunks):
                 tid, ks, vs, lsn0 = self._chunks[self._ci]

@@ -1,0 +1,421 @@
+"""Storage fault-tolerance plane: injector schedules, the retrying
+I/O stack, ENOSPC stall-and-drain, WAL segment archival, snapshot
+checksums, and the scrub pass's detect/quarantine/repair lifecycle.
+
+The plane's invariant (``ISSUE`` acceptance): a transient fault NEVER
+causes data loss or a wrong answer — only retries, stalls, or typed
+errors.  Every scenario here ends by reading the store back and
+comparing against what an un-faulted store would say.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import EngineSnapshotStore
+from repro.core import (FaultInjector, IOFaultError, IOStack, LSMEngine,
+                        LSMFleet, RecoverySession, RetryPolicy,
+                        StorageFull, UnrepairableCorruptionError,
+                        WriteAheadLog, flip_bit)
+from repro.core.constraints import GlobalConstraint
+from repro.core.iostack import CorruptionError, data_crc32
+from repro.core.policies import TieringPolicy
+from repro.core.scheduler import GreedyScheduler
+
+KEY_SPACE = 2048
+
+
+def _policy(memtable=128):
+    return TieringPolicy(3, memtable, KEY_SPACE)
+
+
+def _io(faults, retries=6):
+    """An IOStack whose backoff schedule runs without real sleeping."""
+    return IOStack(faults,
+                   RetryPolicy(max_retries=retries, backoff_s=0.001,
+                               backoff_cap_s=0.01, deadline_s=60.0),
+                   sleep=lambda s: None)
+
+
+def _mk(wal=None, faults=None, memtable=128, **kw):
+    return LSMEngine(_policy(memtable), GreedyScheduler(),
+                     GlobalConstraint(400), memtable_entries=memtable,
+                     unique_keys=KEY_SPACE, use_kernels=False,
+                     merge_block=64, scan_use_kernels=False,
+                     wal=wal, faults=faults, **kw)
+
+
+def _fill(eng, n=1000, seed=0):
+    """Admit n random writes through stalls; returns the key->val map."""
+    rng = np.random.default_rng(seed)
+    hist: dict[int, int] = {}
+    k = rng.integers(0, KEY_SPACE, n).astype(np.uint32)
+    v = rng.integers(0, 1 << 30, n).astype(np.int32)
+    done = 0
+    while done < n:
+        took = eng.put_batch(k[done:], v[done:])
+        for kk, vv in zip(k[done:done + took].tolist(),
+                          v[done:done + took].tolist()):
+            hist[kk] = vv
+        done += took
+        if done < n:
+            eng.pump(1 << 12)
+    return hist
+
+
+def _assert_state(eng, hist):
+    ks = np.array(sorted(hist), np.uint32)
+    f, v = eng.get_batch(ks)
+    assert f.all(), "recovered/repaired store lost keys"
+    exp = np.array([hist[int(k)] for k in ks], np.int32)
+    assert np.array_equal(v, exp), "repaired store answers wrong"
+
+
+# ---------------------------------------------------------------------------
+# Injector schedules (satellite: fix one-shot semantics)
+# ---------------------------------------------------------------------------
+class TestInjectorSchedules:
+    def test_legacy_one_shot_disarms_after_firing(self):
+        fi = FaultInjector()
+        fi.arm_io("io-fsync", error="EIO", after=2)
+        assert fi.check_io("io-fsync") is None          # hit 1: countdown
+        assert fi.check_io("io-fsync")["error"] == "EIO"  # hit 2: fires
+        assert fi.check_io("io-fsync") is None          # disarmed
+        assert fi.check_io("io-fsync") is None
+
+    def test_every_kth_is_persistent(self):
+        fi = FaultInjector()
+        fi.arm_io("io-fsync", error="EIO", every=3)
+        fired = [fi.check_io("io-fsync") is not None for _ in range(9)]
+        # fires on hits 1, 4, 7 (after=1, then every 3rd) — persistent:
+        # no re-arming between firings
+        assert fired == [True, False, False] * 3
+
+    def test_probabilistic_is_seeded_deterministic(self):
+        def run():
+            fi = FaultInjector()
+            fi.arm_io("io-write", error="EIO", p=0.5, seed=7)
+            return [fi.check_io("io-write") is not None
+                    for _ in range(32)]
+        a, b = run(), run()
+        assert a == b, "seeded schedule must be reproducible"
+        assert any(a) and not all(a), "p=0.5 should mix over 32 hits"
+
+    def test_count_bounds_a_persistent_schedule(self):
+        fi = FaultInjector()
+        fi.arm_io("io-write", error="EIO", every=1, count=2)
+        fired = [fi.check_io("io-write") is not None for _ in range(5)]
+        assert fired == [True, True, False, False, False]
+
+    def test_crash_points_share_the_schedules(self):
+        fi = FaultInjector()
+        fi.arm("pre-flush", every=2, count=2)
+        hits = []
+        for _ in range(6):
+            try:
+                fi.hit("pre-flush")
+                hits.append(False)
+            except Exception:
+                hits.append(True)
+        assert hits == [True, False, True, False, False, False]
+
+
+# ---------------------------------------------------------------------------
+# IOStack retry / backoff / typed errors
+# ---------------------------------------------------------------------------
+class TestIOStack:
+    def test_transient_eio_retries_then_succeeds(self):
+        fi = FaultInjector()
+        slept: list[float] = []
+        io = IOStack(fi, RetryPolicy(max_retries=6, backoff_s=0.001,
+                                     backoff_cap_s=0.004, deadline_s=60.0),
+                     sleep=slept.append)
+        fi.arm_io("io-read", error="EIO", every=1, count=3)
+        calls = []
+        out = io.call("io-read", lambda: calls.append(1) or 42)
+        assert out == 42 and len(calls) == 1
+        assert io.stats["io_retries"] == 3
+        assert io.stats["io_faults"] == 3
+        # capped exponential: 1ms, 2ms, then clamped at 4ms
+        assert slept == pytest.approx([0.001, 0.002, 0.004])
+        assert io.stats["io_backoff_s"] == pytest.approx(sum(slept))
+
+    def test_persistent_eio_becomes_typed_error(self):
+        fi = FaultInjector()
+        io = _io(fi, retries=4)
+        fi.arm_io("io-read", error="EIO", every=1, count=None)
+        with pytest.raises(IOFaultError) as ei:
+            io.call("io-read", lambda: 1)
+        assert ei.value.point == "io-read"
+        assert ei.value.attempts == 5           # 1 + max_retries
+
+    def test_enospc_is_not_retried(self):
+        fi = FaultInjector()
+        io = _io(fi)
+        fi.arm_io("io-write", error="ENOSPC", every=1)
+        with pytest.raises(StorageFull):
+            io.call("io-write", lambda: 1)
+        assert io.stats["io_retries"] == 0      # backoff can't free space
+        assert io.stats["io_enospc"] == 1
+
+    def test_latency_spike_is_served_and_counted(self):
+        fi = FaultInjector()
+        slept: list[float] = []
+        io = IOStack(fi, RetryPolicy(), sleep=slept.append)
+        fi.arm_io("io-fsync", error=None, latency=0.25, every=1, count=2)
+        assert io.call("io-fsync", lambda: "ok") == "ok"
+        assert io.call("io-fsync", lambda: "ok") == "ok"
+        assert io.stats["io_latency_injected_s"] == pytest.approx(0.5)
+        assert 0.25 in slept
+        assert io.stats["io_faults"] == 0       # a spike is not an error
+
+
+# ---------------------------------------------------------------------------
+# Engine under I/O faults: retries, stalls, drains — never loss
+# ---------------------------------------------------------------------------
+class TestEngineUnderFaults:
+    def test_transient_fsync_faults_are_absorbed(self, tmp_path):
+        fi = FaultInjector()
+        eng = _mk(wal=WriteAheadLog(tmp_path / "wal", io=_io(fi)),
+                  faults=fi)
+        fi.arm_io("io-fsync", error="EIO", every=2, count=4)
+        hist = _fill(eng, 800)
+        eng.pump(1 << 16)
+        h = eng.health()
+        assert h["io_retries"] >= 4
+        assert h["io_backoff_s"] > 0
+        _assert_state(eng, hist)
+
+    def test_enospc_stalls_writes_and_drains(self, tmp_path):
+        fi = FaultInjector()
+        eng = _mk(wal=WriteAheadLog(tmp_path / "wal", io=_io(fi)),
+                  faults=fi)
+        hist = _fill(eng, 300, seed=1)
+        fi.arm_io("io-write", error="ENOSPC", every=1, count=None)
+        k = np.arange(100, dtype=np.uint32)
+        v = np.full(100, 7, np.int32)
+        assert eng.put_batch(k, v) == 0         # disk full: stall, no loss
+        assert eng.health()["enospc_stalls"] >= 1
+        assert eng.stats["stall_events"] >= 1
+        eng.pump(1 << 12)                       # pump survives ENOSPC too
+        fi.disarm("io-write")                   # space returns
+        done = 0
+        while done < len(k):
+            done += eng.put_batch(k[done:], v[done:])
+            if done < len(k):
+                eng.pump(1 << 12)
+        for kk in k.tolist():
+            hist[kk] = 7
+        eng.pump(1 << 16)
+        _assert_state(eng, hist)
+
+    def test_health_rolls_up_fleet_wide(self, tmp_path):
+        fi = FaultInjector()
+        fleet = LSMFleet(2, lambda i: _mk(
+            wal=WriteAheadLog(tmp_path / f"wal-{i}", io=_io(fi)),
+            faults=fi), parallel=False)
+        fi.arm_io("io-fsync", error="EIO", every=1, count=4)
+        rng = np.random.default_rng(2)
+        k = rng.integers(0, KEY_SPACE, 600).astype(np.uint32)
+        v = rng.integers(0, 1 << 30, 600).astype(np.int32)
+        done = 0
+        while done < len(k):
+            done += fleet.put_batch(k[done:], v[done:])
+            if done < len(k):
+                fleet.pump(1 << 12)
+        fleet.pump(1 << 16)
+        h = fleet.health()
+        assert h["io_retries"] >= 4
+        assert h["recovering"] == 0
+        per_shard = [e.health()["io_retries"] for e in fleet.engines]
+        assert h["io_retries"] == sum(per_shard)
+
+
+# ---------------------------------------------------------------------------
+# WAL segment archival (satellite)
+# ---------------------------------------------------------------------------
+class TestWALArchival:
+    def test_truncate_moves_segments_to_archive(self, tmp_path):
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=5,
+                            archive_dir=tmp_path / "cold")
+        for i in range(4):
+            wal.append(np.arange(5, dtype=np.uint32),
+                       np.full(5, i, np.int32))
+        wal.sync()
+        moved = wal.truncate_upto(12)           # seals segments 0 and 1
+        assert moved == 10                      # archived entries returned
+        assert wal.start_lsn == 10
+        assert wal.oldest_lsn == 0              # archive still covers 0
+        assert wal.archived_segments == 2
+        assert wal.archived_entries == 10
+        assert sorted(p.name for p in (tmp_path / "cold").iterdir()) == \
+            ["wal.000000", "wal.000001"]
+        # replay reads THROUGH the archive: the full history survives
+        ks, vs = wal.entries_since(0)
+        assert len(ks) == 20
+        assert np.array_equal(vs, np.repeat(np.arange(4, dtype=np.int32), 5))
+
+    def test_unlink_mode_is_unchanged(self, tmp_path):
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=5)
+        for i in range(3):
+            wal.append(np.arange(5, dtype=np.uint32),
+                       np.full(5, i, np.int32))
+        wal.sync()
+        assert wal.truncate_upto(7) == 0        # nothing archived
+        assert wal.oldest_lsn == wal.start_lsn == 5
+
+    def test_reopen_chains_archive_before_live_log(self, tmp_path):
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=5,
+                            archive_dir=tmp_path / "cold")
+        for i in range(4):
+            wal.append(np.arange(5, dtype=np.uint32),
+                       np.full(5, i, np.int32))
+        wal.sync()
+        wal.truncate_upto(12)
+        wal.close()
+        re = WriteAheadLog(tmp_path / "wal", segment_entries=5,
+                           archive_dir=tmp_path / "cold")
+        assert re.oldest_lsn == 0 and re.end_lsn == 20
+        ks, _ = re.entries_since(3)
+        assert len(ks) == 17
+
+    def test_recovery_replays_through_archive(self, tmp_path):
+        """A snapshot archives sealed segments; a later crash recovers
+        from an OLDER surviving snapshot by replaying archived frames."""
+        fi = FaultInjector()
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=64,
+                            archive_dir=tmp_path / "cold", io=_io(fi))
+        eng = _mk(wal=wal, faults=fi)
+        store = EngineSnapshotStore(tmp_path / "snap")
+        hist = _fill(eng, 400, seed=3)
+        eng.snapshot(store)                     # archives sealed segments
+        hist.update(_fill(eng, 400, seed=4))
+        debt_before = eng._wal_debt
+        eng.snapshot(store)
+        assert eng.wal.archived_segments >= 1
+        # archival traffic is charged to the background budget
+        assert eng._wal_debt >= debt_before
+        hist.update(_fill(eng, 200, seed=5))
+        eng.wal.sync()
+        eng.wal.close()
+        wal2 = WriteAheadLog(tmp_path / "wal", segment_entries=64,
+                             archive_dir=tmp_path / "cold")
+        eng2 = _mk(wal=wal2)
+        RecoverySession(eng2, store).run(1 << 12)
+        eng2.pump(1 << 16)
+        _assert_state(eng2, hist)
+
+    def test_archival_bytes_accounted(self, tmp_path):
+        wal = WriteAheadLog(tmp_path / "wal", segment_entries=5,
+                            archive_dir=tmp_path / "cold")
+        for i in range(4):
+            wal.append(np.arange(5, dtype=np.uint32),
+                       np.full(5, i, np.int32))
+        wal.sync()
+        wal.truncate_upto(10)
+        assert wal.archived_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot checksums + scrub detect/quarantine/repair
+# ---------------------------------------------------------------------------
+class TestCorruption:
+    def _flushed_engine(self, tmp_path, wal=True, n=900, seed=6):
+        fi = FaultInjector()
+        w = WriteAheadLog(tmp_path / "wal", io=_io(fi)) if wal else None
+        eng = _mk(wal=w, faults=fi)
+        hist = _fill(eng, n, seed=seed)
+        eng.pump(1 << 18)
+        assert eng.trees[0]._order, "need at least one on-disk table"
+        return eng, hist
+
+    def test_snapshot_restore_verifies_crc(self, tmp_path):
+        eng, _ = self._flushed_engine(tmp_path)
+        store = EngineSnapshotStore(tmp_path / "snap")
+        eng.snapshot(store)
+        snap = store.load()
+        sections = snap.get("trees") or [snap]
+        sec = sections[0]
+        target = tmp_path / "snap" / sec["tables"][0]["file"]
+        data = bytearray(target.read_bytes())
+        data[len(data) // 2] ^= 0xFF            # bit-rot on disk
+        target.write_bytes(bytes(data))
+        with pytest.raises(CorruptionError):
+            list(store.load_tree_tables(sec))
+
+    def test_manifest_records_the_live_checksum(self, tmp_path):
+        eng, _ = self._flushed_engine(tmp_path)
+        store = EngineSnapshotStore(tmp_path / "snap")
+        eng.snapshot(store)
+        snap = store.load()
+        sections = snap.get("trees") or [snap]
+        by_crc = {int(t["crc"]) for s in sections for t in s["tables"]}
+        live = {int(t.crc32) for t in eng.trees[0]._order}
+        assert live <= by_crc
+
+    def test_scrub_repairs_bit_rot_from_snapshot(self, tmp_path):
+        eng, hist = self._flushed_engine(tmp_path)
+        store = EngineSnapshotStore(tmp_path / "snap",
+                                    io=eng.wal.io)
+        eng.snapshot(store)
+        sc = eng.enable_scrub(store=store)
+        victim = eng.trees[0]._order[0]
+        flip_bit(victim, entry=1, bit=3)
+        for _ in range(600):
+            eng.pump(512)
+            if sc.stats["tables_repaired"]:
+                break
+        assert sc.stats["tables_quarantined"] == 1
+        assert sc.stats["tables_repaired"] == 1
+        assert sc.stats["tables_unrepairable"] == 0
+        assert eng.health()["tables_repaired"] == 1
+        _assert_state(eng, hist)                # bit-identical again
+
+    def test_scrub_rebuilds_whole_tree_from_wal(self, tmp_path):
+        eng, hist = self._flushed_engine(tmp_path)
+        sc = eng.enable_scrub(store=None)       # no snapshot copy exists
+        victim = eng.trees[0]._order[-1]
+        flip_bit(victim, entry=0, bit=17)
+        for _ in range(600):
+            eng.pump(512)
+            if sc.stats["tables_repaired"]:
+                break
+        assert sc.stats["tables_quarantined"] == 1
+        assert sc.stats["tables_repaired"] == 1
+        _assert_state(eng, hist)
+
+    def test_unrepairable_is_a_typed_error_not_a_wrong_answer(
+            self, tmp_path):
+        eng, _ = self._flushed_engine(tmp_path, wal=False)
+        sc = eng.enable_scrub(store=None)       # no WAL, no snapshot
+        flip_bit(eng.trees[0]._order[0], entry=2, bit=9)
+        for _ in range(600):
+            eng.pump(512)
+            if sc.stats["tables_unrepairable"]:
+                break
+        assert sc.stats["tables_unrepairable"] == 1
+        assert eng.trees[0].corrupt
+        with pytest.raises(UnrepairableCorruptionError):
+            eng.get_batch(np.arange(16, dtype=np.uint32))
+        with pytest.raises(UnrepairableCorruptionError):
+            eng.scan_range(0, KEY_SPACE)
+
+    def test_scrub_budget_is_charged(self, tmp_path):
+        eng, _ = self._flushed_engine(tmp_path)
+        eng.pump(1 << 18)                       # clear background debt
+        eng.enable_scrub(store=None, entries_per_epoch=64)
+        spent = eng.pump(256)
+        assert 0 < spent <= 256
+        assert eng.health()["scrub_entries"] == spent
+
+    def test_data_crc32_matches_seal(self):
+        k = np.arange(100, dtype=np.uint32)
+        v = (np.arange(100) * 3).astype(np.int32)
+        from repro.core import SSTable
+        t = SSTable.build(k, v)
+        assert t.verify_checksum()              # unsealed: vacuous
+        t.seal_checksum()
+        assert t.crc32 == data_crc32(k, v)
+        assert t.verify_checksum()
+        flip_bit(t, entry=5, bit=1)
+        assert not t.verify_checksum()

@@ -1,0 +1,313 @@
+"""Online recovery: serve reads and admit writes WHILE replaying the
+WAL, with the engine's published consistency contract (see
+``core/engine.py``, "Online recovery and the fault-tolerance plane"):
+
+* reads observe exactly ``durable prefix up to the replay watermark +
+  live writes`` — nothing more (no un-replayed suffix), nothing less;
+* the watermark only advances, and caps every ``flushed_lsn`` claim
+  (snapshot truncation can never drop un-replayed WAL);
+* live writes go to a FRESH WAL segment (never interleaved with the
+  frames being replayed) and win over the replayed history for their
+  keys;
+* replay is an ordinary pump-driven debt stream arbitrated against
+  flush/merge/WAL debt, so a starved budget slows FULL recovery but
+  not time-to-first-read.
+
+The differential harness reuses the durability plane's idioms:
+``WorkloadLog`` records the admitted history, ``apply_entries`` feeds a
+reference store the exact durable prefix + the recorded live writes,
+``assert_reads_equal`` compares read planes bit-for-bit — at MID-REPLAY
+checkpoints, not just at the end.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import EngineSnapshotStore
+from repro.core import (LSMEngine, LSMFleet, RecoverySession, WorkloadLog,
+                        WriteAheadLog, apply_entries, apply_torn_tail,
+                        assert_reads_equal)
+from repro.core.constraints import GlobalConstraint
+from repro.core.policies import (LevelingPolicy, PartitionedLevelingPolicy,
+                                 TieringPolicy)
+from repro.core.scheduler import GreedyScheduler
+
+KEY_SPACE = 2048
+
+
+def _mk(policy="tiering", wal=None, memtable=128, **kw):
+    pol = {
+        "tiering": lambda: TieringPolicy(3, memtable, KEY_SPACE),
+        "leveling": lambda: LevelingPolicy(3, memtable, KEY_SPACE),
+        "partitioned": lambda: PartitionedLevelingPolicy(
+            4, memtable, KEY_SPACE, file_entries=64, l1_capacity=256),
+    }[policy]()
+    kw.setdefault("scan_use_kernels", False)
+    return LSMEngine(pol, GreedyScheduler(), GlobalConstraint(400),
+                     memtable_entries=memtable, unique_keys=KEY_SPACE,
+                     use_kernels=False, merge_block=64, wal=wal, **kw)
+
+
+def _feed(store, log, keys, vals=None, pump=1 << 12):
+    done = 0
+    while done < len(keys):
+        if vals is None:
+            n = store.delete_batch(keys[done:])
+            log.record_deletes(keys[done:done + n])
+        else:
+            n = store.put_batch(keys[done:], vals[done:])
+            log.record(keys[done:done + n], vals[done:done + n])
+        done += n
+        if done < len(keys):
+            store.pump(pump)
+
+
+def _crashed_workload(tmp_path, policy, torn_frac, seed=0, tag=""):
+    """Run a recorded workload (snapshot mid-way), then crash with a
+    torn WAL tail.  Returns the admitted-history log."""
+    rng = np.random.default_rng(seed)
+    eng = _mk(policy, wal=WriteAheadLog(tmp_path / f"wal{tag}"),
+              group_commit_entries=96)
+    store = EngineSnapshotStore(tmp_path / f"snap{tag}")
+    log = WorkloadLog()
+    for r in range(10):
+        _feed(eng, log, rng.integers(0, KEY_SPACE, 200, dtype=np.uint32),
+              rng.integers(0, 1 << 30, 200, dtype=np.int32))
+        _feed(eng, log, rng.integers(0, KEY_SPACE, 40, dtype=np.uint32))
+        eng.pump(256)
+        if r == 4:
+            eng.snapshot(store)
+    apply_torn_tail(eng.wal, torn_frac)
+    return log, store
+
+
+def _reopen_online(tmp_path, policy, store, tag=""):
+    wal = WriteAheadLog(tmp_path / f"wal{tag}")
+    eng = _mk(policy, wal=wal, group_commit_entries=96)
+    return eng, RecoverySession(eng, store, online=True)
+
+
+def _reference(policy, log, upto, live=None):
+    ref = _mk(policy)
+    apply_entries(ref, *log.prefix(upto))
+    if live is not None and live.n:
+        apply_entries(ref, *live.prefix(live.n))
+    ref.drain()
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# Contract unit tests
+# ---------------------------------------------------------------------------
+class TestOnlineContract:
+    def test_serves_first_read_before_any_replay(self, tmp_path):
+        """Time-to-first-read is the session OPEN, not full recovery:
+        with zero replay budget spent, reads equal the snapshot view
+        (the durable prefix up to the opening watermark)."""
+        log, store = _crashed_workload(tmp_path, "tiering", 0.5)
+        eng, sess = _reopen_online(tmp_path, "tiering", store)
+        assert not sess.done and sess.remaining > 0
+        ref = _reference("tiering", log, sess.watermark)
+        assert_reads_equal(eng, ref, KEY_SPACE,
+                           rng=np.random.default_rng(0))
+
+    def test_watermark_monotone_and_caps_flushed_lsn(self, tmp_path):
+        _, store = _crashed_workload(tmp_path, "tiering", 0.5)
+        eng, sess = _reopen_online(tmp_path, "tiering", store)
+        assert eng.health()["recovering"] == 1
+        assert eng.pending_background_entries() >= sess.remaining
+        last = sess.watermark
+        while not sess.done:
+            eng.pump(128)
+            assert sess.watermark >= last, "watermark went backwards"
+            last = sess.watermark
+            if not sess.done:
+                assert eng.flushed_lsn <= sess.watermark, \
+                    "flushed_lsn claimed un-replayed WAL"
+        assert sess.watermark == sess.replay_end
+        assert eng.health()["recovering"] == 0
+
+    def test_live_writes_go_to_a_fresh_segment(self, tmp_path):
+        """The fresh-segment rule: live frames never interleave with
+        the frames being replayed — the group LSN jumps to the live
+        frontier before the first live write."""
+        log, store = _crashed_workload(tmp_path, "tiering", 0.5)
+        eng, sess = _reopen_online(tmp_path, "tiering", store)
+        frontier = max(sess.replay_end, eng.wal.end_lsn)
+        assert eng._lsn == frontier
+        base = eng.wal.end_lsn
+        eng.put_batch(np.array([1, 2], np.uint32),
+                      np.array([10, 20], np.int32))
+        assert eng.wal.end_lsn == base + 2      # appended past the tail
+        assert sess.watermark <= frontier
+
+    def test_live_writes_win_over_replayed_history(self, tmp_path):
+        log, store = _crashed_workload(tmp_path, "tiering", 1.0)
+        eng, sess = _reopen_online(tmp_path, "tiering", store)
+        # overwrite keys that exist in the un-replayed suffix
+        ks, vs = log.prefix(log.n)
+        suffix_keys = np.unique(ks[sess.watermark:])[:8].astype(np.uint32)
+        assert len(suffix_keys), "workload must cover the suffix"
+        live_vals = np.arange(len(suffix_keys), dtype=np.int32) + 7_000_000
+        assert eng.put_batch(suffix_keys, live_vals) == len(suffix_keys)
+        while not sess.done:
+            eng.pump(256)
+        eng.pump(1 << 16)
+        f, v = eng.get_batch(suffix_keys)
+        assert f.all()
+        assert np.array_equal(v, live_vals), \
+            "replayed history clobbered a live write"
+
+    def test_starved_budget_still_serves_reads(self, tmp_path):
+        """Replay debt is arbitrated, not prioritized absolutely: a
+        tiny budget makes FULL recovery slow (many epochs) while reads
+        keep working from epoch zero."""
+        log, store = _crashed_workload(tmp_path, "tiering", 0.5)
+        eng, sess = _reopen_online(tmp_path, "tiering", store)
+        epochs = 0
+        probe = np.arange(0, KEY_SPACE, 64, dtype=np.uint32)
+        while not sess.done and epochs < 5000:
+            eng.pump(48)                        # starved epoch
+            eng.get_batch(probe)                # reads never blocked
+            epochs += 1
+        assert sess.done
+        assert epochs > 5, "starved recovery should take many epochs"
+
+
+# ---------------------------------------------------------------------------
+# The serve-during-recovery differential
+# ---------------------------------------------------------------------------
+def _online_differential(tmp_path, policy, torn_frac, seed=0, tag=""):
+    """Crash, reopen ONLINE, interleave live writes with budgeted
+    replay, and at mid-replay checkpoints compare every read against a
+    reference fed ``log.prefix(watermark) + live writes``."""
+    rng = np.random.default_rng(seed)
+    log, store = _crashed_workload(tmp_path, policy, torn_frac,
+                                   seed=seed, tag=tag)
+    eng, sess = _reopen_online(tmp_path, policy, store, tag=tag)
+    live = WorkloadLog()
+    checks = 0
+    epochs = 0
+    while not sess.done and epochs < 5000:
+        eng.pump(192)
+        epochs += 1
+        k = rng.integers(0, KEY_SPACE, 12, dtype=np.uint32)
+        v = rng.integers(0, 1 << 30, 12, dtype=np.int32)
+        n = eng.put_batch(k, v)                 # stalls are fine: record
+        live.record(k[:n], v[:n])               # only what was admitted
+        if not sess.done and epochs % 3 == 0 and checks < 3:
+            ref = _reference(policy, log, sess.watermark, live)
+            assert_reads_equal(eng, ref, KEY_SPACE,
+                               rng=np.random.default_rng(seed))
+            checks += 1
+    assert sess.done, "replay never finished"
+    assert checks >= 1, "no mid-replay checkpoint was exercised"
+    eng.pump(1 << 16)
+    ref = _reference(policy, log, sess.replay_end, live)
+    assert_reads_equal(eng, ref, KEY_SPACE, rng=np.random.default_rng(seed))
+
+
+def test_online_differential_smoke(tmp_path):
+    """Fast-lane single-combo differential (full grid in the slow
+    lane)."""
+    _online_differential(tmp_path, "tiering", 0.5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
+def test_online_differential_grid(tmp_path, policy):
+    for frac in (0.0, 0.5, 1.0):
+        d = tmp_path / f"f{int(frac * 10)}"
+        d.mkdir()
+        _online_differential(d, policy, frac, seed=int(frac * 10))
+
+
+# ---------------------------------------------------------------------------
+# Fleet: serve during recovery under the global arbiter
+# ---------------------------------------------------------------------------
+def _fleet_online_differential(tmp_path, policy, torn_frac, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def factory(tag):
+        def make(i):
+            return _mk(policy,
+                       wal=WriteAheadLog(tmp_path / f"wal{tag}-{i}"),
+                       group_commit_entries=96)
+        return make
+
+    fleet = LSMFleet(2, factory(""), parallel=False)
+    stores = [EngineSnapshotStore(tmp_path / f"snap-{i}")
+              for i in range(2)]
+    logs = [WorkloadLog() for _ in fleet.engines]
+
+    def scatter_feed(keys, vals=None):
+        sid = fleet.shard_ids(keys)
+        for s, eng in enumerate(fleet.engines):
+            m = sid == s
+            if m.any():
+                _feed(eng, logs[s], keys[m],
+                      None if vals is None else vals[m])
+
+    for r in range(10):
+        scatter_feed(rng.integers(0, KEY_SPACE, 240, dtype=np.uint32),
+                     rng.integers(0, 1 << 30, 240, dtype=np.int32))
+        scatter_feed(rng.integers(0, KEY_SPACE, 48, dtype=np.uint32))
+        fleet.pump(512)
+        if r == 4:
+            fleet.snapshot(stores)
+    for eng in fleet.engines:
+        apply_torn_tail(eng.wal, torn_frac)
+
+    fleet2 = LSMFleet(2, factory(""), parallel=False)
+    sessions = fleet2.recover(stores, serve_during_recovery=True)
+    assert len(sessions) == 2
+    assert fleet2.health()["recovering"] >= 1
+    lives = [WorkloadLog() for _ in fleet2.engines]
+
+    def reference():
+        ref = LSMFleet(2, lambda i: _mk(policy), parallel=False)
+        for s, eng in enumerate(ref.engines):
+            apply_entries(eng, *logs[s].prefix(sessions[s].watermark))
+            if lives[s].n:
+                apply_entries(eng, *lives[s].prefix(lives[s].n))
+            eng.drain()
+        return ref
+
+    checks = 0
+    epochs = 0
+    while not all(s.done for s in sessions) and epochs < 5000:
+        fleet2.pump(384)                        # global budget, arbitrated
+        epochs += 1
+        k = rng.integers(0, KEY_SPACE, 16, dtype=np.uint32)
+        v = rng.integers(0, 1 << 30, 16, dtype=np.int32)
+        sid = fleet2.shard_ids(k)
+        for s, eng in enumerate(fleet2.engines):
+            m = sid == s
+            if m.any():
+                n = eng.put_batch(k[m], v[m])
+                lives[s].record(k[m][:n], v[m][:n])
+        if epochs % 4 == 0 and checks < 2 and \
+                not all(s.done for s in sessions):
+            assert_reads_equal(fleet2, reference(), KEY_SPACE,
+                               rng=np.random.default_rng(seed))
+            checks += 1
+    assert all(s.done for s in sessions), "fleet replay never finished"
+    assert fleet2.health()["recovering"] == 0
+    fleet2.pump(1 << 16)
+    assert_reads_equal(fleet2, reference(), KEY_SPACE,
+                       rng=np.random.default_rng(seed))
+    assert checks >= 1
+
+
+def test_fleet_online_differential_smoke(tmp_path):
+    _fleet_online_differential(tmp_path, "tiering", 0.5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["tiering", "leveling", "partitioned"])
+def test_fleet_online_differential_grid(tmp_path, policy):
+    for frac in (0.0, 1.0):
+        d = tmp_path / f"f{int(frac * 10)}"
+        d.mkdir()
+        _fleet_online_differential(d, policy, frac, seed=int(frac * 10))
